@@ -1,0 +1,27 @@
+"""Paper Tab. I / §V: DI graph build time vs edge count (the ingest path).
+
+Reproduces the build ladder (10× steps) at CPU-feasible scales; the paper's
+observation to validate: build cost is dominated by the remap + index-gen
+steps (sort/searchsorted), not the final store."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import build_di
+from repro.graph import random_uniform_graph
+
+
+def run(scales=(10_000, 100_000, 1_000_000)) -> None:
+    for m in scales:
+        src, dst = random_uniform_graph(m, seed=0)
+        t0 = time.perf_counter()
+        g = build_di(src, dst)
+        dt = time.perf_counter() - t0
+        emit(f"di_build_m{m}", dt, f"n={g.n};edges_per_s={m / dt:.0f}")
+
+
+if __name__ == "__main__":
+    run()

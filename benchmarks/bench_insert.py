@@ -1,0 +1,39 @@
+"""Paper Fig. 6 / §VII-B: attribute (relationship) insertion throughput per
+DIP variant.  Validates: DIP-ARR insert is O(NK/P) flag-sets and fastest;
+DIP-LISTD build pays the linked-chain constant (the paper's c overhead);
+the internal store step is small vs remap/index-gen (graph5 note)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import build_dip_arr, build_dip_list, build_dip_listd
+from repro.graph import attach_random_attributes
+
+
+def run(scales=(100_000, 1_000_000), n_attrs: int = 50) -> None:
+    # warmup: populate jit caches for the scatter/sort ops so the timed builds
+    # measure steady-state ingestion, not first-call compilation
+    we, wa = attach_random_attributes(1024, n_attrs=n_attrs, seed=9)
+    build_dip_arr(we, wa, k=n_attrs, n=1024)
+    build_dip_list(we, wa, k=n_attrs, n=1024)
+    build_dip_listd(we, wa, k=n_attrs, n=1024)
+    for m in scales:
+        ents, attrs = attach_random_attributes(m, n_attrs=n_attrs, seed=0)
+        for name, builder in (
+            ("arr", lambda: build_dip_arr(ents, attrs, k=n_attrs, n=m)),
+            ("list", lambda: build_dip_list(ents, attrs, k=n_attrs, n=m)),
+            ("listd", lambda: build_dip_listd(ents, attrs, k=n_attrs, n=m)),
+        ):
+            t0 = time.perf_counter()
+            store = builder()
+            import jax
+            jax.block_until_ready(jax.tree.leaves(store))
+            dt = time.perf_counter() - t0
+            emit(f"dip_insert_{name}_m{m}", dt, f"pairs_per_s={m / dt:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks (interpret-mode wall times are NOT TPU times — these
+rows exist to compare kernel vs oracle algorithmic agreement cost on CPU and to
+exercise the kernel paths; TPU perf is the roofline's business)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.bitmap_query import bitmap_query
+    from repro.kernels.bitmap_query.ref import bitmap_query_ref
+
+    bm = jnp.asarray((rng.random((50, 100_000)) < 0.1).astype(np.int8))
+    mask = jnp.asarray(rng.random(50) < 0.2)
+    emit("kern_bitmap_query_oracle", time_call(bitmap_query_ref, bm, mask), "k=50;n=1e5")
+    emit("kern_bitmap_query_pallas", time_call(bitmap_query, bm, mask), "interpret")
+
+    from repro.kernels.seg_mm import seg_mm
+    from repro.kernels.seg_mm.ref import seg_mm_ref
+
+    n, e, d = 5000, 20000, 64
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(np.sort(rng.integers(0, n, e)), jnp.int32)
+    emit("kern_seg_mm_oracle", time_call(seg_mm_ref, x, src, dst, n), f"n={n};e={e};d={d}")
+    emit("kern_seg_mm_pallas", time_call(lambda *a: seg_mm(*a), x, src, dst, n), "interpret")
+
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)), jnp.float32)
+    emit("kern_flash_attn_oracle", time_call(flash_attention_ref, q, k, v), "s=512;gqa4")
+    emit("kern_flash_attn_pallas", time_call(flash_attention, q, k, v), "interpret")
+
+    from repro.kernels.embedding_bag import embedding_bag_fields
+    from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+    t = jnp.asarray(rng.standard_normal((26, 10_000, 64)), jnp.float32)
+    ix = jnp.asarray(rng.integers(0, 10_000, (256, 26, 1)), jnp.int32)
+    emit("kern_embedbag_oracle", time_call(embedding_bag_ref, t, ix), "b=256;f=26")
+    emit("kern_embedbag_pallas", time_call(embedding_bag_fields, t, ix), "interpret")
+
+    vmem_report()
+
+
+def vmem_report() -> None:
+    """Static per-grid-step VMEM budget per kernel block shape (the structural
+    tuning table — interpret-mode wall times say nothing about TPU; VMEM
+    residency and MXU alignment are what the block shapes control).
+    ~16 MiB/core VMEM envelope; MXU wants multiples of 128 on the lane dim."""
+    rows = []
+    # flash_attention: q(bq,D) + k/v(bkv,D) + acc(bq,D) f32 + m/l + out
+    for bq, bkv, d in [(128, 128, 128), (128, 128, 256), (256, 128, 128),
+                       (128, 256, 128), (512, 128, 128)]:
+        b = (bq * d * 2 + 2 * bkv * d * 2 + bq * d * 4 + 2 * bq * 4 + bq * d * 2
+             + bq * bkv * 4)
+        rows.append((f"flash_bq{bq}_bkv{bkv}_d{d}", b))
+    # seg_mm: onehot(nt,ec) f32 + msgs(ec,d) + out(nt,d) + dst(1,ec)
+    for nt, ec, d in [(256, 256, 128), (256, 256, 512), (512, 256, 128),
+                      (128, 512, 256)]:
+        b = nt * ec * 4 + ec * d * 4 + nt * d * 4 + ec * 4
+        rows.append((f"segmm_nt{nt}_ec{ec}_d{d}", b))
+    # bitmap_query: (k,tile_n) int8 + mask(1,k) f32 + out
+    for k, tn in [(50, 2048), (128, 2048), (512, 4096)]:
+        b = k * tn + k * 4 + tn
+        rows.append((f"bitmapq_k{k}_tn{tn}", b))
+    for name, b in rows:
+        fit = "OK" if b < 12 * 2**20 else "OVER"  # leave ~4MiB headroom
+        emit(f"vmem_{name}", 0.0, f"vmem_bytes={b};{fit}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Paper Fig. 5 + §VII-B query claims: attribute→entities query throughput per
+DIP variant and per implementation.
+
+Validation targets:
+  * DIP-LISTD's linked pointer chase is ~10× slower than DIP-LIST/DIP-ARR
+    (the paper's headline finding — ours reproduces it on one core because the
+    chase is inherently serial while the scans vectorize).
+  * DIP-ARR query scales O(N/P) and parallelizes trivially.
+  * throughput in entities/s (the paper reports 8.5M edges/s on 8×128 cores
+    for graph5; we report per-core numbers + the sharded dry-run covers scale).
+Shard sweep: --shards splits the entity dim and measures per-shard time
+(strong-scaling denominator; see benchmarks/common.py note).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import build_dip_arr, build_dip_list, build_dip_listd
+from repro.core import dip_arr, dip_list, dip_listd
+from repro.graph import attach_random_attributes
+
+
+def run(m: int = 1_000_000, n_attrs: int = 50, n_query: int = 5,
+        shards=(1, 2, 4, 8), include_linked: bool = True) -> None:
+    ents, attrs = attach_random_attributes(m, n_attrs=n_attrs, seed=0)
+    qmask = jnp.zeros(n_attrs, bool).at[jnp.arange(n_query)].set(True)
+
+    arr = build_dip_arr(ents, attrs, k=n_attrs, n=m)
+    lst = build_dip_list(ents, attrs, k=n_attrs, n=m)
+    lkd = build_dip_listd(ents, attrs, k=n_attrs, n=m)
+
+    t = time_call(dip_arr.query_any_scan, arr, qmask)
+    emit(f"query_arr_scan_m{m}", t, f"ents_per_s={m / t:.0f}")
+    t = time_call(dip_arr.query_any_matvec, arr, qmask)
+    emit(f"query_arr_matvec_m{m}", t, f"ents_per_s={m / t:.0f}")
+    t = time_call(dip_list.query_any, lst, qmask)
+    emit(f"query_list_m{m}", t, f"ents_per_s={m / t:.0f}")
+    t = time_call(dip_listd.query_any_inverted, lkd, qmask)
+    emit(f"query_listd_inverted_m{m}", t, f"ents_per_s={m / t:.0f}")
+
+    ids = jnp.arange(n_query, dtype=jnp.int32)
+    a_off = np.asarray(lkd.a_off)
+    budget = int((a_off[1:] - a_off[:-1])[:n_query].sum()) + 8
+    budget = -(-budget // 128) * 128
+    t = time_call(lambda d, i: dip_listd.query_any_budget(d, i, budget=budget), lkd, ids)
+    emit(f"query_listd_budget_m{m}", t, f"ents_per_s={m / t:.0f};budget={budget}")
+
+    if include_linked:
+        t = time_call(dip_listd.query_any_linked, lkd, qmask, iters=2)
+        emit(f"query_listd_linked_m{m}", t, f"ents_per_s={m / t:.0f};SERIAL_CHASE")
+
+    # shard sweep (per-shard strong-scaling slice, ARR matvec)
+    for s in shards:
+        msub = m // s
+        sub = build_dip_arr(ents[ents < msub], attrs[ents < msub], k=n_attrs, n=msub)
+        t = time_call(dip_arr.query_any_matvec, sub, qmask)
+        emit(f"query_arr_shard{s}_m{m}", t, f"per_shard_ents_per_s={msub / t:.0f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=1_000_000)
+    ap.add_argument("--no-linked", action="store_true")
+    a = ap.parse_args()
+    run(m=a.m, include_linked=not a.no_linked)

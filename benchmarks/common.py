@@ -1,0 +1,37 @@
+"""Benchmark utilities: timing, CSV emission, shard-sweep helper.
+
+Locale-scaling methodology: the paper varies 1→8 Chapel locales; on one CPU we
+sweep the SHARD COUNT of the entity dimension (host-sharded execution over a
+1×N device mesh is impossible on 1 device, so we emulate scaling by measuring
+per-shard work on 1/N slices — the strong-scaling denominator; the multi-chip
+path is exercised by the dry-run/roofline instead).  Every row records the
+method so readers can't confuse the two.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+
+__all__ = ["time_call", "emit"]
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (s) of jitted fn; blocks on results."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

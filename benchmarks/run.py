@@ -1,0 +1,38 @@
+"""Benchmark runner — one section per paper table/figure + kernel/roofline rows.
+
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
+  tab1_build   — DI construction ladder (paper Tab. I / §V)
+  fig6_insert  — attribute insertion per DIP variant (paper Fig. 6)
+  fig5_query   — query throughput per DIP variant + impl (paper Fig. 5, §VII-B;
+                 includes the DIP-LISTD linked-chase 10× validation)
+  kernels      — Pallas kernels vs oracles (interpret mode)
+Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    small = "--small" in sys.argv
+    print("name,us_per_call,derived")
+
+    print("# tab1_build (DI construction, paper Tab. I ladder)")
+    from benchmarks import bench_build
+    bench_build.run(scales=(10_000, 100_000) if small else (10_000, 100_000, 1_000_000))
+
+    print("# fig6_insert (attribute insertion per DIP variant)")
+    from benchmarks import bench_insert
+    bench_insert.run(scales=(100_000,) if small else (100_000, 1_000_000))
+
+    print("# fig5_query (query throughput per DIP variant / impl)")
+    from benchmarks import bench_query
+    bench_query.run(m=100_000 if small else 1_000_000)
+
+    print("# kernels (Pallas interpret vs jnp oracle)")
+    from benchmarks import bench_kernels
+    bench_kernels.run()
+
+
+if __name__ == "__main__":
+    main()

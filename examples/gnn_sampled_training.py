@@ -1,0 +1,70 @@
+"""Sampled GNN training over the DI structure: GraphSAGE-style minibatches.
+
+    PYTHONPATH=src python examples/gnn_sampled_training.py
+
+Builds a 100k-edge graph, then trains the gcn-cora architecture with fanout
+(10, 5) neighbor sampling — the ``minibatch_lg`` execution mode at laptop
+scale.  The sampler IS the DI structure at work: every frontier expansion is
+a SEG-offset slice.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_di
+from repro.graph import random_uniform_graph, sample_layers
+from repro.models import gcn
+from repro.models.gnn_common import GraphBatch
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+rng = np.random.default_rng(0)
+src, dst = random_uniform_graph(100_000, seed=0)
+g = build_di(src, dst)
+print(f"graph: n={g.n:,} m={g.m:,}")
+
+D_FEAT, N_CLASSES = 64, 7
+feats = rng.standard_normal((g.n, D_FEAT)).astype(np.float32)
+labels = rng.integers(0, N_CLASSES, g.n).astype(np.int32)
+
+cfg = gcn.GCNConfig(d_in=D_FEAT, d_hidden=16, n_classes=N_CLASSES)
+params = gcn.init_params(jax.random.PRNGKey(0), cfg)
+opt_cfg = AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=100)
+opt = init_state(params)
+
+
+def subgraph_batch(blocks, seed_ids):
+    """Union-of-blocks compacted subgraph (the minibatch_lg execution form)."""
+    outer = blocks[0]
+    nodes = np.asarray(outer.src_nodes)
+    idx = {int(v): i for i, v in enumerate(nodes)}
+    es, ed, em = [], [], []
+    for b in blocks:
+        sn, dn = np.asarray(b.src_nodes), np.asarray(b.dst_nodes)
+        s, d, m = np.asarray(b.edge_src), np.asarray(b.edge_dst), np.asarray(b.edge_mask)
+        for i in np.flatnonzero(m):
+            es.append(idx[int(sn[s[i]])]); ed.append(idx[int(dn[d[i]])]); em.append(True)
+    nmask = np.zeros(len(nodes), bool)
+    for v in seed_ids:
+        nmask[idx[int(v)]] = True
+    order = np.argsort(es, kind="stable")
+    return GraphBatch(
+        x=jnp.asarray(feats[nodes]), pos=None, species=None,
+        edge_src=jnp.asarray(np.asarray(es, np.int32)[order]),
+        edge_dst=jnp.asarray(np.asarray(ed, np.int32)[order]),
+        edge_attr=None, edge_mask=jnp.asarray(np.asarray(em)[order]),
+        node_mask=jnp.asarray(nmask), labels=jnp.asarray(labels[nodes]),
+        graph_ids=jnp.zeros(len(nodes), jnp.int32),
+        n_nodes=len(nodes), n_edges=len(es), n_graphs=1)
+
+
+grad_fn = jax.value_and_grad(gcn.loss_fn)
+for step in range(30):
+    seeds = rng.choice(g.n, 256, replace=False).astype(np.int32)
+    blocks = sample_layers(g, seeds, [10, 5], seed=step)
+    batch = subgraph_batch(blocks, seeds)
+    loss, grads = grad_fn(params, batch, cfg)
+    params, opt, metrics = apply_updates(params, grads, opt, opt_cfg)
+    if step % 5 == 0:
+        print(f"step {step:3d}  sampled n={batch.n_nodes:5d} e={batch.n_edges:6d}  "
+              f"loss {float(loss):.4f}")
+print("OK")

@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+checkpoint/restart mid-run (the (b) deliverable's training flavor).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+Uses a 100M-parameter gemma2-style config (post-norms, softcaps, GQA, local/
+global alternation — the full feature set) on synthetic step-addressed data;
+injects a failure at mid-run to demonstrate restart, then verifies the loss
+kept improving.
+"""
+import argparse
+
+import jax.numpy as jnp
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--steps", type=int, default=200)  # "few hundred" on TPU; use ~8-20 on CPU
+parser.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+args = parser.parse_args()
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.data import lm_batch
+from repro.ft import FailureInjector, TrainController
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+# ~100M params: 12L, d=768, 12H/4KV, ff=2048, vocab=32768
+cfg = T.TransformerConfig(
+    name="lm100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+    d_ff=2048, vocab=32768, pattern=("local", "global"), window=256,
+    attn_softcap=50.0, final_softcap=30.0, post_norms=True, scale_embed=True,
+    tie_embeddings=True, dtype=jnp.float32, loss_chunk=128, attn_impl="direct",
+)
+print(f"model: {cfg.n_params/1e6:.1f}M params")
+
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+state = (params, init_state(params))
+
+BATCH, SEQ = 2, 128  # CPU-demo scale; raise on real hardware
+
+
+@jax.jit
+def jit_step(state, batch):
+    params, opt = state
+    loss, grads = jax.value_and_grad(T.loss_fn)(params, batch["tokens"], batch["labels"], cfg)
+    params, opt, metrics = apply_updates(params, grads, opt, opt_cfg)
+    return (params, opt), {"loss": loss, **metrics}
+
+
+def step_fn(state, step):
+    return jit_step(state, lm_batch(step, batch=BATCH, seq=SEQ, vocab=cfg.vocab))
+
+
+losses = []
+
+
+def log(step, metrics):
+    losses.append(float(metrics["loss"]))
+    if step % 20 == 0:
+        print(f"step {step:4d}  loss {losses[-1]:.4f}  lr {float(metrics['lr']):.2e}")
+
+
+ctrl = TrainController(CheckpointManager(args.ckpt_dir, keep=2), step_fn, ckpt_every=50)
+ctrl.run(state, args.steps, injector=FailureInjector([args.steps // 2 + 1]), log=log)
+print(f"\ninitial loss {losses[0]:.4f} → final {losses[-1]:.4f} "
+      f"(survived 1 injected failure, {len(losses)} total steps incl. replay)")
+assert losses[-1] < losses[0], "loss did not improve"
+print("OK")

@@ -1,0 +1,15 @@
+"""repro — Property Graphs in Arachne, reproduced as a JAX/TPU framework.
+
+Public API entry points:
+
+    from repro.core import PropGraph, build_di          # the paper
+    from repro.graph import pagerank, sample_layers     # analytics substrate
+    from repro.kernels import bitmap_query, seg_mm      # Pallas TPU kernels
+    from repro.launch.train import run_training         # restartable training
+    from repro.launch.mesh import make_production_mesh  # 16×16 / 2×16×16
+
+See README.md for the map, DESIGN.md for the paper→TPU adaptation, and
+EXPERIMENTS.md for the dry-run/roofline/perf evidence.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""repro.configs — one module per assigned architecture (+ shared machinery).
+
+Selectable via ``--arch <id>`` in the launchers; see registry.ARCHS.
+"""

@@ -1,0 +1,168 @@
+"""Shared config machinery: shape tables and input_specs builders per family.
+
+``input_specs(arch, shape)`` returns ``(step_kind, specs)`` where specs are
+ShapeDtypeStruct pytrees — weak-type-correct, shardable, never allocated —
+exactly what ``jax.jit(...).lower(**specs)`` consumes in the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn_common import GraphBatch
+from repro.models.graphcast import GCBatch
+
+__all__ = [
+    "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES", "sds",
+    "lm_input_specs", "gnn_graph_specs", "gc_specs", "recsys_input_specs",
+    "TRIPLET_CAP_FACTOR", "MINIBATCH_SUBGRAPH",
+]
+
+sds = jax.ShapeDtypeStruct
+
+# ---------------------------------------------------------------- shape tables
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, kind="train"),
+    "minibatch_lg": dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602, kind="train"),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100, kind="train"),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, kind="train"),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+TRIPLET_CAP_FACTOR = 8
+
+# Entity/edge arrays are padded to multiples of 512 (= lcm of every mesh-axis
+# group they shard over: dp=16, dp·pod=32, dp·pod·model=512) — pjit requires
+# evenly-divisible input shardings; masks carry validity (the production
+# padding discipline, same as the sampler's).
+PAD_QUANTUM = 512
+
+
+def pad512(n: int) -> int:
+    return -(-n // PAD_QUANTUM) * PAD_QUANTUM
+
+
+# ------------------------------------------------------------------ LM specs
+def lm_input_specs(cfg, shape_name: str):
+    """(kind, specs).  Returns None for long_500k on pure full-attention archs
+    (sub-quadratic gate — DESIGN.md §4)."""
+    from repro.models.transformer import init_cache
+
+    sh = LM_SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    if sh["kind"] == "train":
+        return "train", {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+    if sh["kind"] == "prefill":
+        return "prefill", {"tokens": sds((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep KV cache
+    if shape_name == "long_500k" and cfg.window is None:
+        return None, None  # skipped: pure full-attention arch
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return "decode", {"tokens": sds((B, 1), jnp.int32), "cache": cache}
+
+
+# ----------------------------------------------------------------- GNN specs
+def minibatch_subgraph_sizes(batch_nodes: int, fanout) -> tuple:
+    """Static worst-case compacted-subgraph size for sampled training: union of
+    all sampler blocks (repro.graph.sampler.block_shapes collapsed)."""
+    n = batch_nodes
+    total_nodes = n
+    total_edges = 0
+    frontier = n
+    for f in fanout:
+        total_edges += frontier * f
+        frontier = frontier * (f + 1)
+        total_nodes = frontier
+    return total_nodes, total_edges
+
+
+MINIBATCH_SUBGRAPH = minibatch_subgraph_sizes  # alias
+
+
+def _gnn_sizes(shape_name: str):
+    sh = GNN_SHAPES[shape_name]
+    if shape_name == "minibatch_lg":
+        n, e = minibatch_subgraph_sizes(sh["batch_nodes"], sh["fanout"])
+        return pad512(n), pad512(e), sh.get("d_feat")
+    if shape_name == "molecule":
+        b = sh["batch"]
+        return pad512(sh["n_nodes"] * b), pad512(sh["n_edges"] * b), sh.get("d_feat")
+    return pad512(sh["n_nodes"]), pad512(sh["n_edges"]), sh.get("d_feat")
+
+
+def gnn_graph_specs(shape_name: str, *, model: str, n_classes: int = 47,
+                    n_species: int = 16) -> GraphBatch:
+    """GraphBatch of ShapeDtypeStructs adapted per model family:
+    gcn — dense features + node labels; mace/dimenet — species+pos (+triplets),
+    graph energies.  (graphcast uses gc_specs.)"""
+    n, e, d_feat = _gnn_sizes(shape_name)
+    n_graphs = GNN_SHAPES[shape_name].get("batch", 1) if shape_name == "molecule" else 1
+    f32, i32 = jnp.float32, jnp.int32
+    if model == "gcn":
+        x, pos, species, tri = sds((n, d_feat or 128), f32), None, None, None
+        labels = sds((n,), i32)
+    else:
+        x, pos, species = None, sds((n, 3), f32), sds((n,), i32)
+        tri = sds((TRIPLET_CAP_FACTOR * e, 3), i32) if model == "dimenet" else None
+        labels = sds((n_graphs,), f32)
+    return GraphBatch(
+        x=x, pos=pos, species=species,
+        edge_src=sds((e,), i32), edge_dst=sds((e,), i32), edge_attr=tri,
+        edge_mask=sds((e,), jnp.bool_), node_mask=sds((n,), jnp.bool_),
+        labels=labels, graph_ids=sds((n,), i32),
+        n_nodes=n, n_edges=e, n_graphs=n_graphs,
+    )
+
+
+def gc_specs(shape_name: str, *, n_vars: int, d_edge: int = 4) -> GCBatch:
+    from repro.data.graph import graphcast_sizes
+
+    n, e, _ = _gnn_sizes(shape_name)
+    ng, nm, ne_g2m, ne_mesh, ne_m2g = graphcast_sizes(n, e)
+    f32, i32 = jnp.float32, jnp.int32
+    return GCBatch(
+        grid_x=sds((ng, n_vars), f32),
+        g2m_src=sds((ne_g2m,), i32), g2m_dst=sds((ne_g2m,), i32),
+        g2m_attr=sds((ne_g2m, d_edge), f32),
+        mesh_src=sds((ne_mesh,), i32), mesh_dst=sds((ne_mesh,), i32),
+        mesh_attr=sds((ne_mesh, d_edge), f32),
+        m2g_src=sds((ne_m2g,), i32), m2g_dst=sds((ne_m2g,), i32),
+        m2g_attr=sds((ne_m2g, d_edge), f32),
+        targets=sds((ng, n_vars), f32),
+        n_grid=ng, n_mesh=nm, n_g2m=ne_g2m, n_mesh_e=ne_mesh, n_m2g=ne_m2g,
+    )
+
+
+# -------------------------------------------------------------- recsys specs
+def recsys_input_specs(cfg, shape_name: str):
+    sh = RECSYS_SHAPES[shape_name]
+    B = sh["batch"]
+    f32, i32 = jnp.float32, jnp.int32
+    base = {
+        "dense": sds((B, cfg.n_dense), f32),
+        "sparse": sds((B, cfg.n_sparse, cfg.multi_hot), i32),
+    }
+    if sh["kind"] == "train":
+        return "train", {**base, "labels": sds((B,), i32)}
+    if sh["kind"] == "retrieval":
+        return "retrieval", {**base,
+                             "candidates": sds((pad512(sh["n_candidates"]), cfg.embed_dim), f32)}
+    return "serve", base

@@ -1,0 +1,107 @@
+"""DIP-LIST — per-entity attribute lists (§IV-B of the paper), as entity-major CSR.
+
+The paper stores, for every entity, a Chapel list/domain of attribute ids.
+Ragged per-entity lists have exactly one TPU-native encoding: offsets + values
+(CSR).  ``off[N+1]`` and ``val[nnz]`` are 1-D block-distributable the same way
+DI's SEG/DST are — entity-major, so a query's membership scan touches only the
+shard-local slice of ``val`` (the paper's O(NK/P) with P = shard count).
+
+Space O(N·K) worst case (every entity holds every attribute), matching §IV-D.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DIPList",
+    "build_dip_list",
+    "query_any",
+    "attrs_of_entity_padded",
+    "entity_of_slot",
+]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["off", "val", "slot_entity"],
+    meta_fields=["k", "n", "nnz"],
+)
+@dataclasses.dataclass(frozen=True)
+class DIPList:
+    """Entity-major CSR attribute store.
+
+    ``off[e] .. off[e+1]`` indexes the sorted attribute-id list of entity ``e``
+    inside ``val``.  ``slot_entity[nnz]`` materializes "which entity owns slot
+    i" (the inverse of ``off``) so membership hits can be scattered back to
+    entities without a ragged repeat at query time.
+    """
+
+    off: jax.Array  # (n+1,) int32
+    val: jax.Array  # (nnz,) int32 attribute ids, sorted within each entity
+    slot_entity: jax.Array  # (nnz,) int32 owning entity per slot
+    k: int
+    n: int
+    nnz: int
+
+
+def build_dip_list(entity_ids, attr_ids, *, k: int, n: int, dedupe: bool = True) -> DIPList:
+    """Bulk build from (entity, attribute) pairs: sort by (entity, attr), then
+    CSR offsets via bincount+cumsum — the vectorized replacement for the
+    paper's mutex-guarded per-element list insertions (§IV-B notes the Chapel
+    insertion path is suboptimal; static graphs admit this bulk path)."""
+    entity_ids = jnp.asarray(entity_ids, jnp.int32)
+    attr_ids = jnp.asarray(attr_ids, jnp.int32)
+    order = jnp.lexsort((attr_ids, entity_ids))
+    ent_s, attr_s = entity_ids[order], attr_ids[order]
+    if dedupe and ent_s.size:
+        import numpy as np
+
+        keep = np.asarray(
+            jnp.concatenate(
+                [jnp.array([True]), (ent_s[1:] != ent_s[:-1]) | (attr_s[1:] != attr_s[:-1])]
+            )
+        )
+        ent_s, attr_s = ent_s[keep], attr_s[keep]
+    nnz = int(ent_s.shape[0])
+    counts = jnp.bincount(ent_s, length=n)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    return DIPList(off=off, val=attr_s, slot_entity=ent_s, k=k, n=n, nnz=nnz)
+
+
+@jax.jit
+def query_any(dlist: DIPList, attr_mask: jax.Array) -> jax.Array:
+    """OR-semantics query (§VI-A): every attribute list of every entity is
+    scanned — O(nnz) ≤ O(NK), sharded over entities ⇒ O(NK/P).
+
+    hit[i] = attr_mask[val[i]]; mask[e] = OR of hits over e's slots —
+    a segment-max expressed as a scatter-max (slots are entity-sorted so the
+    scatter is shard-local under entity sharding)."""
+    if dlist.nnz == 0:
+        return jnp.zeros((dlist.n,), jnp.bool_)
+    hit = attr_mask[dlist.val]
+    mask = jnp.zeros((dlist.n,), jnp.bool_)
+    return mask.at[dlist.slot_entity].max(hit, mode="drop")
+
+
+@partial(jax.jit, static_argnames=("max_k",))
+def attrs_of_entity_padded(dlist: DIPList, e: jax.Array, *, max_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Entity→attributes read, padded to ``max_k`` (ragged → mask)."""
+    if dlist.nnz == 0:
+        lane = jnp.arange(max_k, dtype=jnp.int32)
+        return jnp.full((max_k,), -1, jnp.int32), jnp.zeros((max_k,), jnp.bool_)
+    start = dlist.off[e]
+    deg = dlist.off[e + 1] - start
+    lane = jnp.arange(max_k, dtype=jnp.int32)
+    idx = jnp.clip(start + lane, 0, max(dlist.nnz - 1, 0))
+    valid = lane < deg
+    return jnp.where(valid, dlist.val[idx], -1), valid
+
+
+def entity_of_slot(dlist: DIPList) -> jax.Array:
+    """(nnz,) owning entity of each slot (exposed for property tests)."""
+    return dlist.slot_entity

@@ -1,0 +1,225 @@
+"""PropGraph — the user-facing property-graph API (mirrors Arachne's Python surface).
+
+Workflow (§V of the paper):
+
+    pg = PropGraph(backend="arr")                      # ar.PropGraph()
+    pg.add_edges_from(src, dst)                        # bulk DI build
+    pg.add_node_labels(nodes, labels)                  # strings ok
+    pg.add_edge_relationships(esrc, edst, rels)
+    pg.add_node_properties("age", nodes, ages)         # typed columns
+    vmask = pg.query_labels(["person", "place"])       # OR semantics
+    emask = pg.query_relationships(["follows"])
+    sub, kept = pg.subgraph(labels=[...], relationships=[...])
+
+Ingestion follows the paper's three steps: (1) attribute values remapped to
+dense int ids (`AttributeMap`), (2) internal vertex/edge indices generated
+(vertex normalization + `edge_lookup` binary search), (3) bulk insert into the
+chosen DIP backend.  Backends: ``arr`` (DIP-ARR bitmap), ``list`` (DIP-LIST
+CSR), ``listd`` (DIP-LISTD linked chains + inverted CSR).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dip_arr, dip_list, dip_listd
+from repro.core.attr_map import AttributeMap
+from repro.core.di import DIGraph, build_di, edge_lookup
+from repro.core.queries import extract_subgraph, filtered_bfs, induce_edge_mask
+
+__all__ = ["PropGraph", "BACKENDS"]
+
+BACKENDS = ("arr", "list", "listd")
+
+
+class _AttrStore:
+    """One DIP instance over ``n_entities`` (vertices or edges)."""
+
+    def __init__(self, backend: str, n_entities: int):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self.backend = backend
+        self.n = n_entities
+        self.amap = AttributeMap()
+        self._pairs_e: List[np.ndarray] = []  # entity ids, insertion order
+        self._pairs_a: List[np.ndarray] = []  # attribute ids
+        self._store = None
+        self._dirty = True
+
+    def insert(self, entity_ids: np.ndarray, values: Sequence[str]) -> None:
+        attr_ids = self.amap.encode(values)
+        attr_ids = np.broadcast_to(np.atleast_1d(attr_ids), np.shape(entity_ids)).ravel()
+        entity_ids = np.asarray(entity_ids, np.int32).ravel()
+        ok = entity_ids >= 0  # unmatched edge rows (edge_lookup -1) are dropped
+        self._pairs_e.append(entity_ids[ok])
+        self._pairs_a.append(attr_ids[ok].astype(np.int32))
+        self._dirty = True
+
+    @property
+    def k(self) -> int:
+        return max(len(self.amap), 1)
+
+    def finalize(self):
+        if not self._dirty and self._store is not None:
+            return self._store
+        ent = np.concatenate(self._pairs_e) if self._pairs_e else np.zeros(0, np.int32)
+        att = np.concatenate(self._pairs_a) if self._pairs_a else np.zeros(0, np.int32)
+        if self.backend == "arr":
+            self._store = dip_arr.build_dip_arr(ent, att, k=self.k, n=self.n)
+        elif self.backend == "list":
+            self._store = dip_list.build_dip_list(ent, att, k=self.k, n=self.n)
+        else:
+            self._store = dip_listd.build_dip_listd(ent, att, k=self.k, n=self.n)
+        self._dirty = False
+        return self._store
+
+    def query_any(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
+        store = self.finalize()
+        mask = jnp.asarray(self.amap.mask(values, self.k))
+        if self.backend == "arr":
+            return dip_arr.query_any(store, mask, impl=impl or "matvec")
+        if self.backend == "list":
+            return dip_list.query_any(store, mask)
+        return dip_listd.query_any(store, mask, impl=impl or "inverted")
+
+
+class PropGraph:
+    """A static, directed, labeled property multigraph over the DI structure."""
+
+    def __init__(self, backend: str = "arr"):
+        self.backend = backend
+        self.graph: Optional[DIGraph] = None
+        self._vstore: Optional[_AttrStore] = None
+        self._estore: Optional[_AttrStore] = None
+        # typed property columns: name -> (values (x,), valid mask (x,))
+        self.vertex_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+        self.edge_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+
+    # ------------------------------------------------------------- structure
+    def add_edges_from(self, src, dst) -> "PropGraph":
+        """Bulk edge ingestion → DI build (sort + normalize + SEG)."""
+        self.graph = build_di(np.asarray(src), np.asarray(dst))
+        self._vstore = _AttrStore(self.backend, self.graph.n)
+        self._estore = _AttrStore(self.backend, max(self.graph.m, 1))
+        return self
+
+    def _require_graph(self) -> DIGraph:
+        if self.graph is None:
+            raise RuntimeError("call add_edges_from(...) first")
+        return self.graph
+
+    def _vertex_internal(self, nodes) -> np.ndarray:
+        """Original vertex ids → internal [0, n) ids (−1 if absent)."""
+        g = self._require_graph()
+        nm = np.asarray(g.node_map)
+        nodes = np.asarray(nodes).ravel()
+        pos = np.searchsorted(nm, nodes)
+        pos = np.clip(pos, 0, len(nm) - 1)
+        ok = nm[pos] == nodes
+        return np.where(ok, pos, -1).astype(np.int32)
+
+    def _edge_internal(self, src, dst) -> np.ndarray:
+        g = self._require_graph()
+        u = self._vertex_internal(src)
+        v = self._vertex_internal(dst)
+        u_c = jnp.asarray(np.maximum(u, 0))
+        v_c = jnp.asarray(np.maximum(v, 0))
+        idx = np.asarray(edge_lookup(g, u_c, v_c))
+        return np.where((u >= 0) & (v >= 0), idx, -1).astype(np.int32)
+
+    # ------------------------------------------------------------ attributes
+    def add_node_labels(self, nodes, labels) -> "PropGraph":
+        self._require_graph()
+        self._vstore.insert(self._vertex_internal(nodes), labels)
+        return self
+
+    def add_edge_relationships(self, src, dst, relationships) -> "PropGraph":
+        self._require_graph()
+        self._estore.insert(self._edge_internal(src, dst), relationships)
+        return self
+
+    def add_node_properties(self, name: str, nodes, values, fill=0) -> "PropGraph":
+        g = self._require_graph()
+        idx = self._vertex_internal(nodes)
+        vals = np.asarray(values)
+        col = np.full((g.n,), fill, dtype=vals.dtype)
+        valid = np.zeros((g.n,), dtype=bool)
+        ok = idx >= 0
+        col[idx[ok]] = vals[ok]
+        valid[idx[ok]] = True
+        self.vertex_props[name] = (jnp.asarray(col), jnp.asarray(valid))
+        return self
+
+    def add_edge_properties(self, name: str, src, dst, values, fill=0) -> "PropGraph":
+        g = self._require_graph()
+        idx = self._edge_internal(src, dst)
+        vals = np.asarray(values)
+        col = np.full((g.m,), fill, dtype=vals.dtype)
+        valid = np.zeros((g.m,), dtype=bool)
+        ok = idx >= 0
+        col[idx[ok]] = vals[ok]
+        valid[idx[ok]] = True
+        self.edge_props[name] = (jnp.asarray(col), jnp.asarray(valid))
+        return self
+
+    # --------------------------------------------------------------- queries
+    def query_labels(self, labels, *, impl: Optional[str] = None) -> jax.Array:
+        """(n,) bool — vertices holding ANY of ``labels`` (§VI OR semantics)."""
+        return self._vstore.query_any(labels, impl=impl)
+
+    def query_relationships(self, relationships, *, impl: Optional[str] = None) -> jax.Array:
+        """(m,) bool — edges holding ANY of ``relationships``."""
+        return self._estore.query_any(relationships, impl=impl)
+
+    def subgraph(
+        self,
+        labels: Optional[Sequence[str]] = None,
+        relationships: Optional[Sequence[str]] = None,
+        *,
+        impl: Optional[str] = None,
+    ) -> Tuple[DIGraph, np.ndarray]:
+        """Intersect label/relationship query masks into an induced subgraph."""
+        g = self._require_graph()
+        vmask = (
+            self.query_labels(labels, impl=impl)
+            if labels is not None
+            else jnp.ones((g.n,), jnp.bool_)
+        )
+        emask = (
+            self.query_relationships(relationships, impl=impl)
+            if relationships is not None
+            else jnp.ones((g.m,), jnp.bool_)
+        )
+        return extract_subgraph(g, induce_edge_mask(g, vmask, emask))
+
+    def bfs(
+        self,
+        sources,
+        labels: Optional[Sequence[str]] = None,
+        relationships: Optional[Sequence[str]] = None,
+        max_iters: int = 64,
+    ) -> jax.Array:
+        """Property-filtered BFS from original-id sources; (n,) depths."""
+        g = self._require_graph()
+        v_ok = self.query_labels(labels) if labels is not None else None
+        e_ok = self.query_relationships(relationships) if relationships is not None else None
+        srcs = jnp.asarray(np.maximum(self._vertex_internal(sources), 0))
+        return filtered_bfs(g, srcs, edge_allowed=e_ok, vertex_allowed=v_ok, max_iters=max_iters)
+
+    # ------------------------------------------------------------------ info
+    @property
+    def n_vertices(self) -> int:
+        return self._require_graph().n
+
+    @property
+    def n_edges(self) -> int:
+        return self._require_graph().m
+
+    def label_set(self) -> List[str]:
+        return self._vstore.amap.values if self._vstore else []
+
+    def relationship_set(self) -> List[str]:
+        return self._estore.amap.values if self._estore else []

@@ -1,0 +1,6 @@
+from repro.data.graph import build_triplets, synthetic_gc_batch, synthetic_graph_batch
+from repro.data.lm import lm_batch
+from repro.data.recsys import dlrm_batch
+
+__all__ = ["build_triplets", "synthetic_gc_batch", "synthetic_graph_batch", "lm_batch",
+           "dlrm_batch"]

@@ -1,0 +1,18 @@
+"""Synthetic recsys pipeline — step-addressed DLRM batches (Criteo-like)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dlrm_batch"]
+
+
+def dlrm_batch(step: int, *, batch: int, n_dense: int = 13, n_sparse: int = 26,
+               vocab: int = 1_000_000, multi_hot: int = 1, seed: int = 0):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "dense": jax.random.normal(k1, (batch, n_dense), jnp.float32),
+        "sparse": jax.random.randint(k2, (batch, n_sparse, multi_hot), 0, vocab, jnp.int32),
+        "labels": jax.random.bernoulli(k3, 0.3, (batch,)).astype(jnp.int32),
+    }

@@ -1,0 +1,3 @@
+from repro.ft.controller import FailureInjector, TrainController, accumulate_grads
+
+__all__ = ["FailureInjector", "TrainController", "accumulate_grads"]

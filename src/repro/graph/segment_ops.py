@@ -1,0 +1,124 @@
+"""Message-passing primitives over DI edge arrays.
+
+JAX sparse is BCOO-only, so (per the assignment and kernel taxonomy §GNN)
+message passing is implemented via ``jax.ops.segment_*`` over the edge-index →
+node scatter.  DI's sort invariant (edges sorted by src, and by dst in the
+reverse view) makes ``indices_are_sorted=True`` legal, which XLA exploits.
+
+``gather_scatter`` is the generic MPNN primitive; ``spmm_di`` the GCN-style
+Ã·X product.  Both have a Pallas MXU formulation in ``repro.kernels.seg_mm``
+(selected with ``impl='kernel'``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "segment_sum_sorted",
+    "segment_mean",
+    "segment_max",
+    "segment_min",
+    "segment_softmax",
+    "gather_scatter",
+    "spmm_di",
+    "degree_norm",
+]
+
+
+def segment_sum_sorted(data, segment_ids, num_segments: int):
+    """segment_sum with the DI sortedness promise."""
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=True
+    )
+
+
+def segment_mean(data, segment_ids, num_segments: int, *, sorted_ids: bool = False):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments, indices_are_sorted=sorted_ids)
+    cnt = jax.ops.segment_sum(
+        jnp.ones(data.shape[:1], data.dtype), segment_ids, num_segments,
+        indices_are_sorted=sorted_ids,
+    )
+    return s / jnp.maximum(cnt, 1)[(...,) + (None,) * (data.ndim - 1)]
+
+
+def segment_max(data, segment_ids, num_segments: int, *, sorted_ids: bool = False):
+    return jax.ops.segment_max(data, segment_ids, num_segments, indices_are_sorted=sorted_ids)
+
+
+def segment_min(data, segment_ids, num_segments: int, *, sorted_ids: bool = False):
+    return jax.ops.segment_min(data, segment_ids, num_segments, indices_are_sorted=sorted_ids)
+
+
+def segment_softmax(scores, segment_ids, num_segments: int):
+    """Numerically-stable per-segment softmax (GAT edge softmax)."""
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(scores - seg_max[segment_ids])
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+def gather_scatter(
+    x: jax.Array,
+    src_idx: jax.Array,
+    dst_idx: jax.Array,
+    num_nodes: int,
+    *,
+    msg_fn: Optional[Callable] = None,
+    edge_weight: Optional[jax.Array] = None,
+    agg: str = "sum",
+) -> jax.Array:
+    """The MPNN primitive: m_e = msg(x[src_e]); h_v = ⨁_{e: dst_e=v} m_e.
+
+    x: (n, d) node features; src_idx/dst_idx: (m,) DI edge arrays.
+    """
+    msgs = x[src_idx]
+    if msg_fn is not None:
+        msgs = msg_fn(msgs)
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    if agg == "sum":
+        return jax.ops.segment_sum(msgs, dst_idx, num_nodes)
+    if agg == "mean":
+        return segment_mean(msgs, dst_idx, num_nodes)
+    if agg == "max":
+        out = jax.ops.segment_max(msgs, dst_idx, num_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(f"unknown agg {agg!r}")
+
+
+def degree_norm(src_idx, dst_idx, num_nodes: int, *, mode: str = "sym") -> jax.Array:
+    """GCN normalization coefficients per edge.
+
+    sym:  1/sqrt((1+deg_out(u))·(1+deg_in(v)))  (self-loop-adjusted, Kipf §2)
+    rw:   1/(1+deg_in(v))
+    """
+    ones = jnp.ones_like(src_idx, jnp.float32)
+    d_out = jax.ops.segment_sum(ones, src_idx, num_nodes) + 1.0
+    d_in = jax.ops.segment_sum(ones, dst_idx, num_nodes) + 1.0
+    if mode == "sym":
+        return jax.lax.rsqrt(d_out[src_idx] * d_in[dst_idx])
+    if mode == "rw":
+        return 1.0 / d_in[dst_idx]
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def spmm_di(
+    x: jax.Array,
+    src_idx: jax.Array,
+    dst_idx: jax.Array,
+    num_nodes: int,
+    *,
+    edge_weight: Optional[jax.Array] = None,
+    impl: str = "segment",
+) -> jax.Array:
+    """Ã @ X over DI edges. impl='segment' (XLA) or 'kernel' (Pallas seg_mm)."""
+    if impl == "kernel":
+        from repro.kernels.seg_mm import ops as _ops
+
+        return _ops.seg_mm(x, src_idx, dst_idx, num_nodes, edge_weight=edge_weight)
+    return gather_scatter(x, src_idx, dst_idx, num_nodes, edge_weight=edge_weight, agg="sum")

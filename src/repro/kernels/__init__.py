@@ -1,0 +1,19 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships: ``kernel.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jit'd public wrapper, auto interpret off-TPU), ``ref.py``
+(pure-jnp oracle).  Validation: tests/test_kernels.py sweeps shapes/dtypes and
+asserts allclose against the oracle in interpret mode.
+
+Kernels (DESIGN.md §6):
+  bitmap_query   — DIP-ARR attribute query as MXU matvec (the paper's hot loop)
+  seg_mm         — DI neighborhood aggregation: block-CSR one-hot MXU SpMM
+  flash_attention— blockwise online-softmax attention (causal/SWA/softcap/GQA)
+  embedding_bag  — DLRM multi-hot gather-reduce (FBGEMM-TBE pattern on TPU)
+"""
+from repro.kernels.bitmap_query import bitmap_query
+from repro.kernels.embedding_bag import embedding_bag_fields
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.seg_mm import seg_mm
+
+__all__ = ["bitmap_query", "embedding_bag_fields", "flash_attention", "seg_mm"]

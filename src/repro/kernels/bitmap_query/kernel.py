@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: DIP-ARR attribute query as an MXU matvec.
+
+The paper's DIP-ARR query scans the selected attribute rows of the (K, N)
+byte bitmap and ORs them (§VI-C, O(N/P)).  On TPU the same reduction is
+reformulated for the systolic array:
+
+    counts(1, Nt) = mask(1, K) @ bitmap(K, Nt);   out = counts > 0
+
+Grid: 1-D over entity tiles (the paper's distribution dimension).  Each step
+holds a (K, Nt) bitmap block and the full (1, K) query mask in VMEM.
+VMEM budget: K ≤ 512 attributes × Nt = 2048 entities × 4 B (f32 on the MXU
+path) ≈ 4 MiB — comfortably inside the ~16 MiB/core VMEM envelope; Nt is the
+lane-aligned (×128) tunable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 2048
+
+
+def _bitmap_query_kernel(mask_ref, bitmap_ref, out_ref):
+    mask = mask_ref[...]          # (1, K) f32
+    block = bitmap_ref[...]       # (K, Nt) int8
+    counts = jnp.dot(mask, block.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)  # (1, Nt) on the MXU
+    out_ref[...] = (counts > 0.5)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def bitmap_query_pallas(bitmap: jax.Array, attr_mask: jax.Array, *,
+                        tile_n: int = DEFAULT_TILE_N, interpret: bool = True) -> jax.Array:
+    """bitmap: (K, N) int8; attr_mask: (K,) bool → (N,) bool."""
+    k, n = bitmap.shape
+    tile_n = min(tile_n, n)
+    pad = (-n) % tile_n
+    if pad:
+        bitmap = jnp.pad(bitmap, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    maskf = attr_mask.astype(jnp.float32)[None, :]  # (1, K)
+
+    out = pl.pallas_call(
+        _bitmap_query_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),        # query mask: replicated
+            pl.BlockSpec((k, tile_n), lambda i: (0, i)),   # bitmap: entity tiles
+        ],
+        out_specs=pl.BlockSpec((1, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.bool_),
+        interpret=interpret,
+    )(maskf, bitmap)
+    return out[0, :n]

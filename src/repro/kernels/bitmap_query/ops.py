@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the bitmap_query kernel.
+
+Dispatches interpret mode automatically off-TPU; on TPU backends the compiled
+Pallas kernel runs with lane-aligned tiles.
+"""
+import jax
+
+from repro.kernels.bitmap_query.kernel import bitmap_query_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def bitmap_query(bitmap: jax.Array, attr_mask: jax.Array, *, tile_n: int = 2048) -> jax.Array:
+    """(K, N) int8 bitmap × (K,) bool query mask → (N,) bool entity mask."""
+    return bitmap_query_pallas(bitmap, attr_mask, tile_n=tile_n, interpret=not _on_tpu())

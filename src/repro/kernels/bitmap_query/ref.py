@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the bitmap_query kernel (paper-faithful row scan)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bitmap_query_ref(bitmap: jax.Array, attr_mask: jax.Array) -> jax.Array:
+    """bitmap: (K, N) int8; attr_mask: (K,) bool → (N,) bool."""
+    sel = bitmap.astype(jnp.bool_) & attr_mask[:, None]
+    return jnp.any(sel, axis=0)

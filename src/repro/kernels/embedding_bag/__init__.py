@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag import ops, ref
+from repro.kernels.embedding_bag.ops import embedding_bag_fields
+
+__all__ = ["ops", "ref", "embedding_bag_fields"]

@@ -1,0 +1,13 @@
+"""Jit'd public wrapper for the embedding_bag kernel."""
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def embedding_bag_fields(tables: jax.Array, idx: jax.Array, *, bt: int = 256) -> jax.Array:
+    """(F, V, D) tables × (B, F, MH) multi-hot indices → (B, F, D) mean bags."""
+    return embedding_bag_pallas(tables, idx, bt=bt, interpret=not _on_tpu())

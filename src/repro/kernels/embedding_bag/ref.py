@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for embedding_bag: take + mean over the bag dimension."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def embedding_bag_ref(tables: jax.Array, idx: jax.Array) -> jax.Array:
+    """tables: (F, V, D); idx: (B, F, MH) → (B, F, D) mean-pooled."""
+    def per_field(table, ix):  # (V, D), (B, MH)
+        return jnp.mean(jnp.take(table, ix, axis=0), axis=1)
+
+    return jnp.swapaxes(jax.vmap(per_field)(tables, jnp.swapaxes(idx, 0, 1)), 0, 1)

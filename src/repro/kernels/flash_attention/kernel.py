@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (FlashAttention on MXU).
+
+Supports causal masking, sliding-window, Gemma-2 logit softcap, and GQA
+(query-head groups share KV heads via the grid mapping, no KV replication).
+
+Grid: (batch·kv_heads·q_groups, Sq tiles, Skv tiles) — the Skv axis is the
+innermost (sequential on TPU), carrying the running (max, denom, acc) in VMEM
+scratch; the output tile is written on the last KV step.  Causal + window
+tiles that are fully masked are skipped cheaply (the mask still computes, but
+contributes exp(-inf)=0; a block-skip via index remap is a recorded §Perf
+follow-up).  Block sizes default to (128, 128) — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  cap: Optional[float], q_offset: int, bq: int, bkv: int, n_kv: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bkv, d)
+    v = v_ref[0]  # (bkv, d)
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T,
+                preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    q_pos = q_offset + pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    k_pos = kv_i * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    ok = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "q_offset", "bq", "bkv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None, cap: Optional[float] = None,
+    q_offset: int = 0, bq: int = 128, bkv: int = 128, interpret: bool = True,
+) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) → (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+    n_q, n_kv = Sq // bq, Skv // bkv
+
+    # layout: fold (B, Hkv, G) into the leading grid axis; kv indexed by (B, Hkv)
+    qr = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4).reshape(B * Hkv * G, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, window=window, cap=cap,
+        q_offset=q_offset, bq=bq, bkv=bkv, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv * G, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, i, j: (h // G, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, i, j: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv * G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hkv, G, Sq, D).transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the flash_attention kernel."""
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    cap: Optional[float] = None, q_offset: int = 0,
+                    bq: int = 128, bkv: int = 128):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, cap=cap, q_offset=q_offset,
+        bq=bq, bkv=bkv, interpret=not _on_tpu())

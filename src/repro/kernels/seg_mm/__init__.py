@@ -1,0 +1,4 @@
+from repro.kernels.seg_mm import ops, ref
+from repro.kernels.seg_mm.ops import seg_mm
+
+__all__ = ["ops", "ref", "seg_mm"]

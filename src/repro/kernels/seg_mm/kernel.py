@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: DI neighborhood aggregation (SpMM) via block-CSR + one-hot MXU.
+
+The GNN message-passing primitive ``out[v] = Σ_{e:dst_e=v} w_e · x[src_e]`` is
+mapped onto the MXU instead of scalar scatter loops (the GPU-idiomatic
+GE-SpMM/FusedMM shape, re-thought for the systolic array — DESIGN.md §2):
+
+  1. Host layout pass (block-CSR): edges sorted by dst (the reverse-DI
+     invariant) are cut into fixed ``Ec``-edge chunks *aligned to node tiles*
+     of ``Nt`` rows, so each chunk scatters into exactly one output tile.
+  2. Kernel per chunk: build the (Ec, Nt) one-hot scatter block from local dst
+     ids with iota-compare, then ``out_tile += onehotᵀ @ msgs`` — an
+     (Nt × Ec) · (Ec × D) MXU matmul.
+  3. Chunk→tile routing is scalar-prefetched (PrefetchScalarGridSpec), the
+     revisiting-output accumulation pattern: TPU grids execute sequentially,
+     so ``out_ref[...] +=`` across chunks of one tile is race-free; the first
+     chunk of each tile zero-initializes.
+
+VMEM per step: one-hot (Ec×Nt) f32 + msgs (Ec×D) + out (Nt×D); defaults
+Ec=256, Nt=256, D-tile = full D (≤ 512) ≈ 1.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_EC = 256
+DEFAULT_NT = 256
+
+
+class SegMMLayout(NamedTuple):
+    """Host-built block-CSR routing (one-time per static graph)."""
+
+    chunk_tile: jax.Array    # (n_chunks,) int32 — output node tile per chunk
+    chunk_first: jax.Array   # (n_chunks,) int32 — 1 if first chunk of its tile
+    edge_perm: jax.Array     # (n_chunks·Ec,) int32 — edge index per slot, -1 pad
+    dst_local: jax.Array     # (n_chunks, Ec) int32 — dst - tile·Nt, Nt ⇒ pad
+    n_tiles: int
+    nt: int
+    ec: int
+
+
+def build_layout(dst_sorted: np.ndarray, n_nodes: int, *, nt: int = DEFAULT_NT,
+                 ec: int = DEFAULT_EC) -> SegMMLayout:
+    """dst_sorted: (E,) int32 non-decreasing destination ids."""
+    dst_sorted = np.asarray(dst_sorted)
+    n_tiles = max(1, -(-n_nodes // nt))
+    bounds = np.searchsorted(dst_sorted, np.arange(n_tiles + 1) * nt)
+    chunk_tile, chunk_first, edge_idx = [], [], []
+    for i in range(n_tiles):
+        s, e = int(bounds[i]), int(bounds[i + 1])
+        n_chunks_i = max(1, -(-(e - s) // ec))
+        for j in range(n_chunks_i):
+            chunk_tile.append(i)
+            chunk_first.append(1 if j == 0 else 0)
+            lo = s + j * ec
+            idx = np.arange(lo, min(lo + ec, e), dtype=np.int32)
+            pad = np.full(ec - len(idx), -1, np.int32)
+            edge_idx.append(np.concatenate([idx, pad]))
+    edge_idx = np.stack(edge_idx)  # (n_chunks, Ec)
+    tiles = np.asarray(chunk_tile, np.int32)
+    d_local = np.where(
+        edge_idx >= 0, dst_sorted[np.maximum(edge_idx, 0)] - tiles[:, None] * nt, nt
+    ).astype(np.int32)
+    return SegMMLayout(
+        chunk_tile=jnp.asarray(tiles),
+        chunk_first=jnp.asarray(chunk_first, dtype=jnp.int32),
+        edge_perm=jnp.asarray(edge_idx.reshape(-1)),
+        dst_local=jnp.asarray(d_local),
+        n_tiles=n_tiles,
+        nt=nt,
+        ec=ec,
+    )
+
+
+def _seg_mm_kernel(chunk_tile, chunk_first, dst_local_ref, msgs_ref, out_ref, *, nt: int):
+    c = pl.program_id(0)
+
+    @pl.when(chunk_first[c] == 1)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    d_local = dst_local_ref[...]  # (1, Ec)
+    msgs = msgs_ref[...]          # (Ec, D)
+    # one-hot scatter block on the MXU: (Nt, Ec) @ (Ec, D)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (nt, d_local.shape[1]), 0)
+    onehot = (rows == d_local).astype(jnp.float32)  # pad slots (==nt) never match
+    out_ref[...] += jnp.dot(onehot, msgs.astype(jnp.float32),
+                            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tiles", "nt", "ec", "interpret"))
+def seg_mm_pallas(msgs_padded: jax.Array, layout_chunk_tile, layout_chunk_first,
+                  layout_dst_local, *, n_tiles: int, nt: int, ec: int,
+                  interpret: bool = True) -> jax.Array:
+    """msgs_padded: (n_chunks·Ec, D) gathered/weighted messages (pad rows zero).
+    Returns (n_tiles·Nt, D) aggregated node features."""
+    n_chunks = layout_dst_local.shape[0]
+    d = msgs_padded.shape[-1]
+    kernel = functools.partial(_seg_mm_kernel, nt=nt)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n_chunks,),
+            in_specs=[
+                pl.BlockSpec((1, ec), lambda c, tm, fs: (c, 0)),   # dst_local
+                pl.BlockSpec((ec, d), lambda c, tm, fs: (c, 0)),   # msgs chunk
+            ],
+            out_specs=pl.BlockSpec((nt, d), lambda c, tm, fs: (tm[c], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * nt, d), msgs_padded.dtype),
+        interpret=interpret,
+    )(layout_chunk_tile, layout_chunk_first, layout_dst_local, msgs_padded)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for seg_mm: plain segment_sum over gathered messages."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def seg_mm_ref(x: jax.Array, src_idx: jax.Array, dst_idx: jax.Array, n_nodes: int,
+               *, edge_weight: Optional[jax.Array] = None) -> jax.Array:
+    """out[v] = Σ_{e: dst_e = v} w_e · x[src_e]."""
+    msgs = x[src_idx]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, dst_idx, num_segments=n_nodes)

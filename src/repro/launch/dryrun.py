@@ -1,0 +1,150 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be executed as a script/module entry — the first two lines pin 512
+placeholder host devices BEFORE jax initializes.  Never import this module's
+XLA_FLAGS side effect from tests/benches (they want 1 device).
+
+Per cell it records: memory_analysis (per-device bytes — proves it fits),
+cost_analysis (FLOPs/bytes), and the collective traffic parsed from the
+compiled HLO — the three §Roofline terms derive from these
+(benchmarks/roofline.py consumes the JSON this writes).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+
+# ------------------------------------------------------------------ dry run
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             verbose: bool = True) -> Optional[Dict]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    built = build_cell(arch, shape, mesh)
+    if built is None:
+        if verbose:
+            print(f"[skip] {arch} × {shape}: long_500k on pure full-attention arch")
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod, "skipped": True}
+    kind, step_fn, args, in_specs, out_specs, cfg = built
+
+    from repro.launch.sharding import tree_named
+    in_sh = tree_named(mesh, in_specs)
+    out_sh = tree_named(mesh, out_specs) if out_specs is not None else None
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    tot = analyze_hlo(hlo)  # while-tree-correct flops/bytes/collectives
+
+    rec = {
+        "arch": arch, "shape": shape, "kind": kind, "multi_pod": multi_pod,
+        "mesh": dict(zip(mesh.axis_names, [int(s) for s in mesh.devices.shape])),
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        # analyzer totals are PER DEVICE (the compiled module is the per-device
+        # program under GSPMD)
+        "flops_per_dev": float(tot["flops"]),
+        "flops_bf16_per_dev": float(tot["flops_bf16"]),
+        "hbm_bytes_per_dev": float(tot["bytes"]),
+        "coll_bytes_per_dev": float(tot["coll_bytes"]),
+        "coll_by_kind": {k: float(v) for k, v in tot["coll_by_kind"].items()},
+        "coll_count": {k: int(v) for k, v in tot["coll_count"].items()},
+        # raw cost_analysis kept for reference (no loop multiplication)
+        "xla_flops_raw": float(cost.get("flops", 0.0)) if cost else 0.0,
+        "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "skipped": False,
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    if verbose:
+        per_dev = rec.get("temp_size_in_bytes", 0) + rec.get("argument_size_in_bytes", 0)
+        print(f"[ok] {arch} × {shape} ({kind}, {'2-pod' if multi_pod else '1-pod'}): "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"flops/dev={rec['flops_per_dev']:.3e} hbm/dev={rec['hbm_bytes_per_dev']:.3e} "
+              f"coll/dev={rec['coll_bytes_per_dev']:.3e}B | args+temp/dev={per_dev/2**30:.2f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun.json")
+    args = ap.parse_args()
+
+    from repro.configs.registry import list_cells
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s, _ in list_cells()]
+    elif args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        from repro.configs.registry import arch_shapes
+        cells = [(args.arch, s) for s in arch_shapes(args.arch)]
+    else:
+        ap.error("--all or --arch [--shape] required")
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["multi_pod"]) for r in records}
+
+    failures = []
+    for mp in meshes:
+        for a, s in cells:
+            if (a, s, mp) in done:
+                print(f"[cached] {a} × {s} multi_pod={mp}")
+                continue
+            try:
+                rec = run_cell(a, s, multi_pod=mp)
+                if rec is not None:
+                    records.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((a, s, mp, str(e)[:200]))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells)}×{len(meshes)} cells ok → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

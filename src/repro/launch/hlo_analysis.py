@@ -1,0 +1,301 @@
+"""Post-compile HLO analysis: roofline terms with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — a scanned 80-layer
+model reports 1-layer FLOPs (verified empirically; see EXPERIMENTS.md §Dry-run
+notes).  This module re-derives the three roofline inputs from the compiled
+HLO text with loop-tree multiplication:
+
+  * **flops** — 2·M·N·K per ``dot`` (per-dtype: bf16 vs f32 MXU paths),
+    multiplied through the while tree.  Dots dominate every assigned arch;
+    elementwise VPU flops are excluded (recorded as a known underestimate).
+  * **hbm bytes** — post-fusion traffic proxy: Σ over top-level ops of
+    (operand bytes + output bytes).  Fusion internals are invisible by
+    construction, which is exactly the HBM-traffic view (VMEM-resident
+    intermediates don't count).
+  * **collective bytes** — per-chip ring-model traffic per op kind.
+
+Trip counts come from the loop condition's comparison constant (jax scans
+lower to ``while`` with a 0-based induction variable).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "Totals"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_SKIP_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _parse_dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_info(segment: str) -> List[Tuple[str, List[int]]]:
+    return [(dt, _parse_dims(dims)) for dt, dims in _SHAPE_RE.findall(segment)]
+
+
+def _bytes_of(segment: str) -> int:
+    total = 0
+    for dt, dims in _shape_info(segment):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Totals(dict):
+    """{'flops', 'flops_bf16', 'bytes', 'coll_bytes', 'coll_by_kind', 'coll_count'}"""
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    buf: List[str] = []
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                buf = []
+        else:
+            if line.strip() == "}":
+                comps[cur] = buf
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _analyze_comp(lines: List[str]):
+    """One computation: local costs + (trip-multiplied) sub-loops deferred."""
+    shapes: Dict[str, str] = {}
+    local = {"flops": 0.0, "flops_bf16": 0.0, "bytes": 0.0, "param_bytes": 0.0,
+             "coll_bytes": 0.0, "coll_by_kind": {}, "coll_count": {}}
+    whiles: List[Tuple[str, str]] = []  # (cond, body)
+    max_const = 0
+
+    for raw in lines:
+        ls = raw.strip()
+        m = _DEF_RE.match(ls)
+        if not m:
+            c = _CONST_RE.search(ls)
+            if c:
+                max_const = max(max_const, int(c.group(1)))
+            continue
+        name, shape_seg, op, rest = m.groups()
+        shapes[name] = shape_seg
+        c = _CONST_RE.search(ls)
+        if c:
+            max_const = max(max_const, int(c.group(1)))
+        if op == "parameter":
+            local["param_bytes"] += _bytes_of(shape_seg)
+        if op in _SKIP_OPS:
+            continue
+
+        out_bytes = _bytes_of(shape_seg)
+
+        if op == "while":
+            w = _WHILE_RE.search(rest)
+            if w:
+                whiles.append((w.group(1), w.group(2)))
+            continue
+
+        # HBM traffic proxy — WRITE-SIDE accounting: each op contributes its
+        # output bytes (doubled: every written byte is read back by a
+        # consumer; entry arguments are added once by analyze_hlo).  Operand
+        # bytes are NOT summed at call sites: post-fusion operands are often
+        # sliced/windowed inside the fusion (a transpose+slice fusion whose
+        # operand is a full scanned KV cache reads only one layer), so
+        # operand-side counting inflated a cache decode ~30× (measured; §Perf
+        # log).  Corrections:
+        #   * (dynamic-)update-slice writes only the update region; every
+        #     operand ≥ out/2 is an aliased buffer (XLA in-place), excluded.
+        #   * pure dtype-staging converts (wrapped_convert*) are XLA:CPU
+        #     artifacts — CPU has no native bf16 dot and stages through f32;
+        #     the TPU MXU consumes bf16 natively, so these are zero-traffic
+        #     on the target (documented in EXPERIMENTS.md §Dry-run notes).
+        if op == "convert" or name.startswith("wrapped_convert") \
+                or "convert_computation" in rest:
+            continue
+        paren = rest.split("),")[0] if ")," in rest else rest.rstrip(")")
+        op_bytes_list = [
+            _bytes_of(shapes[ref]) for ref in _OPERAND_RE.findall(paren) if ref in shapes
+        ]
+        dus_like = "dynamic-update-slice" in name or "dynamic_update_slice" in name \
+            or op == "dynamic-update-slice"
+        if dus_like and op_bytes_list:
+            small = sum(b for b in op_bytes_list if b < out_bytes / 2)
+            local["bytes"] += 2.0 * small  # read update + write region
+        else:
+            local["bytes"] += 2.0 * out_bytes
+        del op_bytes_list
+
+        if op == "dot":
+            refs = _OPERAND_RE.findall(paren)
+            lhs_shape = _shape_info(shapes.get(refs[0], ""))[0] if refs and refs[0] in shapes else None
+            cd = _CDIMS_RE.search(rest)
+            out_elems = 1
+            out_info = _shape_info(shape_seg)
+            for _, dims in out_info[:1]:
+                for d in dims:
+                    out_elems *= d
+            k = 1
+            if lhs_shape and cd:
+                for ci in _parse_dims(cd.group(1)):
+                    if ci < len(lhs_shape[1]):
+                        k *= lhs_shape[1][ci]
+            fl = 2.0 * out_elems * k
+            local["flops"] += fl
+            dt = out_info[0][0] if out_info else "f32"
+            lhs_dt = lhs_shape[0] if lhs_shape else dt
+            if "bf16" in (dt, lhs_dt) or "f16" in (dt, lhs_dt):
+                local["flops_bf16"] += fl
+
+        if op in _COLLECTIVES or (op.endswith("-start") and op[:-6] in _COLLECTIVES):
+            kind = op[:-6] if op.endswith("-start") else op
+            g = _GROUPS_RE.search(rest)
+            if g:
+                p = len(g.group(1).split(","))
+            else:
+                gi = _GROUPS_IOTA_RE.search(rest)
+                p = int(gi.group(2)) if gi else 1
+            p = max(p, 1)
+            if kind == "all-reduce":
+                traffic = 2 * (p - 1) / p * out_bytes
+            elif kind in ("all-gather", "all-to-all"):
+                traffic = (p - 1) / p * out_bytes
+            elif kind == "reduce-scatter":
+                traffic = (p - 1) * out_bytes
+            else:
+                traffic = out_bytes
+            local["coll_bytes"] += traffic
+            local["coll_by_kind"][kind] = local["coll_by_kind"].get(kind, 0.0) + traffic
+            local["coll_count"][kind] = local["coll_count"].get(kind, 0) + 1
+
+    return local, whiles, max_const
+
+
+def analyze_hlo(hlo: str) -> Totals:
+    comps = _split_computations(hlo)
+    analyzed = {name: _analyze_comp(lines) for name, lines in comps.items()}
+    memo: Dict[str, Dict] = {}
+
+    def total(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        if name not in analyzed:
+            z = {"flops": 0.0, "flops_bf16": 0.0, "bytes": 0.0, "coll_bytes": 0.0,
+                 "coll_by_kind": {}, "coll_count": {}}
+            memo[name] = z
+            return z
+        local, whiles, _ = analyzed[name]
+        agg = {k: (dict(v) if isinstance(v, dict) else v) for k, v in local.items()}
+        for cond, body in whiles:
+            trips = analyzed.get(cond, (None, None, 1))[2] or 1
+            sub = total(body)
+            for k in ("flops", "flops_bf16", "bytes", "coll_bytes"):
+                agg[k] += trips * sub[k]
+            for k, v in sub["coll_by_kind"].items():
+                agg["coll_by_kind"][k] = agg["coll_by_kind"].get(k, 0.0) + trips * v
+            for k, v in sub["coll_count"].items():
+                agg["coll_count"][k] = agg["coll_count"].get(k, 0) + trips * v
+        memo[name] = agg
+        return agg
+
+    # (entry arguments are read once from HBM: added below)
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: the computation with the largest local cost
+        entry = max(analyzed, key=lambda n: analyzed[n][0]["bytes"]) if analyzed else ""
+    out = Totals(total(entry))
+    if entry in analyzed:
+        out["bytes"] += analyzed[entry][0]["param_bytes"]  # arguments read once
+    return out
+
+
+def top_ops(hlo: str, n: int = 15):
+    """Debug view: heaviest ops by trip-multiplied HBM-traffic proxy.
+    Returns [(bytes_with_trips, comp, op, line_prefix)]."""
+    comps = _split_computations(hlo)
+    # trip factor per computation: entry=1; while bodies multiply
+    analyzed = {name: _analyze_comp(lines) for name, lines in comps.items()}
+    factor = {name: 0 for name in comps}
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry:
+        factor[entry] = 1
+        frontier = [entry]
+        while frontier:
+            nxt = []
+            for name in frontier:
+                _, whiles, _ = analyzed[name]
+                for cond, body in whiles:
+                    trips = analyzed.get(cond, (None, None, 1))[2] or 1
+                    if body in factor:
+                        factor[body] += factor[name] * trips
+                        nxt.append(body)
+            frontier = nxt
+
+    rows = []
+    for name, lines in comps.items():
+        f = factor.get(name, 0)
+        if f == 0:
+            continue
+        shapes: Dict[str, str] = {}
+        for raw in lines:
+            m = _DEF_RE.match(raw.strip())
+            if not m:
+                continue
+            nm, shape_seg, op, rest = m.groups()
+            shapes[nm] = shape_seg
+            if op in _SKIP_OPS or op == "while":
+                continue
+            paren = rest.split("),")[0] if ")," in rest else rest.rstrip(")")
+            ob = _bytes_of(shape_seg)
+            opl = [_bytes_of(shapes[r]) for r in _OPERAND_RE.findall(paren) if r in shapes]
+            if op == "convert" or nm.startswith("wrapped_convert") \
+                    or "convert_computation" in rest:
+                continue
+            dus_like = "dynamic-update-slice" in nm or "dynamic_update_slice" in nm \
+                or op == "dynamic-update-slice"
+            if dus_like and opl:
+                b = 2.0 * sum(x for x in opl if x < ob / 2)
+            else:
+                b = 2.0 * ob
+            rows.append((b * f, name, op, raw.strip()[:110]))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests and benches see 1 CPU device;
+only dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before first jax init.
+
+Topology: single pod = 16×16 = 256 chips (v5e pod), axes ("data", "model");
+multi-pod = 2×16×16 = 512 chips, axes ("pod", "data", "model").  The ``model``
+axis carries ICI-bandwidth-hungry collectives (TP/EP) and never crosses pods;
+``pod`` composes with ``data`` for batch/entity parallelism so only gradient /
+mask all-reduces traverse the inter-pod links (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "mesh_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes(mesh):
+    """The pure-data-parallel axis group: ('pod','data') when multi-pod."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

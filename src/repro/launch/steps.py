@@ -1,0 +1,200 @@
+"""Step-function factories per (family, kind) — shared by dryrun/train/serve.
+
+Each factory returns ``(step_fn, make_abstract_args, in_specs, out_specs)``
+where abstract args are ShapeDtypeStruct pytrees (params/opt-state via
+``jax.eval_shape`` — nothing is allocated) and specs are PartitionSpec trees
+aligned with the arg pytrees.  Training steps include the full AdamW update —
+the lowered artifact carries the real memory/collective picture (master
+weights + both moments + gradient reduction), not a forward-only toy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common
+from repro.launch import sharding as shard_rules
+from repro.launch.mesh import dp_axes
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+__all__ = ["build_cell"]
+
+
+def _cast_float_sds(tree, dtype):
+    """Re-dtype float leaves of an SDS tree (serving uses bf16 weights)."""
+    def f(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, dtype, sharding=getattr(x, "sharding", None))
+        return x
+    return jax.tree.map(f, tree)
+
+
+def _metric_specs():
+    return None  # replicated scalars
+
+
+# --------------------------------------------------------------------- LM
+def _lm_cell(arch_mod, cfg, kind: str, specs, mesh):
+    from repro.models import transformer as T
+
+    opt_cfg = AdamWConfig()
+    # Training always FSDPs (master weights + moments dwarf HBM otherwise).
+    # Serving keeps weights TP-sharded and DP-replicated when they fit
+    # (no per-layer all-gathers on the decode path); the big archs
+    # (>8 GiB/chip at TP-16 in bf16) shard the non-TP dim over dp as well.
+    serve_bytes_per_chip = cfg.n_params * 2 / mesh.shape["model"]
+    fsdp = kind == "train" or serve_bytes_per_chip > 8e9
+    if kind in ("train", "prefill"):
+        # Megatron SP on the inter-block carry (remat storage /= |model|)
+        cfg = dataclasses.replace(cfg, seq_shard_axis="model",
+                                  batch_shard_axes=tuple(dp_axes(mesh)))
+    if cfg.n_experts:
+        # grouped MoE dispatch: one group per dp shard + constraint axes.
+        # When E < |model|, split experts into F-slice virtual experts so the
+        # expert dim divides the model axis (pure EP — no xb-grad all-reduce).
+        dp = dp_axes(mesh)
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        m = mesh.shape["model"]
+        split = 1
+        if cfg.n_experts % m != 0 and m % cfg.n_experts == 0 \
+                and cfg.d_ff % (m // cfg.n_experts) == 0:
+            split = m // cfg.n_experts
+        e_div = (cfg.n_experts * split) % m == 0
+        # decode steps route T = batch tokens; groups must divide T (B=1
+        # long-context decode ⇒ a single dispatch group)
+        import math as _math
+        n_tokens = specs["tokens"].shape[0] if kind == "decode" else n_dp
+        groups = _math.gcd(n_dp, n_tokens) if kind == "decode" else n_dp
+        cfg = dataclasses.replace(
+            cfg, moe_groups=groups, moe_dp_axes=tuple(dp), moe_virtual_split=split,
+            moe_expert_axis="model" if e_div else None,
+            moe_tp_axis=None if e_div else "model")
+    p_specs = shard_rules.lm_param_specs(cfg, mesh, fsdp=fsdp)
+    params_sds = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(lambda: init_state(params_sds))
+        o_specs = shard_rules.opt_state_specs(p_specs)
+        b_specs = shard_rules.lm_batch_specs(mesh)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(T.loss_fn)(
+                params, batch["tokens"], batch["labels"], cfg)
+            params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics}
+
+        return (train_step, (params_sds, opt_sds, specs),
+                (p_specs, o_specs, b_specs), (p_specs, o_specs, _metric_specs()))
+
+    params_bf16 = _cast_float_sds(params_sds, jnp.bfloat16)
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return T.prefill(params, batch["tokens"], cfg)
+
+        return (prefill_step, (params_bf16, specs),
+                (p_specs, {"tokens": P(dp_axes(mesh), None)}), None)
+
+    # decode
+    B = specs["tokens"].shape[0]
+    cache_sds = specs["cache"]
+    max_len = max(c["k"].shape[2] for k, c in cache_sds.items() if k != "cur")
+    c_specs = shard_rules.lm_cache_specs(cfg, mesh, B, max_len)
+
+    def serve_step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg)
+
+    return (serve_step, (params_bf16, cache_sds, specs["tokens"]),
+            (p_specs, c_specs, P(dp_axes(mesh) if B >= 16 else None, None)),
+            (None, c_specs))
+
+
+# -------------------------------------------------------------------- GNN
+def _gnn_cell(arch_mod, cfg, kind: str, specs, mesh):
+    model_name = arch_mod.MODEL
+    opt_cfg = AdamWConfig(lr=1e-3)
+
+    if model_name == "graphcast":
+        from repro.models import graphcast as M
+        loss = M.loss_fn
+        cfg = dataclasses.replace(cfg, dp_axes=tuple(dp_axes(mesh)), tp_axis="model")
+        b_specs = shard_rules.gc_batch_specs(mesh, specs)
+    else:
+        from repro.models import dimenet, gcn, mace
+        M = {"gcn": gcn, "mace": mace, "dimenet": dimenet}[model_name]
+        loss = M.loss_fn
+        b_specs = shard_rules.gnn_batch_specs(mesh, specs)
+
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = shard_rules.gnn_param_specs(params_sds, mesh)
+    opt_sds = jax.eval_shape(lambda: init_state(params_sds))
+    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+
+    def train_step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch, cfg)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": l, **metrics}
+
+    return (train_step, (params_sds, opt_sds, specs),
+            (p_specs, o_specs, b_specs), (p_specs, o_specs, _metric_specs()))
+
+
+# ------------------------------------------------------------------- DLRM
+def _recsys_cell(arch_mod, cfg, kind: str, specs, mesh):
+    from repro.models import dlrm as M
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = shard_rules.dlrm_param_specs(mesh)
+    dp = dp_axes(mesh)
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(lambda: init_state(params_sds))
+        o_specs = shard_rules.opt_state_specs(p_specs)
+        b_specs = shard_rules.dlrm_batch_specs(mesh)
+
+        def train_step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(M.loss_fn)(
+                params, batch["dense"], batch["sparse"], batch["labels"], cfg)
+            params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": l, **metrics}
+
+        return (train_step, (params_sds, opt_sds, specs),
+                (p_specs, o_specs, b_specs), (p_specs, o_specs, _metric_specs()))
+
+    params_bf16 = _cast_float_sds(params_sds, jnp.bfloat16)
+    if kind == "retrieval":
+        def retrieval_step(params, batch):
+            return M.retrieval_scores(params, batch["dense"], batch["sparse"],
+                                      batch["candidates"], cfg)
+
+        b_specs = {"dense": P(None, None), "sparse": P(None, None, None),
+                   "candidates": P(dp + ("model",), None)}
+        return (retrieval_step, (params_bf16, specs), (p_specs, b_specs), None)
+
+    def serve_step(params, batch):
+        return M.forward(params, batch["dense"], batch["sparse"], cfg)
+
+    b_specs = {"dense": P(dp, None), "sparse": P(dp, None, None)}
+    return (serve_step, (params_bf16, specs), (p_specs, b_specs), P(dp))
+
+
+def build_cell(arch_id: str, shape_name: str, mesh):
+    """Resolve one dry-run cell: returns None for skipped cells, else
+    (kind, step_fn, abstract_args, in_specs, out_specs, cfg)."""
+    from repro.configs.registry import cell_specs, get_arch
+
+    kind, specs, cfg = cell_specs(arch_id, shape_name)
+    if kind is None:
+        return None
+    mod = get_arch(arch_id)
+    fam = mod.FAMILY
+    builder = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell}[fam]
+    step_fn, args, in_specs, out_specs = builder(mod, cfg, kind, specs, mesh)
+    return kind, step_fn, args, in_specs, out_specs, cfg

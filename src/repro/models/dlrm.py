@@ -1,0 +1,115 @@
+"""DLRM RM2 (arXiv:1906.00091) — sparse embedding tables + dot interaction.
+
+Assigned config: 13 dense features, 26 sparse fields, embed_dim=64,
+bottom MLP 13-512-256-64, top MLP 512-512-256-1, dot interaction.
+
+The embedding lookup is the hot path.  JAX has no native EmbeddingBag —
+multi-hot bags are implemented as ``jnp.take`` + ``segment_sum`` (and the
+Pallas ``embedding_bag`` kernel), which is **the DIP-LIST query generalized**
+from OR-mask to weighted sum: offsets+values CSR per sample-field, reduce by
+segment (DESIGN.md §4).  Tables are row-sharded over the ``model`` axis (the
+paper's entity-dimension distribution rule applied to vocab rows).
+
+``retrieval_cand`` scores one query against 10⁶ candidates: blocked matvec
+against the candidate embedding matrix + top-k — not a loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn_common import init_mlp_stack, mlp_stack
+from repro.nn.layers import init_linear, linear
+
+__all__ = ["DLRMConfig", "init_params", "forward", "loss_fn", "retrieval_scores"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_size: int = 1_000_000       # rows per table
+    bot_mlp: Tuple[int, ...] = (13, 512, 256, 64)
+    top_mlp: Tuple[int, ...] = (512, 512, 256, 1)
+    interaction: str = "dot"
+    multi_hot: int = 1                # indices per bag (1 ⇒ one-hot lookup)
+    dtype: Any = jnp.float32
+    embed_impl: str = "take"          # 'take' | 'kernel' (Pallas embedding_bag)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.n_interact + self.embed_dim
+
+
+def init_params(key, cfg: DLRMConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    tables = (
+        jax.random.normal(ks[0], (cfg.n_sparse, cfg.vocab_size, cfg.embed_dim), jnp.float32)
+        * (cfg.embed_dim ** -0.5)
+    )
+    top_dims = (cfg.top_in,) + tuple(cfg.top_mlp[1:])
+    return {
+        "tables": tables,
+        "bot": init_mlp_stack(ks[1], list(cfg.bot_mlp)),
+        "top": init_mlp_stack(ks[2], list(top_dims)),
+    }
+
+
+def _embedding_bag(tables, idx, cfg: DLRMConfig):
+    """idx: (B, n_sparse, multi_hot) → (B, n_sparse, embed_dim) mean-bags."""
+    if cfg.embed_impl == "kernel":
+        from repro.kernels.embedding_bag import ops as _ops
+
+        return _ops.embedding_bag_fields(tables, idx)
+    # vectorized take: one gather per field batched via vmap over fields
+    def per_field(table, ix):  # table (V, D); ix (B, multi_hot)
+        emb = jnp.take(table, ix, axis=0)  # (B, mh, D)
+        return jnp.mean(emb, axis=1)
+
+    return jnp.swapaxes(jax.vmap(per_field)(tables, jnp.swapaxes(idx, 0, 1)), 0, 1)
+
+
+def _interact(dense_emb, sparse_emb):
+    """Dot interaction: pairwise dots of the 27 embedding vectors (upper tri)."""
+    B = dense_emb.shape[0]
+    z = jnp.concatenate([dense_emb[:, None, :], sparse_emb], axis=1)  # (B, F, D)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)
+    f = z.shape[1]
+    iu, ju = jnp.triu_indices(f, k=1)
+    return zz[:, iu, ju]  # (B, F(F-1)/2)
+
+
+def forward(params: Dict, dense: jax.Array, sparse_idx: jax.Array, cfg: DLRMConfig) -> jax.Array:
+    """dense: (B, 13) f32; sparse_idx: (B, 26, multi_hot) int32 → (B,) logits."""
+    d = mlp_stack(params["bot"], dense.astype(cfg.dtype), final_act=True)  # (B, 64)
+    s = _embedding_bag(params["tables"], sparse_idx, cfg).astype(cfg.dtype)
+    inter = _interact(d, s)
+    top_in = jnp.concatenate([d, inter], axis=-1)
+    return mlp_stack(params["top"], top_in)[:, 0]
+
+
+def loss_fn(params: Dict, dense, sparse_idx, labels, cfg: DLRMConfig) -> jax.Array:
+    logit = forward(params, dense, sparse_idx, cfg).astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def retrieval_scores(params: Dict, dense: jax.Array, sparse_idx: jax.Array,
+                     candidates: jax.Array, cfg: DLRMConfig, *, top_k: int = 100):
+    """Score one query against (n_cand, embed_dim) candidates: blocked matvec
+    + top-k.  dense: (1, 13); sparse_idx: (1, 26, mh)."""
+    d = mlp_stack(params["bot"], dense.astype(cfg.dtype), final_act=True)
+    s = _embedding_bag(params["tables"], sparse_idx, cfg).astype(cfg.dtype)
+    q = d + jnp.sum(s, axis=1)  # (1, D) pooled query embedding
+    scores = (candidates.astype(cfg.dtype) @ q[0]).astype(jnp.float32)  # (n_cand,)
+    return jax.lax.top_k(scores, top_k)

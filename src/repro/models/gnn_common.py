@@ -1,0 +1,70 @@
+"""Shared containers/utilities for the GNN model family.
+
+``GraphBatch`` is the uniform device-side graph: DI-ordered edge arrays + node
+features + masks.  Batched small graphs (the ``molecule`` shape) are flattened
+with ``graph_ids`` for segment readout; sampled minibatches (``minibatch_lg``)
+arrive as one compacted subgraph produced by ``repro.graph.sampler`` (static
+worst-case shapes for the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import init_linear, linear
+
+__all__ = ["GraphBatch", "init_mlp_stack", "mlp_stack"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["x", "pos", "species", "edge_src", "edge_dst", "edge_attr", "edge_mask",
+                 "node_mask", "labels", "graph_ids"],
+    meta_fields=["n_nodes", "n_edges", "n_graphs"],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """One (possibly batched/flattened) graph.
+
+    x:         (N, F) float features, or None (equivariant models use species+pos)
+    pos:       (N, 3) positions or None
+    species:   (N,) int atomic types or None
+    edge_src/edge_dst: (E,) int32 — DI order (sorted by src)
+    edge_attr: (E, Fe) or None
+    edge_mask: (E,) bool — padding slots False
+    node_mask: (N,) bool
+    labels:    (N,) node labels / (G,) graph targets / (N, F) regression targets
+    graph_ids: (N,) int32 graph membership for readout (zeros if single graph)
+    """
+
+    x: Optional[jax.Array]
+    pos: Optional[jax.Array]
+    species: Optional[jax.Array]
+    edge_src: jax.Array
+    edge_dst: jax.Array
+    edge_attr: Optional[jax.Array]
+    edge_mask: jax.Array
+    node_mask: jax.Array
+    labels: jax.Array
+    graph_ids: jax.Array
+    n_nodes: int
+    n_edges: int
+    n_graphs: int
+
+
+def init_mlp_stack(key, dims, *, bias: bool = True):
+    """[d0→d1→…] MLP params (SiLU between)."""
+    ks = jax.random.split(key, len(dims) - 1)
+    return [init_linear(k, dims[i], dims[i + 1], bias=bias) for i, k in enumerate(ks)]
+
+
+def mlp_stack(params, x, *, act=jax.nn.silu, final_act: bool = False):
+    for i, p in enumerate(params):
+        x = linear(p, x)
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,379 @@
+"""Decoder-only transformer family covering the five assigned LM architectures.
+
+One implementation, config-selected features:
+  * GQA (n_kv_heads < n_heads), RoPE, optional QKV bias (Qwen2)
+  * sliding-window attention + local/global layer alternation (Mixtral, Gemma-2)
+  * attn/final logit softcap + post-norms + GeGLU (Gemma-2)
+  * MoE FFN with top-k routing (Mixtral 8e/top-2, DBRX 16e/top-4)
+
+Layers are grouped into a repeating *pattern* (e.g. ``("local","global")`` for
+Gemma-2) and scanned with ``lax.scan`` over stacked group params — essential to
+keep HLO size and compile time flat in depth (80-layer Qwen2-72B compiles the
+same program as an 8-layer toy).  ``jax.checkpoint`` on the group body gives
+the standard per-layer remat policy for training.
+
+Decode uses ring-buffer KV caches for windowed layers (cache length = window)
+and linear caches for global layers — this is what makes ``long_500k`` legal
+for the SWA archs (window-bounded local caches) as recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import attention
+from repro.nn.layers import init_linear, init_mlp, init_rmsnorm, linear, mlp, rmsnorm, rope, softcap
+from repro.nn.moe import init_moe, moe_ffn
+
+__all__ = ["TransformerConfig", "init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention features
+    rope_theta: float = 10000.0
+    window: Optional[int] = None            # sliding-window width for local layers
+    pattern: Tuple[str, ...] = ("global",)  # repeating layer pattern
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    qkv_bias: bool = False
+    post_norms: bool = False                # gemma-2 post-attn/post-ffn norms
+    # ffn
+    act: str = "silu"
+    gated: bool = True
+    # moe (None ⇒ dense)
+    n_experts: Optional[int] = None
+    top_k: int = 2
+    moe_renorm: str = "topk"
+    capacity_factor: float = 1.25
+    # grouped dispatch (GShard 'G' dim): groups = dp shards; axes for
+    # with_sharding_constraint annotations (set by the launch layer)
+    moe_groups: int = 1
+    moe_dp_axes: Optional[Tuple[str, ...]] = None
+    moe_expert_axis: Optional[str] = None
+    moe_tp_axis: Optional[str] = None
+    moe_virtual_split: int = 1   # F-slice virtual experts (see nn/moe.py)
+    # Megatron sequence parallelism: shard the seq dim of inter-block
+    # activations over this axis — the remat-stored per-layer carry shrinks
+    # |model|×; SP all-gather/reduce-scatter collectives appear per block
+    # (set by the launch layer for training)
+    seq_shard_axis: Optional[str] = None
+    batch_shard_axes: Optional[Tuple[str, ...]] = None
+    # embedding
+    scale_embed: bool = False               # gemma multiplies by sqrt(d)
+    tie_embeddings: bool = False
+    # numerics / runtime
+    dtype: Any = jnp.bfloat16
+    attn_impl: str = "auto"
+    attn_chunk: int = 1024
+    loss_chunk: int = 1024                  # sequence chunking for lm-head+loss
+    remat: bool = True
+    remat_policy: str = "full"              # 'full' | 'dots' (save matmul outputs)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (self.n_layers, self.pattern)
+        return self.n_layers // len(self.pattern)
+
+    def layer_window(self, kind: str) -> Optional[int]:
+        return self.window if kind == "local" else None
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for 6·N·D roofline accounting)."""
+        c = self
+        attn = c.d_model * c.d_head * (c.n_heads + 2 * c.n_kv_heads) + c.n_heads * c.d_head * c.d_model
+        if c.n_experts:
+            ffn = c.n_experts * c.d_model * c.d_ff * (3 if c.gated else 2) + c.d_model * c.n_experts
+        else:
+            ffn = c.d_model * c.d_ff * (3 if c.gated else 2)
+        per_layer = attn + ffn + 2 * c.d_model
+        embed = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        return c.n_layers * per_layer + embed
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        c = self
+        attn = c.d_model * c.d_head * (c.n_heads + 2 * c.n_kv_heads) + c.n_heads * c.d_head * c.d_model
+        if c.n_experts:
+            ffn = c.top_k * c.d_model * c.d_ff * (3 if c.gated else 2) + c.d_model * c.n_experts
+        else:
+            ffn = c.d_model * c.d_ff * (3 if c.gated else 2)
+        per_layer = attn + ffn + 2 * c.d_model
+        embed = c.vocab * c.d_model * (1 if c.tie_embeddings else 2)
+        return c.n_layers * per_layer + embed
+
+
+# --------------------------------------------------------------------------- init
+def _init_layer(key, cfg: TransformerConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "ln1": init_rmsnorm(d),
+        "wq": init_linear(ks[0], d, hq * dh, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, hkv * dh, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, hkv * dh, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], hq * dh, d),
+        "ln2": init_rmsnorm(d),
+    }
+    if cfg.post_norms:
+        p["ln1b"] = init_rmsnorm(d)
+        p["ln2b"] = init_rmsnorm(d)
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[4], d, cfg.d_ff, cfg.n_experts, gated=cfg.gated,
+                            virtual_split=cfg.moe_virtual_split)
+    else:
+        p["mlp"] = init_mlp(ks[5], d, cfg.d_ff, gated=cfg.gated, act=cfg.act)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Dict:
+    """Group params are stacked over n_groups (scan axis 0)."""
+    ke, kh, *kl = jax.random.split(key, 2 + len(cfg.pattern))
+    groups = []
+    for i, _ in enumerate(cfg.pattern):
+        def one(k):
+            return _init_layer(k, cfg)
+        keys = jax.random.split(kl[i], cfg.n_groups)
+        groups.append(jax.vmap(one)(keys))
+    p = {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "groups": groups,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(kh, cfg.d_model, cfg.vocab)
+    return p
+
+
+# ----------------------------------------------------------------------- forward
+def _attn_block(lp, x, cfg: TransformerConfig, kind: str, *, positions, cache=None,
+                cache_slot=None):
+    """Pre-norm attention with optional cache read/write.  Returns (y, new_kv)."""
+    B, S, D = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    h = rmsnorm(lp["ln1"], x, plus_one=cfg.post_norms)
+    q = linear(lp["wq"], h).reshape(B, S, hq, dh)
+    k = linear(lp["wk"], h).reshape(B, S, hkv, dh)
+    v = linear(lp["wv"], h).reshape(B, S, hkv, dh)
+    q = rope(q, positions, theta=cfg.rope_theta)
+    k = rope(k, positions, theta=cfg.rope_theta)
+    window = cfg.layer_window(kind)
+
+    if cache is None:
+        o = attention(q, k, v, causal=True, window=window, cap=cfg.attn_softcap,
+                      impl=cfg.attn_impl, chunk=cfg.attn_chunk)
+        new_kv = (k, v)
+    else:
+        # decode: per-layer cache slice rides scan xs/ys — this bounds the
+        # GSPMD write-amplification of DUS-at-traced-offset to ONE layer slice
+        # per step (the carry-the-full-stack variant full-buffer-selects and
+        # copy-protects the whole (G,·) stack per layer: measured 8× worse;
+        # §Perf log).  Dots stay in cache dtype with f32 accumulation.
+        ck, cv, cur = cache  # ck: (B, Scache, hkv, dh); cur: absolute position
+        Sc = ck.shape[1]
+        if window is not None and Sc == window:
+            slot = cur % window
+        else:
+            slot = cur
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        if window is not None and Sc == window:
+            # ring buffer: slot i holds absolute position cur - ((cur - i) mod W)
+            i = jnp.arange(Sc)
+            k_pos = cur - jnp.mod(cur - i, window)
+            valid = k_pos >= 0
+        else:
+            i = jnp.arange(Sc)
+            k_pos = i
+            valid = i <= cur
+        o = _decode_attend(q, ck, cv, k_pos, valid, cur, cfg)
+        new_kv = (ck, cv)
+
+    o = linear(lp["wo"], o.reshape(B, S, hq * dh))
+    if cfg.post_norms:
+        o = rmsnorm(lp["ln1b"], o, plus_one=True)
+    return o, new_kv
+
+
+def _decode_attend(q, ck, cv, k_pos, valid, cur, cfg: TransformerConfig):
+    """Direct attention against a (possibly ring-buffered) cache with explicit
+    per-slot absolute positions.  q: (B, 1, Hq, D).
+
+    Dots run in the cache's native dtype with f32 accumulation
+    (preferred_element_type) — casting k/v to f32 materializes a full f32 copy
+    of the cache in HBM (measured 20× traffic blowup in the dry-run; §Perf)."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = ck.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(ck.dtype)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    s = softcap(s, cfg.attn_softcap)
+    ok = valid & (k_pos <= cur)
+    s = jnp.where(ok[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def _ffn_block(lp, x, cfg: TransformerConfig):
+    h = rmsnorm(lp["ln2"], x, plus_one=cfg.post_norms)
+    if cfg.n_experts:
+        B, S, D = h.shape
+        shard_axes = None
+        if cfg.moe_dp_axes is not None:
+            shard_axes = {"dp": cfg.moe_dp_axes, "expert": cfg.moe_expert_axis,
+                          "tp": cfg.moe_tp_axis}
+        y, aux = moe_ffn(lp["moe"], h.reshape(B * S, D), top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, renorm=cfg.moe_renorm,
+                         n_groups=cfg.moe_groups, virtual_split=cfg.moe_virtual_split,
+                         shard_axes=shard_axes)
+        y = y.reshape(B, S, D)
+    else:
+        y, aux = mlp(lp["mlp"], h, act=cfg.act), 0.0
+    if cfg.post_norms:
+        y = rmsnorm(lp["ln2b"], y, plus_one=True)
+    return y, aux
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: TransformerConfig) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill forward.  tokens: (B, S) → (hidden (B,S,D), aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    positions = jnp.arange(S)[None, :]
+
+    def sp(x):
+        # sequence-parallel carry: remat stores (B/dp, S/model, D) per group
+        if cfg.seq_shard_axis is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            x, P(cfg.batch_shard_axes, cfg.seq_shard_axis, None))
+
+    def group_body(carry, gparams):
+        x, aux = carry
+        for kind, lp in zip(cfg.pattern, gparams):
+            a, _ = _attn_block(lp, x, cfg, kind, positions=positions)
+            x = x + a
+            f, a_aux = _ffn_block(lp, x, cfg)
+            x = sp(x + f)
+            aux = aux + a_aux
+        return (x, aux), None
+
+    if cfg.remat and cfg.remat_policy == "dots":
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat:
+        body = jax.checkpoint(group_body)
+    else:
+        body = group_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), tuple(params["groups"]))
+    x = rmsnorm(params["final_norm"], x, plus_one=cfg.post_norms)
+    return x, aux / cfg.n_layers
+
+
+def _logits(params, h, cfg: TransformerConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    lg = h @ w.astype(h.dtype)
+    return softcap(lg, cfg.final_softcap)
+
+
+def loss_fn(params: Dict, tokens: jax.Array, labels: jax.Array, cfg: TransformerConfig):
+    """Chunked LM loss: the (B,S,V) logits tensor is never materialized; the
+    head+softmax run per sequence chunk inside a scan (memory-roofline lever)."""
+    h, aux = forward(params, tokens, cfg)
+    B, S, D = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    n_chunks = S // chunk
+    hc = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    lc = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def step(tot, xs):
+        hb, lb = xs  # (B, chunk, D), (B, chunk)
+        lg = _logits(params, hb, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        true = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - true), None
+
+    tot, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, lc))
+    loss = tot / (B * n_chunks * chunk)
+    return loss + 0.01 * aux
+
+
+# ------------------------------------------------------------------------ decode
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None) -> Dict:
+    """Stacked caches per pattern position.  Windowed layers get ring buffers of
+    length min(window, max_len); global layers full max_len."""
+    dtype = dtype or cfg.dtype
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        w = cfg.layer_window(kind)
+        L = min(w, max_len) if w is not None else max_len
+        caches[f"pos{i}"] = {
+            "k": jnp.zeros((cfg.n_groups, batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((cfg.n_groups, batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+        }
+    caches["cur"] = jnp.zeros((), jnp.int32)
+    return caches
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array, cfg: TransformerConfig):
+    """One decode step.  tokens: (B, 1) → (logits (B, 1, V), new cache).
+
+    Per-layer cache slices ride scan xs/ys (see _attn_block decode note)."""
+    B, S = tokens.shape
+    assert S == 1
+    cur = cache["cur"]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    positions = jnp.full((B, 1), cur, jnp.int32)
+
+    def group_body(carry, xs):
+        x = carry
+        gparams, gcache = xs
+        new_kv = {}
+        for i, (kind, lp) in enumerate(zip(cfg.pattern, gparams)):
+            c = gcache[f"pos{i}"]
+            a, (ck, cv) = _attn_block(
+                lp, x, cfg, kind, positions=positions, cache=(c["k"], c["v"], cur)
+            )
+            x = x + a
+            f, _ = _ffn_block(lp, x, cfg)
+            x = x + f
+            new_kv[f"pos{i}"] = {"k": ck, "v": cv}
+        return x, new_kv
+
+    gcaches = {k: v for k, v in cache.items() if k != "cur"}
+    x, new_caches = jax.lax.scan(group_body, x, (tuple(params["groups"]), gcaches))
+    x = rmsnorm(params["final_norm"], x, plus_one=cfg.post_norms)
+    logits = _logits(params, x, cfg)
+    new_caches["cur"] = cur + 1
+    return logits, new_caches
+
+
+def prefill(params: Dict, tokens: jax.Array, cfg: TransformerConfig):
+    """Prefill forward: returns last-position logits (the cache write-back is
+    shape-identical to init_cache and omitted from the lowered artifact — the
+    roofline-relevant work is the forward itself)."""
+    h, _ = forward(params, tokens, cfg)
+    return _logits(params, h[:, -1:, :], cfg)

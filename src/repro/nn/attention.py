@@ -1,0 +1,139 @@
+"""Attention — XLA reference paths (direct + KV-chunked online-softmax) and the
+Pallas flash kernel dispatch.
+
+Supports: causal masking, sliding-window (SWA), Gemma-2 logit softcap, GQA
+(n_kv_heads < n_heads), decode with query offset against a KV cache.
+
+``impl`` selection:
+  * ``direct``  — materializes (Sq, Skv) scores; fine for short sequences.
+  * ``chunked`` — lax.scan over KV chunks with running (max, denom, acc):
+    FlashAttention's algorithm expressed in XLA.  This is what the dry-run
+    lowers (no O(S²) intermediate ⇒ honest memory roofline), and it is the
+    §Perf "chunked attention" lever.
+  * ``flash``   — Pallas TPU kernel (repro/kernels/flash_attention), interpret
+    mode on CPU; numerically validated against ``direct`` in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import softcap as _softcap
+
+__all__ = ["attention"]
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(…, Sq, Skv) additive mask bias from position grids."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), jnp.bool_)
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _direct(q, k, v, *, causal, window, cap, q_offset, kv_len=None):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(k.dtype)
+    scale = D ** -0.5
+    # native-dtype dot, f32 accumulation: no materialized f32 copies of K/V
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, cap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    if kv_len is not None:  # decode: mask beyond current cache fill
+        s = jnp.where(k_pos[None, None, None, None, :] < kv_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def _chunked(q, k, v, *, causal, window, cap, q_offset, kv_len=None, chunk: int = 1024):
+    """Online-softmax over KV chunks (flash algorithm in XLA)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(k.dtype)
+    scale = D ** -0.5
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs  # kb: (B, chunk, Hkv, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, cap)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+        s = s + bias
+        valid_len = Skv if kv_len is None else kv_len
+        s = jnp.where(k_pos[None, None, None, None, :] < valid_len, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+    )
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    q_offset=0,
+    kv_len=None,
+    impl: str = "auto",
+    chunk: int = 1024,
+) -> jax.Array:
+    """q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D) → (B,Sq,Hq,D)."""
+    Skv = k.shape[1]
+    if impl == "auto":
+        impl = "direct" if (q.shape[1] * Skv <= 1024 * 2048) else "chunked"
+    if impl == "direct":
+        return _direct(q, k, v, causal=causal, window=window, cap=cap,
+                       q_offset=q_offset, kv_len=kv_len)
+    if impl == "chunked":
+        return _chunked(q, k, v, causal=causal, window=window, cap=cap,
+                        q_offset=q_offset, kv_len=kv_len, chunk=min(chunk, Skv))
+    if impl == "flash":
+        from repro.kernels.flash_attention import ops as _ops
+
+        return _ops.flash_attention(q, k, v, causal=causal, window=window, cap=cap,
+                                    q_offset=q_offset)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,125 @@
+"""Shared neural-net layers — functional (init/apply), params as plain pytrees.
+
+No flax/haiku dependency: every layer is ``init_*(key, ...) -> params`` plus a
+pure apply function, so params compose into nested dicts that pjit shards via
+PartitionSpec trees (see repro/launch/sharding.py).  Computation dtype is
+bf16 by default with f32 accumulation/normalization, matching TPU practice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_linear",
+    "linear",
+    "init_rmsnorm",
+    "rmsnorm",
+    "init_layernorm",
+    "layernorm",
+    "init_mlp",
+    "mlp",
+    "rope",
+    "softcap",
+]
+
+Dtype = jnp.dtype
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False, scale: Optional[float] = None,
+                dtype=jnp.float32):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = p["scale"].astype(jnp.float32)
+    s = 1.0 + s if plus_one else s  # gemma convention stores scale-1
+    return (y * s).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _act(name: str, x):
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def init_mlp(key, d_model: int, d_ff: int, *, gated: bool, act: str = "silu", dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k2, d_ff, d_model, dtype=dtype),
+        "act": act,  # static string survives as aux? no — keep out of pytree
+    }
+    p.pop("act")
+    if gated:
+        p["gate"] = init_linear(k3, d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, act: str = "silu"):
+    h = linear(p["up"], x)
+    if "gate" in p:
+        h = _act(act, linear(p["gate"], x)) * h
+    else:
+        h = _act(act, h)
+    return linear(p["down"], h)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.  x: (..., seq, n_heads, d_head); positions
+    broadcastable to (..., seq).  Pairs (even, odd) halves — GPT-NeoX layout.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap·tanh(x/cap).  None ⇒ identity."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts FFN — grouped top-k routing with capacity (GShard layout).
+
+TPU-native formulation with two deliberate design points:
+
+1. **Grouped dispatch** (the GShard/t5x 'G' dim): tokens are split into
+   ``n_groups`` dispatch groups — one per data-parallel shard — and routing
+   positions/capacity are computed *within* each group, so the dispatch
+   buffers are (G, E, C_g, D) with G sharded over the dp axes.  A single
+   global-capacity buffer cannot be sharded by GSPMD (scatter positions span
+   all of C) and replicates: measured 337 GiB/device on mixtral train_4k
+   vs 5 GiB grouped (§Perf log).
+
+2. **Scatter-based dispatch** instead of the classic dense one-hot einsums:
+   O(T·k·D) instead of O(T·E·C·D) FLOPs; lowers to the same collective
+   pattern.  (``dispatch='einsum'`` keeps the dense A/B baseline.)
+
+Routing: softmax over top-k logits (Mixtral) or full-softmax-then-top-k
+(DBRX) via ``renorm``.  Tokens beyond per-group capacity C_g are dropped
+(standard static-shape TPU behavior).  Switch-style aux loss returned.
+``shard_axes`` (optional, static) adds with_sharding_constraint annotations:
+{'dp': (axis, ...), 'expert': axis|None, 'tp': axis|None}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.layers import init_linear
+
+__all__ = ["init_moe", "moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int, factor: float = 1.25) -> int:
+    c = int(n_tokens * top_k / n_experts * factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *, gated: bool = True,
+             virtual_split: int = 1, dtype=jnp.float32) -> Dict:
+    """virtual_split=s stores each expert as s F-slices ("virtual experts"):
+    weights (E·s, D, F/s).  Exact for (gated) MLPs — silu/mul/down partial
+    sums over F-slices add — and it makes E·s divide the model axis so the
+    dispatch buffers shard as pure EP (no cross-TP xb-grad all-reduce in the
+    backward: measured 420 GB/layer on mixtral train_4k with F-TP; §Perf)."""
+    ks = jax.random.split(key, 4)
+    scale = d_model ** -0.5
+    s = virtual_split
+    assert d_ff % s == 0
+    ev, ffv = n_experts * s, d_ff // s
+    p = {
+        "router": init_linear(ks[0], d_model, n_experts, dtype=dtype),
+        "up": jax.random.normal(ks[1], (ev, d_model, ffv), dtype) * scale,
+        "down": jax.random.normal(ks[2], (ev, ffv, d_model), dtype) * (d_ff ** -0.5),
+    }
+    if gated:
+        p["gate"] = jax.random.normal(ks[3], (ev, d_model, ffv), dtype) * scale
+    return p
+
+
+def _constrain(x, spec: Optional[P]):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_ffn(
+    p: Dict,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    renorm: str = "topk",  # 'topk' (Mixtral) | 'full' (DBRX)
+    act=jax.nn.silu,
+    dispatch: str = "scatter",
+    n_groups: int = 1,
+    virtual_split: int = 1,
+    shard_axes: Optional[dict] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, D) tokens → (out (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    s = virtual_split
+    EV = p["up"].shape[0]          # virtual experts = E·s
+    E = EV // s                    # routed (real) experts
+    G = max(1, n_groups)
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    C = moe_capacity(Tg, E, top_k, capacity_factor)
+
+    dp_ax = e_ax = tp_ax = None
+    if shard_axes:
+        dp_ax = shard_axes.get("dp")
+        e_ax = shard_axes.get("expert")   # axis for the VIRTUAL expert dim
+        tp_ax = shard_axes.get("tp")
+    # real-expert buffers: expert dim when it divides (s==1), else capacity dim
+    # over the expert axis (keeps fwd/bwd xb shards local; the E-replicated
+    # form all-gathers 4 GiB f32 per layer in the backward — §Perf log)
+    spec_xb = P(dp_ax, e_ax if s == 1 else None, None if s == 1 else e_ax, None) \
+        if shard_axes else None
+    spec_xbv = P(dp_ax, e_ax, None, None) if shard_axes else None
+    spec_h = P(dp_ax, e_ax, None, tp_ax) if shard_axes else None
+    spec_tok = P(dp_ax, None, None) if shard_axes else None
+
+    xg = _constrain(x.reshape(G, Tg, D), spec_tok)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    if renorm == "full":
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, idx = jax.lax.top_k(probs, top_k)  # (G, Tg, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    else:
+        top_logits, idx = jax.lax.top_k(logits, top_k)
+        gate_vals = jax.nn.softmax(top_logits, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch aux loss (per group, then mean): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=1)  # (G, E)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2), axis=1)
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # --- per-group buffer positions: choice-major priority (GShard) ---------
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # (G, Tg, k, E)
+    ohf = jnp.swapaxes(oh, 1, 2).reshape(G, top_k * Tg, E)
+    pos_all = jnp.cumsum(ohf, axis=1) - 1
+    pos_flat = jnp.sum(pos_all * ohf, axis=-1)  # (G, k·Tg)
+    e_flat = jnp.swapaxes(idx, 1, 2).reshape(G, -1)
+    g_flat = jnp.swapaxes(gate_vals, 1, 2).reshape(G, -1)
+    keep = pos_flat < C
+    tok_flat = jnp.tile(jnp.arange(Tg), (top_k,))  # (k·Tg,) within-group token
+
+    if dispatch == "einsum":
+        disp = (
+            jax.nn.one_hot(e_flat, E, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos_flat, C), C + 1, dtype=x.dtype)[..., None, :C]
+        )  # (G, k·Tg, E, C)
+        xb = jnp.einsum("gtec,gtd->gecd", disp, xg[:, tok_flat])
+    else:
+        # index-scatter + data-GATHER dispatch: the only scatter touches tiny
+        # (E, C) int32 slot tables; token features then arrive via gather,
+        # which GSPMD partitions freely on output dims.  Scattering the (E,C,D)
+        # feature buffers directly replicates them across 'model' and drags
+        # f32/u32 companion scatters through the backward (measured 420 GiB/
+        # layer on mixtral train_4k; §Perf log).
+        e_safe = jnp.where(keep, e_flat, E - 1)
+        c_safe = jnp.where(keep, pos_flat, C)  # C is OOB ⇒ dropped (mode='drop')
+
+        def slots_group(es, cs, tf, kp):
+            slot_tok = jnp.zeros((E, C), jnp.int32).at[es, cs].set(tf, mode="drop")
+            slot_ok = jnp.zeros((E, C), jnp.bool_).at[es, cs].set(kp, mode="drop")
+            return slot_tok, slot_ok
+
+        slot_tok, slot_ok = jax.vmap(slots_group)(
+            e_safe, c_safe, jnp.broadcast_to(tok_flat, e_safe.shape), keep)
+
+        def gather_group(xg_g, st, so):
+            return xg_g[st] * so[..., None].astype(x.dtype)
+
+        xb = jax.vmap(gather_group)(xg, slot_tok, slot_ok)
+    xb = _constrain(xb, spec_xb)  # (G, E, C, D)
+
+    # --- virtual expansion: every real expert's buffer feeds its s F-slices ---
+    if s > 1:
+        xb = jnp.broadcast_to(xb[:, :, None], (G, E, s, C, D)).reshape(G, E * s, C, D)
+        xb = _constrain(xb, spec_xbv)
+
+    # --- expert FFN (shared virtual experts, batched over G) ------------------
+    h = jnp.einsum("gecd,edf->gecf", xb, p["up"].astype(x.dtype))
+    if "gate" in p:
+        hg = jnp.einsum("gecd,edf->gecf", xb, p["gate"].astype(x.dtype))
+        h = act(hg) * h
+    else:
+        h = act(h)
+    h = _constrain(h, spec_h)
+    yb = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
+    yb = _constrain(yb, spec_xbv)
+    if s > 1:  # partial outputs over F-slices sum
+        yb = yb.reshape(G, E, s, C, D).sum(axis=2)
+        yb = _constrain(yb, spec_xb)
+
+    # --- combine: gather per token-choice, then sum over the k choices --------
+    # (tok_flat is tile(arange(Tg), k) choice-major ⇒ the per-token sum is a
+    # plain reshape-sum — no scatter anywhere on the combine path)
+    def gather_out(buf_y, es, cs, kp, gv):
+        got = buf_y[jnp.where(kp, es, 0), jnp.where(kp, cs, 0)]  # (k·Tg, D)
+        return got * (gv * kp).astype(x.dtype)[:, None]
+
+    contrib = jax.vmap(gather_out)(yb, e_flat, pos_flat, keep, g_flat)  # (G, k·Tg, D)
+    out = contrib.reshape(G, top_k, Tg, D).sum(axis=1)
+    out = _constrain(out, spec_tok)
+    return out.reshape(T, D), aux

@@ -1,0 +1,57 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+At 1000+-node scale the gradient all-reduce crosses the slowest links (DCI
+between pods); compressing the payload 4× (f32→int8 with per-tensor scale)
+cuts that term directly.  Error feedback (Seide et al. 2014; EF-SGD, Karimireddy
+et al. 2019) accumulates the quantization residual locally and re-injects it
+next step, preserving convergence (contraction-compressor guarantee).
+
+Usage inside a step function::
+
+    comp_grads, new_err = compress_with_feedback(grads, err_state)
+    # all-reduce comp_grads.q (int8) + per-tensor scales, then
+    grads = decompress(comp_grads)
+
+Under pjit the int8 payload shows up in the HLO as an int8 all-reduce —
+4× fewer collective bytes on the dp axis (verified in tests by dtype).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressedGrads", "init_error_state", "compress_with_feedback", "decompress"]
+
+
+class CompressedGrads(NamedTuple):
+    q: Any      # pytree of int8 tensors
+    scale: Any  # pytree of f32 per-tensor scales
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_with_feedback(grads, err_state) -> Tuple[CompressedGrads, Any]:
+    """int8-quantize (grads + carried error); returns compressed grads and the
+    new error state (the residual the quantizer dropped)."""
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err_state)
+    qs = jax.tree.map(_quantize, corrected)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    scale = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    recon = jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scale)
+    new_err = jax.tree.map(lambda c, r: c - r, corrected, recon)
+    return CompressedGrads(q=q, scale=scale), new_err
+
+
+def decompress(comp: CompressedGrads):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, comp.q, comp.scale)

@@ -1,0 +1,82 @@
+"""DI structure: invariants (hypothesis property tests) + behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_di, build_reverse_di, degrees, edge_lookup, neighbors_padded
+
+edges_strategy = st.integers(min_value=1, max_value=300)
+seed_strategy = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _random_edges(m, seed, pool=None):
+    rng = np.random.default_rng(seed)
+    pool = pool or max(2, m)
+    return rng.integers(0, pool, m), rng.integers(0, pool, m)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=edges_strategy, seed=seed_strategy)
+def test_di_invariants(m, seed):
+    """SEG monotone with seg[0]=0, seg[n]=m; SRC sorted; DST sorted per-run;
+    node_map strictly increasing; degrees consistent."""
+    src, dst = _random_edges(m, seed)
+    g = build_di(src, dst)
+    seg = np.asarray(g.seg)
+    s, d = np.asarray(g.src), np.asarray(g.dst)
+    assert seg[0] == 0 and seg[-1] == g.m and (np.diff(seg) >= 0).all()
+    assert (np.diff(s) >= 0).all()
+    for u in np.unique(s):
+        adj = d[seg[u]: seg[u + 1]]
+        assert (np.diff(adj) >= 0).all(), "adjacency list not sorted"
+        assert (s[seg[u]: seg[u + 1]] == u).all()
+    nm = np.asarray(g.node_map)
+    assert (np.diff(nm) > 0).all()
+    out_deg, in_deg = degrees(g)
+    assert int(jnp.sum(out_deg)) == g.m and int(jnp.sum(in_deg)) == g.m
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=edges_strategy, seed=seed_strategy)
+def test_di_roundtrip_edges(m, seed):
+    """The (src, dst) multiset (deduped) survives construction."""
+    src, dst = _random_edges(m, seed)
+    g = build_di(src, dst)
+    nm = np.asarray(g.node_map)
+    got = {(int(nm[a]), int(nm[b])) for a, b in zip(np.asarray(g.src), np.asarray(g.dst))}
+    expect = set(zip(src.tolist(), dst.tolist()))
+    assert got == expect
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=edges_strategy, seed=seed_strategy)
+def test_edge_lookup_total(m, seed):
+    src, dst = _random_edges(m, seed)
+    g = build_di(src, dst)
+    idx = np.asarray(edge_lookup(g, g.src, g.dst))
+    assert (idx == np.arange(g.m)).all()
+
+
+def test_edge_lookup_missing():
+    g = build_di([0, 1, 2], [1, 2, 0])
+    assert int(edge_lookup(g, jnp.array([0]), jnp.array([2]))[0]) == -1
+
+
+def test_neighbors_padded():
+    g = build_di([0, 0, 0, 1], [1, 2, 3, 2], normalize=False, n=4)
+    nbrs, valid = neighbors_padded(g, jnp.array(0), max_deg=5)
+    assert nbrs[:3].tolist() == [1, 2, 3] and valid.tolist() == [True] * 3 + [False] * 2
+
+
+def test_reverse_di():
+    g = build_di([0, 1, 2], [1, 2, 0], normalize=False, n=3)
+    r = build_reverse_di(g)
+    # in-neighbors of vertex 1 = {0}
+    seg = np.asarray(r.seg)
+    assert np.asarray(r.dst)[seg[1]: seg[2]].tolist() == [0]
+
+
+def test_dedupe_multiedge():
+    g = build_di([0, 0, 0], [1, 1, 2])
+    assert g.m == 2  # (0,1) structural edge kept once (Fig. 1 semantics)

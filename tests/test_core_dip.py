@@ -1,0 +1,110 @@
+"""DIP attribute stores: cross-variant equivalence (the paper's §IV contract —
+all three variants answer identical queries) + store-specific behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AttributeMap, build_dip_arr, build_dip_list, build_dip_listd,
+)
+from repro.core import dip_arr, dip_list, dip_listd
+
+
+@st.composite
+def attr_instance(draw):
+    n = draw(st.integers(2, 200))
+    k = draw(st.integers(1, 20))
+    nnz = draw(st.integers(0, 400))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ents = rng.integers(0, n, nnz)
+    attrs = rng.integers(0, k, nnz)
+    qmask = rng.random(k) < 0.3
+    return n, k, ents, attrs, qmask
+
+
+@settings(max_examples=60, deadline=None)
+@given(inst=attr_instance())
+def test_variant_equivalence(inst):
+    """DIP-ARR (scan & matvec), DIP-LIST, DIP-LISTD (linked & inverted) agree."""
+    n, k, ents, attrs, qmask = inst
+    qm = jnp.asarray(qmask)
+    arr = build_dip_arr(ents, attrs, k=k, n=n)
+    lst = build_dip_list(ents, attrs, k=k, n=n)
+    lkd = build_dip_listd(ents, attrs, k=k, n=n)
+
+    ref = np.zeros(n, bool)
+    for e, a in zip(ents, attrs):
+        if qmask[a]:
+            ref[e] = True
+
+    assert (np.asarray(dip_arr.query_any_scan(arr, qm)) == ref).all()
+    assert (np.asarray(dip_arr.query_any_matvec(arr, qm)) == ref).all()
+    assert (np.asarray(dip_list.query_any(lst, qm)) == ref).all()
+    assert (np.asarray(dip_listd.query_any_linked(lkd, qm)) == ref).all()
+    assert (np.asarray(dip_listd.query_any_inverted(lkd, qm)) == ref).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(inst=attr_instance())
+def test_budget_query(inst):
+    n, k, ents, attrs, qmask = inst
+    lkd = build_dip_listd(ents, attrs, k=k, n=n)
+    ids = np.flatnonzero(qmask).astype(np.int32)
+    if len(ids) == 0:
+        ids = np.array([-1], np.int32)
+    a_off = np.asarray(lkd.a_off)
+    budget = int(sum(a_off[i + 1] - a_off[i] for i in ids if i >= 0)) + 8
+    got = dip_listd.query_any_budget(lkd, jnp.asarray(ids), budget=budget)
+    ref = np.zeros(n, bool)
+    for e, a in zip(ents, attrs):
+        if qmask[a]:
+            ref[e] = True
+    assert (np.asarray(got) == ref).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(inst=attr_instance())
+def test_entity_attribute_roundtrip(inst):
+    """attrs_of_entity agrees between ARR and LIST (padded)."""
+    n, k, ents, attrs, _ = inst
+    arr = build_dip_arr(ents, attrs, k=k, n=n)
+    lst = build_dip_list(ents, attrs, k=k, n=n)
+    e = int(ents[0]) if len(ents) else 0
+    from_arr = set(np.flatnonzero(np.asarray(dip_arr.attrs_of_entity(arr, jnp.int32(e)))))
+    vals, valid = dip_list.attrs_of_entity_padded(lst, jnp.int32(e), max_k=k)
+    from_lst = set(np.asarray(vals)[np.asarray(valid)].tolist())
+    assert from_arr == from_lst
+
+
+def test_listd_chain_structure():
+    """Linked chains replay insertion order; last_tracker points at the tail."""
+    d = build_dip_listd([0, 1, 2, 1], [5, 5, 5, 3], k=6, n=3)
+    lt = np.asarray(d.last_tracker)
+    assert lt[5] == 2 and lt[3] == 3
+    # walk attr 5 backwards: entities 2 -> 1 -> 0
+    prev = np.asarray(d.prev)
+    ent = np.asarray(d.entity)
+    chain = []
+    node = lt[5]
+    while node >= 0:
+        chain.append(int(ent[node]))
+        node = prev[node]
+    assert chain == [2, 1, 0]
+
+
+def test_attribute_map():
+    am = AttributeMap()
+    ids = am.encode(["a", "b", "a", "c"])
+    assert ids.tolist() == [0, 1, 0, 2]
+    assert am.decode([2, 0]) == ["c", "a"]
+    assert am.lookup("missing") == -1
+    mask = am.mask(["a", "missing", "c"], k=4)
+    assert mask.tolist() == [True, False, True, False]
+
+
+def test_empty_attribute_sets():
+    """Label/relationship/property sets can be empty (paper Fig. 1 note)."""
+    arr = build_dip_arr([], [], k=1, n=5)
+    assert not np.asarray(dip_arr.query_any_matvec(arr, jnp.ones(1, bool))).any()

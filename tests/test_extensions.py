@@ -1,0 +1,141 @@
+"""Beyond-pool extensions: PropGraph persistence, GAT/GraphSAGE, typed
+algorithms, gradient-compression integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.core.io import load_propgraph, save_propgraph
+from repro.data import synthetic_graph_batch
+from repro.graph import random_uniform_graph
+from repro.graph.typed_algorithms import (
+    attribute_assortativity, khop_typed, label_histogram, typed_components,
+)
+from repro.models import gat
+
+
+@pytest.fixture
+def pg(rng):
+    src, dst = random_uniform_graph(800, seed=5)
+    g = PropGraph(backend="arr").add_edges_from(src, dst)
+    nodes = np.asarray(g.graph.node_map)
+    g.add_node_labels(nodes, rng.choice(["a", "b", "c"], len(nodes)))
+    es, ed = np.asarray(g.graph.src), np.asarray(g.graph.dst)
+    g.add_edge_relationships(nodes[es], nodes[ed], rng.choice(["x", "y"], len(es)))
+    g.add_node_properties("score", nodes, rng.random(len(nodes)).astype(np.float32))
+    return g
+
+
+# ------------------------------------------------------------- persistence
+def test_propgraph_save_load_roundtrip(pg, tmp_path):
+    p = str(tmp_path / "graph")
+    save_propgraph(p, pg)
+    back = load_propgraph(p)
+    assert back.n_vertices == pg.n_vertices and back.n_edges == pg.n_edges
+    q = ["a", "c"]
+    assert bool(jnp.all(back.query_labels(q) == pg.query_labels(q)))
+    assert bool(jnp.all(back.query_relationships(["x"]) == pg.query_relationships(["x"])))
+    col0, _ = pg.vertex_props["score"]
+    col1, _ = back.vertex_props["score"]
+    np.testing.assert_array_equal(np.asarray(col0), np.asarray(col1))
+
+
+def test_propgraph_load_different_backend(pg, tmp_path):
+    p = str(tmp_path / "graph")
+    save_propgraph(p, pg)
+    back = load_propgraph(p, backend="listd")
+    assert back.backend == "listd"
+    assert bool(jnp.all(back.query_labels(["b"]) == pg.query_labels(["b"])))
+
+
+# ---------------------------------------------------------------- GAT/SAGE
+def test_gat_smoke_and_grad():
+    cfg = gat.GATConfig(d_in=16, d_hidden=4, n_heads=2, n_classes=3)
+    b = synthetic_graph_batch(n_nodes=30, n_edges=90, d_feat=16, n_classes=3, seed=0)
+    params = gat.init_gat(jax.random.PRNGKey(0), cfg)
+    loss = gat.gat_loss(params, b, cfg)
+    assert np.isfinite(float(loss))
+    g = jax.grad(gat.gat_loss)(params, b, cfg)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_gat_attention_normalized():
+    """Per-destination attention weights sum to 1 over incoming edges."""
+    from repro.graph.segment_ops import segment_softmax
+
+    scores = jnp.asarray(np.random.default_rng(0).standard_normal(50), jnp.float32)
+    seg = jnp.sort(jnp.asarray(np.random.default_rng(1).integers(0, 10, 50)))
+    alpha = segment_softmax(scores, seg, 10)
+    sums = jax.ops.segment_sum(alpha, seg, 10)
+    present = np.unique(np.asarray(seg))
+    np.testing.assert_allclose(np.asarray(sums)[present], 1.0, rtol=1e-5)
+
+
+def test_sage_smoke():
+    cfg = gat.SAGEConfig(d_in=16, d_hidden=8, n_classes=4)
+    b = synthetic_graph_batch(n_nodes=30, n_edges=90, d_feat=16, n_classes=4, seed=1)
+    params = gat.init_sage(jax.random.PRNGKey(0), cfg)
+    out = gat.sage_forward(params, b, cfg)
+    assert out.shape == (30, 4) and np.isfinite(np.asarray(out)).all()
+
+
+# --------------------------------------------------------- typed algorithms
+def test_khop_typed_grows_monotonically(pg):
+    g = pg.graph
+    e_ok = pg.query_relationships(["x"])
+    seeds = jnp.arange(4)
+    m1 = khop_typed(g, seeds, e_ok, k=1)
+    m3 = khop_typed(g, seeds, e_ok, k=3)
+    assert bool(jnp.all(m1 <= m3))
+    assert int(m1.sum()) >= 4
+
+
+def test_label_histogram_counts(pg):
+    counts, names = label_histogram(pg)
+    assert counts.sum() == pg.n_vertices  # every vertex got exactly one label
+    assert set(names) == {"a", "b", "c"}
+
+
+def test_typed_components_respects_types(pg):
+    comps = typed_components(pg, ["x"])
+    # vertices joined only by 'y' edges must not merge: verify against a
+    # reference union-find over 'x' edges only
+    import numpy as np
+
+    g = pg.graph
+    e_ok = np.asarray(pg.query_relationships(["x"]))
+    parent = np.arange(g.n)
+
+    def find(a):
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for s, d in zip(np.asarray(g.src)[e_ok], np.asarray(g.dst)[e_ok]):
+        ra, rb = find(s), find(d)
+        if ra != rb:
+            parent[ra] = rb
+    ref = np.asarray([find(i) for i in range(g.n)])
+    got = np.asarray(comps)
+    # same partition ⇔ same pairwise-equality structure (checked via canonical relabel)
+    import collections
+    canon = {}
+    for arr in (ref, got):
+        pass
+    ref_c = np.unique(ref, return_inverse=True)[1]
+    got_c = np.unique(got, return_inverse=True)[1]
+    mapping = {}
+    ok = True
+    for a, b in zip(ref_c, got_c):
+        if a in mapping and mapping[a] != b:
+            ok = False
+            break
+        mapping[a] = b
+    assert ok and len(set(mapping.values())) == len(mapping)
+
+
+def test_assortativity_bounds(pg):
+    v = attribute_assortativity(pg, ["a"])
+    assert 0.0 <= v <= 1.0

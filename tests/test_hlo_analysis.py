@@ -1,0 +1,76 @@
+"""HLO analyzer: exact dot-FLOP counting + while-loop trip multiplication.
+
+The analyzer is roofline-critical infrastructure; these tests pin its
+semantics against tiny compiled programs with known analytic costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    t = analyze_hlo(_compile(lambda a, b: a @ b, a, b))
+    assert t["flops"] == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_scan_multiplies_flops_by_trip_count():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def fn(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    t = analyze_hlo(_compile(fn, a))
+    assert t["flops"] == pytest.approx(7 * 2 * 32 ** 3, rel=0.05)
+
+
+def test_nested_scan_trips_compose():
+    a = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+
+    def fn(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    t = analyze_hlo(_compile(fn, a))
+    assert t["flops"] == pytest.approx(15 * 2 * 16 ** 3, rel=0.05)
+
+
+def test_layers_scale_linearly():
+    """The failure mode that motivated the analyzer: cost_analysis reports
+    L-independent FLOPs for scanned layers; analyze_hlo must scale."""
+    def make(nl):
+        w = jax.ShapeDtypeStruct((nl, 32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+        def fn(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+        return analyze_hlo(_compile(fn, w, x))["flops"]
+
+    f2, f8 = make(2), make(8)
+    assert f8 / f2 == pytest.approx(4.0, rel=0.05)
+
+
+def test_bytes_reasonable_for_copy():
+    """A memcpy-like op: traffic ≈ 2×payload (+args read once), not 100×."""
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    t = analyze_hlo(_compile(lambda x: x * 2.0, a))
+    payload = 1024 * 1024 * 4
+    assert payload <= t["bytes"] <= 6 * payload

@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests: the paper's full workflow at integration scale
++ the framework's public API surface."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PropGraph, build_di
+from repro.graph import attach_random_attributes, paper_graph, random_uniform_graph
+
+
+def test_paper_workflow_end_to_end():
+    """§V pipeline on a graph1-regime graph (scaled): ingest → attributes →
+    query → subgraph → analytics, all three backends agreeing."""
+    src, dst = paper_graph("graph1", scale_down=100)  # 1000 edges
+    rels_pool = [f"rel{i}" for i in range(50)]
+    labels_pool = [f"lab{i}" for i in range(50)]
+    rng = np.random.default_rng(0)
+
+    masks = {}
+    for be in ("arr", "list", "listd"):
+        pg = PropGraph(backend=be).add_edges_from(src, dst)
+        nodes = np.asarray(pg.graph.node_map)
+        es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+        rng_b = np.random.default_rng(1)
+        pg.add_node_labels(nodes, rng_b.choice(labels_pool, len(nodes)))
+        pg.add_edge_relationships(nodes[es], nodes[ed], rng_b.choice(rels_pool, len(es)))
+        vm = np.asarray(pg.query_labels(["lab1", "lab2", "lab3"]))
+        em = np.asarray(pg.query_relationships(["rel7"]))
+        masks[be] = (vm, em)
+        sub, kept = pg.subgraph(labels=["lab1", "lab2", "lab3"], relationships=["rel7"])
+        assert sub.m == len(kept)
+
+    for be in ("list", "listd"):
+        assert (masks[be][0] == masks["arr"][0]).all()
+        assert (masks[be][1] == masks["arr"][1]).all()
+
+
+def test_query_throughput_metric():
+    """The §VII-B throughput metric (edges/s) is computable from our harness."""
+    import time
+
+    from repro.core import build_dip_arr
+    from repro.core.dip_arr import query_any_matvec
+
+    m = 200_000
+    ents, attrs = attach_random_attributes(m, n_attrs=50, seed=0)
+    store = build_dip_arr(ents, attrs, k=50, n=m)
+    qmask = jnp.zeros(50, bool).at[jnp.arange(5)].set(True)
+    query_any_matvec(store, qmask).block_until_ready()  # compile
+    t0 = time.time()
+    for _ in range(5):
+        query_any_matvec(store, qmask).block_until_ready()
+    eps = 5 * m / (time.time() - t0)
+    assert eps > 1e6  # ≥1M edges/s on 1 CPU core (paper: 8.5M on 8×128 cores)
+
+
+def test_di_block_distribution_shapes():
+    """DI arrays accept a dp sharding without resharding copies (1-dev mesh)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    src, dst = random_uniform_graph(4096, seed=0)
+    g = build_di(src, dst)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = NamedSharding(mesh, P("data"))
+    src_s = jax.device_put(g.src, sh)
+    assert src_s.sharding == sh
+
+
+def test_bfs_on_typed_subgraph():
+    src = [0, 1, 2, 3, 0]
+    dst = [1, 2, 3, 4, 3]
+    pg = PropGraph("arr").add_edges_from(src, dst)
+    pg.add_edge_relationships([0, 1, 2, 3, 0], [1, 2, 3, 4, 3],
+                              ["a", "a", "b", "a", "b"])
+    d = np.asarray(pg.bfs([0], relationships=["a"]))
+    assert d[1] == 1 and d[2] == 2 and d[3] == -1 or d[3] > 0  # 3 unreachable via 'a' from 0->1->2 (edge 2->3 is 'b')
+    # precise: path 0-a->1-a->2 (b blocks 2->3); 0-b->3 blocked
+    assert d.tolist()[:5] == [0, 1, 2, -1, -1]
