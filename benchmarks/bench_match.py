@@ -1,0 +1,89 @@
+"""Pattern-engine benchmark: end-to-end ``match()`` plus the planner's two
+headline optimizations, each against its unoptimized counterpart.
+
+Rows (JSON via ``benchmarks.common.emit_json`` — set ``BENCH_JSON_PATH`` to
+also append to a file for a cross-PR perf trajectory):
+  * ``match_1hop`` / ``match_2hop``  — full parse→plan→execute per backend.
+  * ``match_exec_1hop``              — execution only (pattern pre-planned),
+    vs ``hand_pipeline_1hop``, the §VI hand-composed mask pipeline the
+    engine replaces; the delta is the declarative layer's overhead.
+  * ``arr_fused_masks`` vs ``arr_separate_masks`` — the batched multi-mask
+    bitmap query (one launch) vs one launch per node slot.
+  * ``listd_budget`` vs ``listd_inverted`` — output-sized gather vs full
+    scan on a selective label, the planner's skew decision.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+from repro.core import PropGraph
+from repro.core.queries import induce_edge_mask_directed
+from repro.graph import random_uniform_graph
+from repro.query import execute_plan, parse, plan_pattern
+
+PATTERN_1HOP = "(a:needle)-[:follows]->(b:common)"
+PATTERN_2HOP = "(a:needle)-[:follows]->(b)-[:likes]->(c:common)"
+
+
+def _build(backend: str, m: int, seed: int = 0) -> PropGraph:
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    labels = rng.choice(["needle", "mid", "common"], size=len(nodes), p=[0.02, 0.18, 0.8])
+    pg.add_node_labels(nodes, labels)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es), p=[0.3, 0.7])
+    pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    return pg
+
+
+def run(m: int = 100_000) -> None:
+    for backend in ("arr", "list", "listd"):
+        pg = _build(backend, m)
+        n = pg.n_vertices
+
+        t = time_call(lambda: pg.match(PATTERN_1HOP))
+        emit_json(f"match_1hop_{backend}_m{m}", t, backend=backend, m=m,
+                  edges_per_s=round(m / t))
+        t = time_call(lambda: pg.match(PATTERN_2HOP))
+        emit_json(f"match_2hop_{backend}_m{m}", t, backend=backend, m=m,
+                  edges_per_s=round(m / t))
+
+        plan = plan_pattern(pg, parse(PATTERN_1HOP))
+        t = time_call(lambda: execute_plan(pg, plan))
+        emit_json(f"match_exec_1hop_{backend}_m{m}", t, backend=backend, m=m)
+
+        def hand():
+            vm_a = pg.query_labels(["needle"])
+            vm_b = pg.query_labels(["common"])
+            em = pg.query_relationships(["follows"])
+            return induce_edge_mask_directed(pg.graph, vm_a, vm_b, em, 1)
+
+        t = time_call(hand)
+        emit_json(f"hand_pipeline_1hop_{backend}_m{m}", t, backend=backend, m=m)
+
+    # -- fusion: one batched bitmap launch vs one launch per mask (arr) ------
+    pg = _build("arr", m)
+    queries = [("needle",), ("mid",), ("common",)]
+    t = time_call(lambda: pg._vstore.query_any_batched(queries))
+    emit_json(f"arr_fused_masks_m{m}", t, q=len(queries))
+    t = time_call(lambda: [pg.query_labels(list(q)) for q in queries])
+    emit_json(f"arr_separate_masks_m{m}", t, q=len(queries))
+
+    # -- skew: budget gather vs inverted scan on a selective label (listd) ---
+    pg = _build("listd", m)
+    t = time_call(lambda: pg.query_labels(["needle"], impl="budget"))
+    emit_json(f"listd_budget_needle_m{m}", t)
+    t = time_call(lambda: pg.query_labels(["needle"], impl="inverted"))
+    emit_json(f"listd_inverted_needle_m{m}", t)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=100_000)
+    a = ap.parse_args()
+    run(m=a.m)

@@ -9,12 +9,14 @@ method so readers can't confuse the two.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax
 
-__all__ = ["time_call", "emit"]
+__all__ = ["time_call", "emit", "emit_json"]
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -35,3 +37,19 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """CSV row: name,us_per_call,derived."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def emit_json(name: str, seconds: float, path: Optional[str] = None, **fields) -> None:
+    """JSON-line benchmark row — the machine-readable trajectory format.
+
+    Prints one JSON object per row; when ``path`` (or the ``BENCH_JSON_PATH``
+    env var) is set the row is also appended there, so successive PRs can
+    diff perf without parsing stdout.
+    """
+    row = {"name": name, "us_per_call": round(seconds * 1e6, 1), **fields}
+    line = json.dumps(row, sort_keys=True)
+    print(line)
+    path = path or os.environ.get("BENCH_JSON_PATH")
+    if path:
+        with open(path, "a") as f:
+            f.write(line + "\n")

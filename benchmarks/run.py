@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
   fig5_query   — query throughput per DIP variant + impl (paper Fig. 5, §VII-B;
                  includes the DIP-LISTD linked-chase 10× validation)
   kernels      — Pallas kernels vs oracles (interpret mode)
+  match        — pattern-engine rows (beyond-paper; JSON lines via
+                 benchmarks.common.emit_json, see bench_match.py)
 Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
@@ -32,6 +34,10 @@ def main() -> None:
     print("# kernels (Pallas interpret vs jnp oracle)")
     from benchmarks import bench_kernels
     bench_kernels.run()
+
+    print("# match (pattern engine: declarative vs hand-composed, fusion, skew)")
+    from benchmarks import bench_match
+    bench_match.run(m=20_000 if small else 100_000)
 
 
 if __name__ == "__main__":

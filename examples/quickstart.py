@@ -52,4 +52,36 @@ print(f"property-filtered BFS from 8 sources reached {reached:,} vertices")
 pr = pagerank(pg.graph, edge_mask=emask)
 top = np.argsort(np.asarray(pr))[-3:][::-1]
 print(f"typed-edge PageRank top vertices: {[int(nodes[i]) for i in top]}")
+
+# -- 5. declarative patterns: match() / explain() -----------------------------
+# Instead of composing masks by hand, describe the shape you want
+# (grammar: src/repro/query/README.md).  Labels OR with '|', typed property
+# predicates go in '{...}', '-[...]->' / '<-[...]-' set hop direction.
+pg.add_node_properties("age", nodes, rng.integers(0, 90, len(nodes)).astype(np.int32))
+pattern = '(a:label1|label2|label3 {age > 30})-[f:rel7|rel8]->(b:label4|label5|label6)'
+
+# explain() shows the plan before paying for it: which DIP impl each mask
+# uses (selectivity-driven), chain orientation, and kernel fusion.
+print(pg.explain(pattern))
+
+res = pg.match(pattern)
+print(f"match: {res.n_vertices():,} vertices, {res.n_edges():,} edges in full matches")
+binds = res.bindings()  # per-variable masks: 'a'/'b' over vertices, 'f' over edges
+print(f"bindings: a={int(binds['a'].sum()):,} f={int(binds['f'].sum()):,} "
+      f"b={int(binds['b'].sum()):,}")
+
+# results are plain masks — they compose with everything above:
+msub, mkept = res.subgraph(pg.graph)          # materialize matched edges
+halo = res.expand(pg.graph, 2)                # 2-hop neighborhood of the match
+print(f"match subgraph: n={msub.n:,}, m={msub.m:,}; 2-hop halo: {int(halo.sum()):,}")
+
+# the same match, hand-composed (what the engine fuses for you):
+from repro.core.queries import induce_edge_mask_directed
+vm_a = (pg.query_labels(["label1", "label2", "label3"])
+        & pg.vertex_predicate_mask("age", ">", 30))
+vm_b = pg.query_labels(["label4", "label5", "label6"])
+hand = induce_edge_mask_directed(
+    pg.graph, vm_a, vm_b, pg.query_relationships(["rel7", "rel8"]), 1)
+assert bool((res.edge_mask == hand).all())
+print("match == hand-composed pipeline ✓")
 print("OK")

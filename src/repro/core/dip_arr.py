@@ -33,6 +33,7 @@ __all__ = [
     "query_any_scan",
     "query_any_matvec",
     "query_any",
+    "query_any_batched",
     "attrs_of_entity",
     "entities_of_attr",
 ]
@@ -103,6 +104,28 @@ def query_any(dip: DIPArr, attr_mask: jax.Array, *, impl: str = "matvec") -> jax
         from repro.kernels.bitmap_query import ops as _ops
 
         return _ops.bitmap_query(dip.bitmap, attr_mask)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@jax.jit
+def query_any_batched_matvec(dip: DIPArr, attr_masks: jax.Array) -> jax.Array:
+    """Q OR-queries as one MXU matmul: ``(Q, K) @ (K, N) > 0`` — the bitmap
+    streams from HBM once for all Q masks (the pattern planner's fusion)."""
+    q = attr_masks.astype(jnp.bfloat16)
+    counts = q @ dip.bitmap.astype(jnp.bfloat16)
+    return counts > 0
+
+
+def query_any_batched(dip: DIPArr, attr_masks: jax.Array, *, impl: str = "matvec") -> jax.Array:
+    """attr_masks: (Q, K) bool → (Q, N) bool, one launch for all Q queries."""
+    if impl == "matvec":
+        return query_any_batched_matvec(dip, attr_masks)
+    if impl == "scan":
+        return jax.vmap(query_any_scan, in_axes=(None, 0))(dip, attr_masks)
+    if impl == "kernel":
+        from repro.kernels.bitmap_query import ops as _ops
+
+        return _ops.bitmap_query_batched(dip.bitmap, attr_masks)
     raise ValueError(f"unknown impl {impl!r}")
 
 

@@ -19,6 +19,7 @@ CSR), ``listd`` (DIP-LISTD linked chains + inverted CSR).
 """
 from __future__ import annotations
 
+import operator
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -47,6 +48,7 @@ class _AttrStore:
         self._pairs_e: List[np.ndarray] = []  # entity ids, insertion order
         self._pairs_a: List[np.ndarray] = []  # attribute ids
         self._store = None
+        self._counts: Optional[np.ndarray] = None
         self._dirty = True
 
     def insert(self, entity_ids: np.ndarray, values: Sequence[str]) -> None:
@@ -56,6 +58,7 @@ class _AttrStore:
         ok = entity_ids >= 0  # unmatched edge rows (edge_lookup -1) are dropped
         self._pairs_e.append(entity_ids[ok])
         self._pairs_a.append(attr_ids[ok].astype(np.int32))
+        self._counts = None
         self._dirty = True
 
     @property
@@ -76,14 +79,61 @@ class _AttrStore:
         self._dirty = False
         return self._store
 
+    def known_ids(self, values: Sequence[str]) -> np.ndarray:
+        """Interned attribute ids for ``values`` (unknown values dropped)."""
+        ids = np.atleast_1d(self.amap.lookup(list(values)))
+        return ids[ids >= 0].astype(np.int32)
+
+    def attr_counts(self) -> np.ndarray:
+        """(k,) per-attribute entity counts — the DIP selectivity statistics
+        the planner orders joins with (bitmap row sums / CSR segment
+        lengths; each store carries them for free).  Cached host-side and
+        invalidated with the store (``insert`` clears it) — the planner
+        reads these on every ``match()``."""
+        if self._counts is not None:
+            return self._counts
+        store = self.finalize()
+        if self.backend == "arr":
+            counts = np.asarray(jnp.sum(store.bitmap.astype(jnp.int32), axis=1))
+        elif self.backend == "list":
+            counts = np.bincount(np.asarray(store.val), minlength=self.k)
+        else:
+            counts = np.asarray(store.a_off[1:] - store.a_off[:-1])
+        self._counts = counts
+        return counts
+
     def query_any(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
+        if len(values) == 0 or self.known_ids(values).size == 0:
+            # degenerate query (empty list / all-unknown values): the answer
+            # is definitionally empty — skip the store entirely
+            return jnp.zeros((self.n,), jnp.bool_)
         store = self.finalize()
         mask = jnp.asarray(self.amap.mask(values, self.k))
         if self.backend == "arr":
             return dip_arr.query_any(store, mask, impl=impl or "matvec")
         if self.backend == "list":
             return dip_list.query_any(store, mask)
+        if impl == "budget":
+            ids = self.known_ids(values)
+            a_off = np.asarray(store.a_off)
+            budget = int((a_off[ids + 1] - a_off[ids]).sum())
+            budget = max(-(-budget // 128) * 128, 128)  # lane-aligned, ≥1 tile
+            return dip_listd.query_any_budget(store, jnp.asarray(ids), budget=budget)
         return dip_listd.query_any(store, mask, impl=impl or "inverted")
+
+    def query_any_batched(
+        self, values_list: Sequence[Sequence[str]], *, impl: Optional[str] = None
+    ) -> jax.Array:
+        """(Q, n) bool — Q OR-queries in one shot.  On the ``arr`` backend all
+        Q masks go through ONE matvec / Pallas-kernel launch (the planner's
+        fusion path); other backends fall back to a per-query loop."""
+        if self.backend == "arr":
+            store = self.finalize()
+            masks = jnp.asarray(
+                np.stack([self.amap.mask(v, self.k) for v in values_list])
+            )
+            return dip_arr.query_any_batched(store, masks, impl=impl or "matvec")
+        return jnp.stack([self.query_any(v, impl=impl) for v in values_list])
 
 
 class PropGraph:
@@ -168,11 +218,82 @@ class PropGraph:
     # --------------------------------------------------------------- queries
     def query_labels(self, labels, *, impl: Optional[str] = None) -> jax.Array:
         """(n,) bool — vertices holding ANY of ``labels`` (§VI OR semantics)."""
+        self._require_graph()
         return self._vstore.query_any(labels, impl=impl)
 
     def query_relationships(self, relationships, *, impl: Optional[str] = None) -> jax.Array:
         """(m,) bool — edges holding ANY of ``relationships``."""
+        self._require_graph()
         return self._estore.query_any(relationships, impl=impl)
+
+    # ------------------------------------------------- typed property masks
+    _PRED_OPS = {
+        "==": operator.eq,
+        "!=": operator.ne,
+        "<": operator.lt,
+        "<=": operator.le,
+        ">": operator.gt,
+        ">=": operator.ge,
+    }
+
+    def _predicate_mask(
+        self, cols: Dict[str, Tuple[jax.Array, jax.Array]], kind: str,
+        name: str, op: str, value,
+    ) -> jax.Array:
+        if name not in cols:
+            raise KeyError(
+                f"unknown {kind} property {name!r}; known: {sorted(cols)}"
+            )
+        if op not in self._PRED_OPS:
+            raise ValueError(f"unknown predicate op {op!r}; known: {sorted(self._PRED_OPS)}")
+        if isinstance(value, str):
+            # property columns are numeric typed columns; a str here would
+            # silently broadcast to a scalar True/False under ==/!= instead
+            # of comparing — string-valued attributes belong in labels/
+            # relationships (the DIP stores), not predicates
+            raise TypeError(
+                f"{kind} predicate {name!r} {op} {value!r}: string comparisons "
+                "are not supported on typed property columns — model "
+                "string-valued attributes as labels/relationships instead"
+            )
+        col, valid = cols[name]
+        return valid & self._PRED_OPS[op](col, value)
+
+    def vertex_predicate_mask(self, name: str, op: str, value) -> jax.Array:
+        """(n,) bool — vertices whose typed property ``name`` compares true
+        (entities without the property never match: the valid mask ANDs in)."""
+        self._require_graph()
+        return self._predicate_mask(self.vertex_props, "vertex", name, op, value)
+
+    def edge_predicate_mask(self, name: str, op: str, value) -> jax.Array:
+        """(m,) bool — edges whose typed property ``name`` compares true."""
+        self._require_graph()
+        return self._predicate_mask(self.edge_props, "edge", name, op, value)
+
+    # ------------------------------------------------------ pattern matching
+    def match(self, pattern, *, impl: Optional[str] = None):
+        """Declarative pattern query: ``pg.match("(a:person {age > 30})-[:follows]->(b:person)")``.
+
+        Parses ``pattern`` (str or a pre-built ``repro.query.Pattern``),
+        plans it against this graph's DIP statistics and executes the fused
+        mask pipeline.  Returns a ``repro.query.MatchResult`` whose
+        ``vertex_mask``/``edge_mask`` cover exactly the entities in at least
+        one full match.  ``impl`` force-overrides the planner's per-mask
+        implementation choice.
+        """
+        from repro.query import execute_plan, parse, plan_pattern
+
+        pat = parse(pattern) if isinstance(pattern, str) else pattern
+        return execute_plan(self, plan_pattern(self, pat, impl=impl))
+
+    def explain(self, pattern, *, impl: Optional[str] = None) -> str:
+        """The plan ``match`` would run, as a human-readable string — which
+        DIP impl each mask uses, selectivity estimates, chain orientation,
+        and kernel-fusion decisions."""
+        from repro.query import parse, plan_pattern
+
+        pat = parse(pattern) if isinstance(pattern, str) else pattern
+        return plan_pattern(self, pat, impl=impl).describe()
 
     def subgraph(
         self,
@@ -223,3 +344,17 @@ class PropGraph:
 
     def relationship_set(self) -> List[str]:
         return self._estore.amap.values if self._estore else []
+
+    def label_counts(self) -> Dict[str, int]:
+        """Per-label vertex counts (the planner's selectivity statistics)."""
+        if self._vstore is None:
+            return {}
+        counts = self._vstore.attr_counts()
+        return {v: int(counts[i]) for i, v in enumerate(self._vstore.amap.values)}
+
+    def relationship_counts(self) -> Dict[str, int]:
+        """Per-relationship edge counts (planner selectivity statistics)."""
+        if self._estore is None:
+            return {}
+        counts = self._estore.attr_counts()
+        return {v: int(counts[i]) for i, v in enumerate(self._estore.amap.values)}

@@ -20,6 +20,7 @@ from repro.core.di import DIGraph, build_di
 
 __all__ = [
     "induce_edge_mask",
+    "induce_edge_mask_directed",
     "extract_subgraph",
     "filtered_bfs",
     "connected_entities",
@@ -36,6 +37,24 @@ def induce_edge_mask(
     an edge survives iff its own mask is set AND both endpoints' masks are set.
     (n,) bool × (m,) bool → (m,) bool."""
     return edge_mask & vertex_mask[g.src] & vertex_mask[g.dst]
+
+
+@partial(jax.jit, static_argnames=("direction",))
+def induce_edge_mask_directed(
+    g: DIGraph,
+    tail_mask: jax.Array,
+    head_mask: jax.Array,
+    edge_mask: jax.Array,
+    direction: int = 1,
+) -> jax.Array:
+    """Per-endpoint generalization of :func:`induce_edge_mask` for directed
+    pattern hops: an edge survives iff its own mask is set AND its tail end
+    satisfies ``tail_mask`` AND its head end satisfies ``head_mask``.
+    ``direction=1`` reads tail=src/head=dst; ``-1`` the reverse (a pattern
+    hop written ``<-[...]-``).  ``induce_edge_mask(g, vm, em)`` is the
+    special case ``tail_mask == head_mask, direction=1``."""
+    tail, head = (g.src, g.dst) if direction == 1 else (g.dst, g.src)
+    return edge_mask & tail_mask[tail] & head_mask[head]
 
 
 def extract_subgraph(g: DIGraph, edge_mask) -> Tuple[DIGraph, np.ndarray]:

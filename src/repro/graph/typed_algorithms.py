@@ -33,15 +33,9 @@ def khop_typed(g: DIGraph, seeds: jax.Array, edge_allowed: jax.Array, *, k: int)
 
 def label_histogram(pg: PropGraph) -> Tuple[np.ndarray, list]:
     """Counts per vertex label (the attribute-statistics query a data
-    scientist runs first; paper Fig. 1 exploration pattern)."""
-    store = pg._vstore.finalize()
-    if pg.backend == "arr":
-        counts = np.asarray(jnp.sum(store.bitmap, axis=1))
-    elif pg.backend == "list":
-        counts = np.bincount(np.asarray(store.val), minlength=pg._vstore.k)
-    else:
-        counts = np.asarray(store.a_off[1:] - store.a_off[:-1])
-    return counts, pg.label_set()
+    scientist runs first; paper Fig. 1 exploration pattern).  Same numbers
+    the pattern planner reads for selectivity (``_AttrStore.attr_counts``)."""
+    return pg._vstore.attr_counts(), pg.label_set()
 
 
 def typed_components(pg: PropGraph, relationships: Sequence[str],

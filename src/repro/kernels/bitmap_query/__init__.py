@@ -1,4 +1,4 @@
 from repro.kernels.bitmap_query import ops, ref
-from repro.kernels.bitmap_query.ops import bitmap_query
+from repro.kernels.bitmap_query.ops import bitmap_query, bitmap_query_batched
 
-__all__ = ["ops", "ref", "bitmap_query"]
+__all__ = ["ops", "ref", "bitmap_query", "bitmap_query_batched"]

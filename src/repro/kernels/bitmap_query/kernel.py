@@ -24,10 +24,10 @@ DEFAULT_TILE_N = 2048
 
 
 def _bitmap_query_kernel(mask_ref, bitmap_ref, out_ref):
-    mask = mask_ref[...]          # (1, K) f32
+    mask = mask_ref[...]          # (Q, K) f32 — Q=1 for the single-query form
     block = bitmap_ref[...]       # (K, Nt) int8
     counts = jnp.dot(mask, block.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)  # (1, Nt) on the MXU
+                     preferred_element_type=jnp.float32)  # (Q, Nt) on the MXU
     out_ref[...] = (counts > 0.5)
 
 
@@ -55,3 +55,38 @@ def bitmap_query_pallas(bitmap: jax.Array, attr_mask: jax.Array, *,
         interpret=interpret,
     )(maskf, bitmap)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "interpret"))
+def bitmap_query_batched_pallas(bitmap: jax.Array, attr_masks: jax.Array, *,
+                                tile_n: int = DEFAULT_TILE_N,
+                                interpret: bool = True) -> jax.Array:
+    """Batched multi-mask form: ``bitmap (K, N) int8 × attr_masks (Q, K) bool
+    → (Q, N) bool`` in ONE kernel launch.
+
+    The planner fuses the label masks of every node slot of a pattern into
+    this single launch: the (K, Nt) bitmap tile is read from HBM once and
+    reused across all Q query rows on the MXU (``(Q, K) @ (K, Nt)``) instead
+    of once per mask — same grid, Q× the arithmetic intensity.
+    """
+    k, n = bitmap.shape
+    q = attr_masks.shape[0]
+    tile_n = min(tile_n, n)
+    pad = (-n) % tile_n
+    if pad:
+        bitmap = jnp.pad(bitmap, ((0, 0), (0, pad)))
+    n_pad = n + pad
+    maskf = attr_masks.astype(jnp.float32)  # (Q, K)
+
+    out = pl.pallas_call(
+        _bitmap_query_kernel,
+        grid=(n_pad // tile_n,),
+        in_specs=[
+            pl.BlockSpec((q, k), lambda i: (0, 0)),        # all queries: replicated
+            pl.BlockSpec((k, tile_n), lambda i: (0, i)),   # bitmap: entity tiles
+        ],
+        out_specs=pl.BlockSpec((q, tile_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, n_pad), jnp.bool_),
+        interpret=interpret,
+    )(maskf, bitmap)
+    return out[:, :n]

@@ -1,11 +1,14 @@
-"""Jit'd public wrapper for the bitmap_query kernel.
+"""Jit'd public wrappers for the bitmap_query kernels.
 
 Dispatches interpret mode automatically off-TPU; on TPU backends the compiled
-Pallas kernel runs with lane-aligned tiles.
+Pallas kernels run with lane-aligned tiles.
 """
 import jax
 
-from repro.kernels.bitmap_query.kernel import bitmap_query_pallas
+from repro.kernels.bitmap_query.kernel import (
+    bitmap_query_batched_pallas,
+    bitmap_query_pallas,
+)
 
 
 def _on_tpu() -> bool:
@@ -15,3 +18,13 @@ def _on_tpu() -> bool:
 def bitmap_query(bitmap: jax.Array, attr_mask: jax.Array, *, tile_n: int = 2048) -> jax.Array:
     """(K, N) int8 bitmap × (K,) bool query mask → (N,) bool entity mask."""
     return bitmap_query_pallas(bitmap, attr_mask, tile_n=tile_n, interpret=not _on_tpu())
+
+
+def bitmap_query_batched(
+    bitmap: jax.Array, attr_masks: jax.Array, *, tile_n: int = 2048
+) -> jax.Array:
+    """(K, N) int8 bitmap × (Q, K) bool query masks → (Q, N) bool entity
+    masks, all Q queries in one kernel launch (planner fusion entry)."""
+    return bitmap_query_batched_pallas(
+        bitmap, attr_masks, tile_n=tile_n, interpret=not _on_tpu()
+    )

@@ -8,3 +8,10 @@ def bitmap_query_ref(bitmap: jax.Array, attr_mask: jax.Array) -> jax.Array:
     """bitmap: (K, N) int8; attr_mask: (K,) bool → (N,) bool."""
     sel = bitmap.astype(jnp.bool_) & attr_mask[:, None]
     return jnp.any(sel, axis=0)
+
+
+@jax.jit
+def bitmap_query_batched_ref(bitmap: jax.Array, attr_masks: jax.Array) -> jax.Array:
+    """bitmap: (K, N) int8; attr_masks: (Q, K) bool → (Q, N) bool."""
+    sel = bitmap.astype(jnp.bool_)[None] & attr_masks[:, :, None]
+    return jnp.any(sel, axis=1)

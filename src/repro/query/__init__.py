@@ -1,0 +1,27 @@
+"""repro.query — declarative property-graph pattern engine.
+
+Pattern text → AST (``parse``) → plan (``plan_pattern``) → fused execution
+(``execute_plan``) over ``DIGraph`` + the DIP attribute stores.  The public
+entry points on ``PropGraph`` are ``match()`` / ``explain()``; this package
+is the machinery behind them.
+"""
+from repro.query.ast import EdgePattern, NodePattern, Pattern, Predicate
+from repro.query.executor import MatchResult, execute_plan
+from repro.query.parser import ParseError, parse
+from repro.query.plan import MaskStep, Plan, PredicateStep
+from repro.query.planner import plan_pattern
+
+__all__ = [
+    "Pattern",
+    "NodePattern",
+    "EdgePattern",
+    "Predicate",
+    "parse",
+    "ParseError",
+    "Plan",
+    "MaskStep",
+    "PredicateStep",
+    "plan_pattern",
+    "MatchResult",
+    "execute_plan",
+]

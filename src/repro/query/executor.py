@@ -1,0 +1,203 @@
+"""Plan execution — one fused, jitted constraint-propagation pipeline.
+
+Execution in three stages:
+
+1. **Mask materialization** (host-orchestrated, device-executed): every
+   planned attribute mask runs through the DIP store with the planner's
+   chosen impl; ``arr`` node-label masks marked ``fused`` go through the
+   batched ``bitmap_query`` entry in ONE launch.  Predicate masks come off
+   the typed property columns.
+2. **Local consistency**: per hop, an edge survives iff its own mask is set
+   and both endpoint candidate masks are set (the §VI mask-intersection
+   contract, directional — ``induce_edge_mask`` generalized per endpoint).
+3. **Chain propagation** (single jit, static hop count): a forward pass
+   computes per-position reachable sets, a backward pass prunes to vertices
+   /edges that participate in at least one COMPLETE match of the pattern —
+   the khop-style frontier expansion of ``graph.typed_algorithms`` run once
+   in each direction instead of k times in one.
+
+The result is exact (not an estimate): ``vertex_mask``/``edge_mask`` are
+the unions of all full-pattern assignments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.di import DIGraph
+from repro.core.queries import extract_subgraph, induce_edge_mask_directed
+from repro.query.plan import Plan
+
+__all__ = ["MatchResult", "execute_plan"]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["vertex_mask", "edge_mask", "node_masks", "edge_masks"],
+    meta_fields=["plan"],
+)
+@dataclasses.dataclass(frozen=True)
+class MatchResult:
+    """Result of ``PropGraph.match``: exact participation masks.
+
+    ``node_masks[i]`` / ``edge_masks[i]`` are per-slot masks in the PLAN's
+    chain order (use ``bindings()`` for name-keyed access — variable names
+    travel with their slots through any planner reorientation).  Registered
+    as a pytree (masks = leaves) so ``jax.block_until_ready`` / ``jit``
+    compose with results directly.
+    """
+
+    vertex_mask: jax.Array  # (n,) bool — vertices in ≥1 full match
+    edge_mask: jax.Array  # (m,) bool — edges in ≥1 full match
+    node_masks: Tuple[jax.Array, ...]  # per node slot, (n,) bool
+    edge_masks: Tuple[jax.Array, ...]  # per edge slot, (m,) bool
+    plan: Plan
+
+    def bindings(self) -> Dict[str, jax.Array]:
+        """Variable name → participation mask (node vars (n,), edge vars (m,))."""
+        out: Dict[str, jax.Array] = {}
+        for node, mask in zip(self.plan.pattern.nodes, self.node_masks):
+            if node.var:
+                out[node.var] = out[node.var] | mask if node.var in out else mask
+        for edge, mask in zip(self.plan.pattern.edges, self.edge_masks):
+            if edge.var:
+                out[edge.var] = out[edge.var] | mask if edge.var in out else mask
+        return out
+
+    def n_vertices(self) -> int:
+        return int(jnp.sum(self.vertex_mask))
+
+    def n_edges(self) -> int:
+        return int(jnp.sum(self.edge_mask))
+
+    def subgraph(self, g: DIGraph):
+        """Materialize the matched edges as a fresh DI graph."""
+        return extract_subgraph(g, self.edge_mask)
+
+    def expand(self, g: DIGraph, k: int, *, edge_allowed: Optional[jax.Array] = None):
+        """NScale-style neighborhood expansion: vertices within ``k`` hops of
+        the match, following ``edge_allowed`` (default: every edge)."""
+        from repro.graph.typed_algorithms import khop_typed
+
+        seeds = jnp.asarray(np.flatnonzero(np.asarray(self.vertex_mask)), jnp.int32)
+        allowed = (
+            jnp.ones((g.m,), jnp.bool_) if edge_allowed is None else edge_allowed
+        )
+        return khop_typed(g, seeds, allowed, k=k)
+
+
+@partial(jax.jit, static_argnames=("dirs",))
+def _propagate(
+    g: DIGraph,
+    cands: Tuple[jax.Array, ...],
+    emasks: Tuple[jax.Array, ...],
+    dirs: Tuple[int, ...],
+):
+    """Forward/backward chain propagation (static hop count ⇒ fully unrolled,
+    one XLA program for the whole pattern).
+
+    forward:  f_0 = c_0;  f_i = heads(A_i ∧ f_{i-1}[tail])
+    backward: b_h = f_h;  alive_i = A_i ∧ f_{i-1}[tail] ∧ b_i[head];
+              b_{i-1} = tails(alive_i)
+    where A_i is the locally-consistent edge set of hop i and tail/head
+    follow each hop's direction.  b_i = position-i vertices on a full match;
+    alive_i = hop-i edges on a full match.
+    """
+    h = len(dirs)
+    ends = [
+        (g.src, g.dst) if dirs[i] == 1 else (g.dst, g.src) for i in range(h)
+    ]
+
+    local = [
+        induce_edge_mask_directed(g, cands[i], cands[i + 1], emasks[i], dirs[i])
+        for i in range(h)
+    ]
+
+    fwd = [cands[0]]
+    for i in range(h):
+        tail, head = ends[i]
+        a = local[i] & fwd[i][tail]
+        fwd.append(jnp.zeros_like(cands[i + 1]).at[head].max(a))
+
+    back = [None] * (h + 1)
+    back[h] = fwd[h]
+    alive = [None] * h
+    for i in range(h - 1, -1, -1):
+        tail, head = ends[i]
+        al = local[i] & fwd[i][tail] & back[i + 1][head]
+        alive[i] = al
+        back[i] = jnp.zeros_like(fwd[i]).at[tail].max(al)
+
+    vmask = back[0]
+    for b in back[1:]:
+        vmask = vmask | b
+    if h:
+        emask = alive[0]
+        for a in alive[1:]:
+            emask = emask | a
+    else:
+        emask = jnp.zeros((g.m,), jnp.bool_)
+    return vmask, emask, tuple(back), tuple(alive)
+
+
+def _materialize_masks(pg, plan: Plan) -> Tuple[Dict[int, jax.Array], Dict[int, jax.Array]]:
+    """Run every planned attribute mask, fusing batched slots into one call."""
+    node_masks: Dict[int, jax.Array] = {}
+    edge_masks: Dict[int, jax.Array] = {}
+
+    fused = set(plan.fused_node_slots)
+    fused_steps = [s for s in plan.mask_steps if s.kind == "node" and s.slot in fused]
+    if fused_steps:
+        stacked = pg._vstore.query_any_batched(
+            [s.values for s in fused_steps], impl=fused_steps[0].impl
+        )
+        for s, row in zip(fused_steps, stacked):
+            node_masks[s.slot] = row
+
+    for s in plan.mask_steps:
+        if s.kind == "node" and s.slot not in fused:
+            node_masks[s.slot] = pg._vstore.query_any(s.values, impl=s.impl)
+        elif s.kind == "edge":
+            edge_masks[s.slot] = pg._estore.query_any(s.values, impl=s.impl)
+    return node_masks, edge_masks
+
+
+def execute_plan(pg, plan: Plan) -> MatchResult:
+    """Execute ``plan`` against ``pg``; see module docstring for stages."""
+    g = pg._require_graph()
+    label_masks, rel_masks = _materialize_masks(pg, plan)
+
+    cands = []
+    for slot, node in enumerate(plan.pattern.nodes):
+        c = label_masks.get(slot, jnp.ones((g.n,), jnp.bool_))
+        for step in plan.predicate_steps:
+            if step.kind == "node" and step.slot == slot:
+                c = c & pg.vertex_predicate_mask(
+                    step.predicate.name, step.predicate.op, step.predicate.value
+                )
+        cands.append(c)
+
+    emasks = []
+    for slot, edge in enumerate(plan.pattern.edges):
+        e = rel_masks.get(slot, jnp.ones((g.m,), jnp.bool_))
+        for step in plan.predicate_steps:
+            if step.kind == "edge" and step.slot == slot:
+                e = e & pg.edge_predicate_mask(
+                    step.predicate.name, step.predicate.op, step.predicate.value
+                )
+        emasks.append(e)
+
+    dirs = tuple(e.direction for e in plan.pattern.edges)
+    vmask, emask, node_masks, alive = _propagate(g, tuple(cands), emasks=tuple(emasks), dirs=dirs)
+    return MatchResult(
+        vertex_mask=vmask,
+        edge_mask=emask,
+        node_masks=node_masks,
+        edge_masks=alive,
+        plan=plan,
+    )

@@ -1,0 +1,185 @@
+"""Cypher-lite pattern parser.
+
+Grammar (see README.md in this package for the prose version)::
+
+    pattern := node (edge node)*
+    node    := '(' [ident] [':' alts] [props] ')'
+    edge    := '-' '[' body ']' '->'  |  '<-' '[' body ']' '-'
+    body    := [ident] [':' alts] [props]
+    alts    := value ('|' value)*
+    props   := '{' pred (',' pred)* '}'
+    pred    := ident op literal        ;  op ∈ {=, ==, !=, <, <=, >, >=}
+    literal := number | quoted string | bareword
+
+Hand-rolled recursive descent over a regex token stream — no parser
+dependency, exact source positions in errors.  ``=`` normalizes to ``==``;
+numeric literals become int/float so predicate masks compare natively
+against the typed property columns.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple, Union
+
+from repro.query.ast import EdgePattern, NodePattern, Pattern, Predicate
+
+__all__ = ["parse", "ParseError"]
+
+
+class ParseError(ValueError):
+    """Pattern syntax error, with position context."""
+
+
+# NB ordering: arrows before comparison ops ('->' vs '>'), numbers before
+# punct so a signed literal like '-3' beats the lone '-' edge dash.  A '<'
+# immediately followed by '-' always reads as an incoming edge, so negative
+# literals after '<' need a space: '{age < -3}'.
+_TOKEN_RE = re.compile(
+    r"""\s*(?:
+        (?P<arrow_in>\<\-)        # <-
+      | (?P<arrow_out>\-\>)       # ->
+      | (?P<op>==|!=|<=|>=|=|<|>)
+      | (?P<string>"[^"]*"|'[^']*')
+      | (?P<number>[+-]?\d+\.\d*(?:[eE][+-]?\d+)?|[+-]?\.?\d+(?:[eE][+-]?\d+)?)
+      | (?P<punct>[()\[\]{}:,|\-])
+      | (?P<ident>[A-Za-z_][A-Za-z0-9_.]*)
+    )""",
+    re.VERBOSE,
+)
+
+
+def _tokenize(text: str) -> List[Tuple[str, str, int]]:
+    toks, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None or m.end() == m.start():
+            rest = text[pos:].lstrip()
+            if not rest:
+                break
+            raise ParseError(f"unexpected character {rest[0]!r} at position {pos} in {text!r}")
+        kind = m.lastgroup
+        toks.append((kind, m.group(kind), m.start(kind)))
+        pos = m.end()
+    return toks
+
+
+class _Cursor:
+    def __init__(self, text: str):
+        self.text = text
+        self.toks = _tokenize(text)
+        self.i = 0
+
+    def peek(self) -> Optional[Tuple[str, str, int]]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> Tuple[str, str, int]:
+        tok = self.peek()
+        if tok is None:
+            raise ParseError(f"unexpected end of pattern in {self.text!r}")
+        self.i += 1
+        return tok
+
+    def expect(self, value: str) -> None:
+        kind, val, pos = self.next()
+        if val != value:
+            raise ParseError(
+                f"expected {value!r} but found {val!r} at position {pos} in {self.text!r}"
+            )
+
+    def accept(self, value: str) -> bool:
+        tok = self.peek()
+        if tok is not None and tok[1] == value:
+            self.i += 1
+            return True
+        return False
+
+
+def _literal(cur: _Cursor) -> Union[int, float, str]:
+    kind, val, pos = cur.next()
+    if kind == "string":
+        return val[1:-1]
+    if kind == "number":
+        return float(val) if any(c in val for c in ".eE") else int(val)
+    if kind == "ident":
+        return val
+    raise ParseError(f"expected a literal, found {val!r} at position {pos} in {cur.text!r}")
+
+
+def _alts(cur: _Cursor) -> Tuple[str, ...]:
+    """``a|b|c`` after a ':' — attribute values, OR semantics (§VI)."""
+    out = [str(_literal(cur))]
+    while cur.accept("|"):
+        out.append(str(_literal(cur)))
+    return tuple(out)
+
+
+def _props(cur: _Cursor) -> Tuple[Predicate, ...]:
+    if not cur.accept("{"):
+        return ()
+    preds = []
+    while True:
+        kind, name, pos = cur.next()
+        if kind != "ident":
+            raise ParseError(
+                f"expected property name, found {name!r} at position {pos} in {cur.text!r}"
+            )
+        kind, op, pos = cur.next()
+        if kind != "op":
+            raise ParseError(
+                f"expected comparison operator, found {op!r} at position {pos} in {cur.text!r}"
+            )
+        preds.append(Predicate(name=name, op="==" if op == "=" else op, value=_literal(cur)))
+        if cur.accept("}"):
+            return tuple(preds)
+        cur.expect(",")
+
+
+def _entity_body(cur: _Cursor) -> Tuple[Optional[str], Tuple[str, ...], Tuple[Predicate, ...]]:
+    """Shared interior of node ``(...)`` and edge ``[...]``."""
+    var = None
+    tok = cur.peek()
+    if tok is not None and tok[0] == "ident":
+        var = cur.next()[1]
+    labels: Tuple[str, ...] = ()
+    if cur.accept(":"):
+        labels = _alts(cur)
+    return var, labels, _props(cur)
+
+
+def _node(cur: _Cursor) -> NodePattern:
+    cur.expect("(")
+    var, labels, preds = _entity_body(cur)
+    cur.expect(")")
+    return NodePattern(var=var, labels=labels, predicates=preds)
+
+
+def _edge(cur: _Cursor) -> EdgePattern:
+    """``-[...]->`` or ``<-[...]-`` (the only two directed forms)."""
+    kind, val, pos = cur.next()
+    incoming = kind == "arrow_in"
+    if not incoming and val != "-":
+        raise ParseError(f"expected edge, found {val!r} at position {pos} in {cur.text!r}")
+    cur.expect("[")
+    var, rels, preds = _entity_body(cur)
+    cur.expect("]")
+    if incoming:
+        cur.expect("-")
+    else:
+        kind, val, pos = cur.next()
+        if kind != "arrow_out":
+            raise ParseError(
+                f"expected '->' closing an edge, found {val!r} at position {pos} "
+                f"in {cur.text!r}"
+            )
+    return EdgePattern(var=var, rels=rels, predicates=preds, direction=-1 if incoming else 1)
+
+
+def parse(text: str) -> Pattern:
+    """Parse a pattern string into a :class:`Pattern` AST."""
+    cur = _Cursor(text)
+    nodes = [_node(cur)]
+    edges = []
+    while cur.peek() is not None:
+        edges.append(_edge(cur))
+        nodes.append(_node(cur))
+    return Pattern(nodes=tuple(nodes), edges=tuple(edges))

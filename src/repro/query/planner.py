@@ -1,0 +1,154 @@
+"""Selectivity-aware pattern planner.
+
+Decisions, all driven by per-attribute entity counts read off the DIP stores
+(``_AttrStore.attr_counts()`` — bitmap row sums / CSR segment lengths, the
+stats the paper's stores carry for free):
+
+1. **Chain orientation** (join order for a path): constraint propagation
+   starts from the more selective end of the chain, so if the rightmost node
+   pattern is estimated smaller than the leftmost the whole pattern is
+   reversed (semantically identical; ``Pattern.reversed()``).
+2. **Per-mask implementation**:
+     * ``arr``:   ``scan`` for tiny attribute universes (k < SCAN_MAX_K,
+                  where padding to the MXU wastes lanes), else ``matvec``.
+     * ``list``:  single implementation (``list``).
+     * ``listd``: ``budget`` (output-sized gather, O(est hits)) when the
+                  query is selective — est hits ≤ BUDGET_SEL_CUTOFF·nnz —
+                  else ``inverted`` (full O(nnz) scan).
+3. **Kernel fusion** (``arr`` only): when ≥2 node slots carry label masks,
+   they are batched into ONE ``bitmap_query`` launch (the batched multi-mask
+   entry point) instead of one launch per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.query.ast import Pattern
+from repro.query.plan import MaskStep, Plan, PredicateStep
+
+__all__ = ["plan_pattern", "SCAN_MAX_K", "BUDGET_SEL_CUTOFF", "FUSE_MIN_MASKS"]
+
+SCAN_MAX_K = 8  # arr: below this attribute-universe size the VPU row scan wins
+BUDGET_SEL_CUTOFF = 0.25  # listd: budget gather only pays off for selective queries
+FUSE_MIN_MASKS = 2  # arr: batch node-label masks into one kernel launch from here
+
+
+def _estimate(store, values: Tuple[str, ...], universe: int) -> Tuple[int, float]:
+    """(estimated hit count, selectivity) for an OR query over ``values``.
+
+    Σ of per-attribute counts — exact for disjoint attributes, an upper
+    bound under overlap; either way monotone in the true count, which is all
+    the ordering decisions need.
+    """
+    if store is None or not values:
+        return 0, 0.0
+    counts = store.attr_counts()
+    ids = store.amap.lookup(list(values))
+    ids = ids[ids >= 0]
+    est = int(counts[ids].sum()) if ids.size else 0
+    return est, est / max(universe, 1)
+
+
+def _choose_impl(
+    backend: str, est_count: int, nnz: int, k: int, override: Optional[str]
+) -> str:
+    if override is not None:
+        return override
+    if backend == "arr":
+        return "scan" if k < SCAN_MAX_K else "matvec"
+    if backend == "list":
+        return "list"
+    # listd: output-sized budget gather vs full inverted-CSR scan
+    if nnz > 0 and est_count <= BUDGET_SEL_CUTOFF * nnz:
+        return "budget"
+    return "inverted"
+
+
+def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
+    """Plan ``pattern`` against ``pg`` (a ``repro.core.PropGraph``).
+
+    ``impl`` force-overrides the per-mask implementation choice (the same
+    escape hatch ``PropGraph.query_labels(impl=...)`` exposes); fusion is
+    disabled under an override so the requested impl actually runs.
+    """
+    g = pg._require_graph()
+    vstore, estore = pg._vstore, pg._estore
+
+    # -- 1. chain orientation: start from the more selective end ------------
+    reversed_chain = False
+    if pattern.hops >= 1:
+        first, _ = _estimate(vstore, pattern.nodes[0].labels, g.n)
+        last, _ = _estimate(vstore, pattern.nodes[-1].labels, g.n)
+        first = first if pattern.nodes[0].labels else g.n
+        last = last if pattern.nodes[-1].labels else g.n
+        if last < first:
+            pattern = pattern.reversed()
+            reversed_chain = True
+
+    # -- 2. per-slot mask steps with impl choice ----------------------------
+    mask_steps = []
+    predicate_steps = []
+    for slot, node in enumerate(pattern.nodes):
+        if node.labels:
+            est, sel = _estimate(vstore, node.labels, g.n)
+            chosen = _choose_impl(
+                pg.backend, est, getattr(vstore.finalize(), "nnz", 0), vstore.k, impl
+            )
+            mask_steps.append(
+                MaskStep(
+                    kind="node",
+                    slot=slot,
+                    values=node.labels,
+                    impl=chosen,
+                    est_count=est,
+                    est_selectivity=sel,
+                )
+            )
+        for pred in node.predicates:
+            predicate_steps.append(PredicateStep(kind="node", slot=slot, predicate=pred))
+    for slot, edge in enumerate(pattern.edges):
+        if edge.rels:
+            est, sel = _estimate(estore, edge.rels, g.m)
+            chosen = _choose_impl(
+                pg.backend, est, getattr(estore.finalize(), "nnz", 0), estore.k, impl
+            )
+            mask_steps.append(
+                MaskStep(
+                    kind="edge",
+                    slot=slot,
+                    values=edge.rels,
+                    impl=chosen,
+                    est_count=est,
+                    est_selectivity=sel,
+                )
+            )
+        for pred in edge.predicates:
+            predicate_steps.append(PredicateStep(kind="edge", slot=slot, predicate=pred))
+
+    # -- 3. fusion: batch arr label masks into one kernel launch ------------
+    fused_slots: Tuple[int, ...] = ()
+    if pg.backend == "arr" and impl is None:
+        node_mask_slots = [s.slot for s in mask_steps if s.kind == "node"]
+        if len(node_mask_slots) >= FUSE_MIN_MASKS:
+            import jax
+
+            fused_slots = tuple(node_mask_slots)
+            fused_impl = "kernel" if jax.default_backend() == "tpu" else "matvec"
+            mask_steps = [
+                (
+                    dataclasses.replace(s, impl=fused_impl, fused=True)
+                    if s.kind == "node"
+                    else s
+                )
+                for s in mask_steps
+            ]
+
+    return Plan(
+        pattern=pattern,
+        mask_steps=tuple(mask_steps),
+        predicate_steps=tuple(predicate_steps),
+        backend=pg.backend,
+        reversed_chain=reversed_chain,
+        fused_node_slots=fused_slots,
+    )

@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests are optional off-CI
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_di, build_reverse_di, degrees, edge_lookup, neighbors_padded

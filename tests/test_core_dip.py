@@ -3,6 +3,7 @@ all three variants answer identical queries) + store-specific behaviour."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests are optional off-CI
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -28,6 +28,21 @@ def test_bitmap_query_all_selected():
     assert bool(jnp.all(bitmap_query(bm, mask) == bitmap_query_ref(bm, mask)))
 
 
+@pytest.mark.parametrize("q,k,n", [(1, 50, 1000), (3, 50, 1000), (8, 128, 4096), (2, 7, 333)])
+def test_bitmap_query_batched(q, k, n):
+    """Multi-mask entry (planner fusion): one launch ≡ q single-mask calls."""
+    from repro.kernels.bitmap_query import bitmap_query, bitmap_query_batched
+    from repro.kernels.bitmap_query.ref import bitmap_query_batched_ref
+
+    bm = jnp.asarray((np.random.rand(k, n) < 0.1).astype(np.int8))
+    masks = jnp.asarray(np.random.rand(q, k) < 0.3)
+    out = bitmap_query_batched(bm, masks)
+    assert out.shape == (q, n)
+    assert bool(jnp.all(out == bitmap_query_batched_ref(bm, masks)))
+    for i in range(q):
+        assert bool(jnp.all(out[i] == bitmap_query(bm, masks[i])))
+
+
 # -------------------------------------------------------------------- seg_mm
 @pytest.mark.parametrize("n,e,d", [(64, 256, 16), (500, 2000, 64), (37, 91, 8),
                                    (1000, 5000, 128)])

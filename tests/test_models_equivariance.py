@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests are optional off-CI
 from hypothesis import given, settings, strategies as st
 
 from repro.data import synthetic_graph_batch

@@ -1,0 +1,322 @@
+"""Pattern engine: parser round-trips, planner selectivity decisions, and
+match() ≡ hand-composed mask pipelines on random graphs, all DIP backends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.core.queries import induce_edge_mask
+from repro.query import (
+    EdgePattern,
+    NodePattern,
+    ParseError,
+    Pattern,
+    Predicate,
+    parse,
+    plan_pattern,
+)
+from repro.query.planner import BUDGET_SEL_CUTOFF
+
+
+# ------------------------------------------------------------------ parser
+@pytest.mark.parametrize(
+    "text",
+    [
+        "(a)",
+        "(a:person)",
+        "(:person|place)",
+        "(a:person {age > 30})",
+        '(a:person {age >= 30, name == "bob"})',
+        "(a:person)-[:follows]->(b:person)",
+        "(a)<-[r:follows|likes]-(b:place {x < -3})",
+        "(a:l1)-[:r1]->(b)-[e2:r2 {w != 0.5}]->(c:l2|l3)",
+        "(a {score <= 1.5})",
+    ],
+)
+def test_parse_roundtrip(text):
+    pat = parse(text)
+    assert parse(pat.to_text()) == pat
+
+
+def test_parse_ast_shape():
+    pat = parse('(a:person {age > 30})-[f:follows]->(b:person|place)')
+    assert pat == Pattern(
+        nodes=(
+            NodePattern(var="a", labels=("person",),
+                        predicates=(Predicate("age", ">", 30),)),
+            NodePattern(var="b", labels=("person", "place")),
+        ),
+        edges=(EdgePattern(var="f", rels=("follows",), direction=1),),
+    )
+    assert pat.hops == 1
+
+
+def test_parse_direction_and_eq_normalization():
+    pat = parse("(a)<-[:r]-(b {x = 3})")
+    assert pat.edges[0].direction == -1
+    assert pat.nodes[1].predicates[0].op == "=="
+
+
+@pytest.mark.parametrize("bad", ["(a", "(a)-(b)", "(a)-[:r]-(b)", "(a)->[:r]->(b)", "(a{x~3})"])
+def test_parse_errors(bad):
+    with pytest.raises(ParseError):
+        parse(bad)
+
+
+def test_pattern_reversed_involution():
+    pat = parse("(a:l1)-[:r1]->(b)<-[:r2]-(c:l2)")
+    assert pat.reversed().reversed() == pat
+    assert pat.reversed().edges[0].direction == 1  # <-[:r2]- flips to -[:r2]->
+
+
+# ----------------------------------------------------------------- fixture
+@pytest.fixture(params=["arr", "list", "listd"])
+def pg(request, rng):
+    src = rng.integers(0, 60, 300)
+    dst = rng.integers(0, 60, 300)
+    g = PropGraph(backend=request.param).add_edges_from(src, dst)
+    nodes = np.asarray(g.graph.node_map)
+    labels = rng.choice(["rare", "mid", "common"], size=len(nodes), p=[0.1, 0.3, 0.6])
+    g.add_node_labels(nodes, labels)
+    es, ed = np.asarray(g.graph.src), np.asarray(g.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es), p=[0.2, 0.8])
+    g.add_edge_relationships(nodes[es], nodes[ed], rels)
+    g.add_node_properties("age", nodes, rng.integers(0, 60, len(nodes)).astype(np.int32))
+    g._labels_np, g._rels_np = labels, rels
+    return g
+
+
+# ---------------------------------------------------------------- planner
+def test_planner_reverses_toward_selective_end(pg):
+    plan = plan_pattern(pg, parse("(a:common)-[:follows]->(b:rare)"))
+    assert plan.reversed_chain
+    assert plan.pattern.nodes[0].labels == ("rare",)
+    assert plan.pattern.edges[0].direction == -1
+    plan = plan_pattern(pg, parse("(a:rare)-[:follows]->(b:common)"))
+    assert not plan.reversed_chain
+
+
+def test_planner_skewed_selectivity_picks_cheaper_impl():
+    """listd: a selective query plans the output-sized budget gather, an
+    unselective one the full inverted scan — driven by attr_counts skew."""
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, 200, 2000)
+    dst = rng.integers(0, 200, 2000)
+    pg = PropGraph(backend="listd").add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    labels = rng.choice(["needle", "hay"], size=len(nodes), p=[0.02, 0.98])
+    pg.add_node_labels(nodes, labels)
+
+    plan_sel = plan_pattern(pg, parse("(a:needle)"))
+    plan_uns = plan_pattern(pg, parse("(a:hay)"))
+    (step_sel,) = plan_sel.mask_steps
+    (step_uns,) = plan_uns.mask_steps
+    assert step_sel.impl == "budget"
+    assert step_uns.impl == "inverted"
+    assert step_sel.est_selectivity < BUDGET_SEL_CUTOFF < step_uns.est_selectivity
+    assert "budget" in pg.explain("(a:needle)")
+    assert "inverted" in pg.explain("(a:hay)")
+    # both impls produce the same (correct) mask
+    expect = labels == "needle"
+    assert (np.asarray(pg.match("(a:needle)").vertex_mask) == expect).all()
+
+
+def test_planner_fuses_arr_label_masks(pg):
+    plan = plan_pattern(pg, parse("(a:rare)-[:follows]->(b:common)"))
+    if pg.backend == "arr":
+        assert plan.fused_node_slots == (0, 1)
+        assert all(s.fused for s in plan.mask_steps if s.kind == "node")
+        assert "fused" in plan.describe()
+    else:
+        assert plan.fused_node_slots == ()
+
+
+def test_impl_override_respected(pg):
+    override = {"arr": "scan", "list": None, "listd": "inverted"}[pg.backend]
+    plan = plan_pattern(pg, parse("(a:rare)-[:follows]->(b:common)"), impl=override)
+    assert plan.fused_node_slots == ()
+    if override:
+        assert all(s.impl == override for s in plan.mask_steps)
+
+
+# --------------------------------------------------------------- executor
+def _hand_single_hop(pg, l_tail, rel, l_head):
+    """The §VI hand-composed pipeline the acceptance criterion names."""
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    vm_t = np.asarray(pg.query_labels([l_tail]))
+    vm_h = np.asarray(pg.query_labels([l_head]))
+    em = np.asarray(pg.query_relationships([rel]))
+    emask = em & vm_t[es] & vm_h[ed]
+    vmask = np.zeros(pg.n_vertices, bool)
+    vmask[es[emask]] = True
+    vmask[ed[emask]] = True
+    return vmask, emask
+
+
+def test_match_equals_hand_composed_pipeline(pg):
+    res = pg.match("(a:rare)-[:follows]->(b:common)")
+    vexp, eexp = _hand_single_hop(pg, "rare", "follows", "common")
+    assert (np.asarray(res.edge_mask) == eexp).all()
+    assert (np.asarray(res.vertex_mask) == vexp).all()
+
+
+def test_match_same_label_equals_induce_edge_mask(pg):
+    """Uniform-label hop ≡ the existing induce_edge_mask + endpoint collect."""
+    res = pg.match("(a:mid)-[:likes]->(b:mid)")
+    vm = pg.query_labels(["mid"])
+    em = pg.query_relationships(["likes"])
+    eexp = np.asarray(induce_edge_mask(pg.graph, vm, em))
+    assert (np.asarray(res.edge_mask) == eexp).all()
+
+
+def _brute_force(pg, node_label_sets, edge_specs):
+    """Exhaustive path enumeration over the chain (exponential; tiny graphs)."""
+    labels, rels = pg._labels_np, pg._rels_np
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    n, m, h = pg.n_vertices, pg.n_edges, len(edge_specs)
+    nodeok = [
+        np.ones(n, bool) if ls is None else np.isin(labels, ls)
+        for ls in node_label_sets
+    ]
+    edgeok = [
+        np.ones(m, bool) if rs is None else np.isin(rels, rs)
+        for rs, _ in edge_specs
+    ]
+    adj_out = [[] for _ in range(n)]
+    adj_in = [[] for _ in range(n)]
+    for i, (a, b) in enumerate(zip(es, ed)):
+        adj_out[a].append((i, b))
+        adj_in[b].append((i, a))
+    vexp = np.zeros(n, bool)
+    eexp = np.zeros(m, bool)
+
+    def rec(pos, v, vs, epath):
+        if pos == h:
+            vexp[vs] = True
+            eexp[epath] = True
+            return
+        _, direction = edge_specs[pos]
+        for ei, w in adj_out[v] if direction == 1 else adj_in[v]:
+            if edgeok[pos][ei] and nodeok[pos + 1][w]:
+                rec(pos + 1, w, vs + [w], epath + [ei])
+
+    for v in np.flatnonzero(nodeok[0]):
+        rec(0, int(v), [int(v)], [])
+    return vexp, eexp
+
+
+@pytest.mark.parametrize(
+    "text,node_sets,edge_specs",
+    [
+        ("(a:rare)-[:follows]->(b)-[:likes]->(c:common)",
+         [["rare"], None, ["common"]], [(["follows"], 1), (["likes"], 1)]),
+        ("(a:rare)<-[:likes]-(b:mid|common)",
+         [["rare"], ["mid", "common"]], [(["likes"], -1)]),
+        ("(a)-[:follows]->(b:rare)<-[:follows]-(c)",
+         [None, ["rare"], None], [(["follows"], 1), (["follows"], -1)]),
+        ("(a:common)-[:follows|likes]->(b:rare)",
+         [["common"]], None),  # reversed-chain case, specs filled below
+    ],
+)
+def test_match_equals_brute_force(pg, text, node_sets, edge_specs):
+    if edge_specs is None:
+        node_sets = [["common"], ["rare"]]
+        edge_specs = [(["follows", "likes"], 1)]
+    res = pg.match(text)
+    vexp, eexp = _brute_force(pg, node_sets, edge_specs)
+    assert (np.asarray(res.vertex_mask) == vexp).all(), text
+    assert (np.asarray(res.edge_mask) == eexp).all(), text
+
+
+def test_match_with_predicates(pg):
+    res = pg.match("(a:rare|mid {age > 30})-[:likes]->(b)")
+    ages = np.asarray(pg.vertex_props["age"][0])
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    vm_a = np.isin(pg._labels_np, ["rare", "mid"]) & (ages > 30)
+    eexp = (pg._rels_np == "likes") & vm_a[es]
+    assert (np.asarray(res.edge_mask) == eexp).all()
+
+
+def test_match_single_node_pattern(pg):
+    res = pg.match("(a:rare {age <= 20})")
+    ages = np.asarray(pg.vertex_props["age"][0])
+    expect = (pg._labels_np == "rare") & (ages <= 20)
+    assert (np.asarray(res.vertex_mask) == expect).all()
+    assert res.n_edges() == 0
+
+
+def test_match_bindings_and_subgraph(pg):
+    res = pg.match("(a:rare)-[f:follows]->(b:common)")
+    b = res.bindings()
+    assert set(b) == {"a", "f", "b"}
+    vexp, eexp = _hand_single_hop(pg, "rare", "follows", "common")
+    assert (np.asarray(b["f"]) == eexp).all()
+    assert (np.asarray(b["a"] | b["b"]) == vexp).all()
+    sub, kept = res.subgraph(pg.graph)
+    assert sub.m == int(eexp.sum())
+    expanded = res.expand(pg.graph, 1)
+    assert bool(jnp.all(res.vertex_mask <= expanded))
+
+
+def test_match_unknown_label_empty(pg):
+    res = pg.match("(a:nope)-[:follows]->(b)")
+    assert res.n_vertices() == 0 and res.n_edges() == 0
+
+
+def test_match_unknown_property_raises(pg):
+    with pytest.raises(KeyError):
+        pg.match("(a {height > 3})")
+
+
+def test_match_string_predicate_raises(pg):
+    """Strings parse as literals but columns are numeric — ==/!= would
+    silently broadcast to a scalar, so execution must reject them."""
+    with pytest.raises(TypeError, match="labels/relationships"):
+        pg.match('(a {age != "old"})')
+
+
+def test_match_result_is_pytree(pg):
+    import jax
+
+    res = pg.match("(a:rare)-[:follows]->(b:common)")
+    leaves = jax.tree_util.tree_leaves(res)
+    assert all(hasattr(x, "dtype") for x in leaves)  # masks only, plan is meta
+    jax.block_until_ready(res)  # benchmarks rely on this blocking for real
+
+
+# ------------------------------------------------------ satellite regressions
+def test_query_any_empty_values_fast_path(pg):
+    assert not np.asarray(pg.query_labels([])).any()
+    assert not np.asarray(pg.query_relationships([])).any()
+    assert not np.asarray(pg._vstore.query_any([])).any()
+
+
+def test_queries_before_build_raise_runtime_error():
+    pg = PropGraph(backend="arr")
+    with pytest.raises(RuntimeError, match="add_edges_from"):
+        pg.query_labels(["x"])
+    with pytest.raises(RuntimeError, match="add_edges_from"):
+        pg.query_relationships(["x"])
+    with pytest.raises(RuntimeError, match="add_edges_from"):
+        pg.subgraph(labels=["x"])
+    with pytest.raises(RuntimeError, match="add_edges_from"):
+        pg.match("(a:x)")
+
+
+def test_attr_counts_match_histogram(pg):
+    counts = pg.label_counts()
+    for lab in ("rare", "mid", "common"):
+        assert counts[lab] == int((pg._labels_np == lab).sum())
+    rcounts = pg.relationship_counts()
+    assert rcounts["follows"] == int((pg._rels_np == "follows").sum())
+
+
+def test_query_any_batched_consistent(pg):
+    queries = [["rare"], ["mid", "common"], ["nope"]]
+    batched = np.asarray(pg._vstore.query_any_batched(queries))
+    for q, row in zip(queries, batched):
+        assert (row == np.asarray(pg.query_labels(q))).all()
+    if pg.backend == "arr":  # scan/kernel impls agree with matvec
+        for impl in ("scan", "kernel"):
+            alt = np.asarray(pg._vstore.query_any_batched(queries, impl=impl))
+            assert (alt == batched).all(), impl
