@@ -1,0 +1,99 @@
+"""Sharded DIP query scaling: locale sweep over virtual devices.
+
+The paper scales 1→8 Chapel locales (§VII); here the same sweep runs as REAL
+multi-device execution — ``make_entity_mesh(P)`` sub-meshes over virtual CPU
+devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set
+automatically when this file is the main module), each device scanning its
+N/P entity slice under ``shard_map`` (docs/ARCHITECTURE.md §7).
+
+Rows (JSON via ``benchmarks.common.emit_json``; ``BENCH_JSON_PATH`` appends
+to a file for the cross-PR trajectory):
+  * ``shard_query_{backend}_d{P}``  — query_labels on a P-device mesh.
+  * ``shard_match_{backend}_d{P}``  — full 1-hop ``match`` on the mesh.
+  * ``shard_query_{backend}_d0``    — the single-device (mesh=None) baseline.
+
+Method note: virtual host devices share one CPU's cores, so wall-clock is NOT
+expected to drop 1/P — the sweep validates the distribution machinery
+(placement, shard_map, collective combination) and measures its overhead;
+true scaling needs one chip per shard (``method`` records this).
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede first jax init to take effect
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+
+METHOD = "host-virtual-devices"
+PATTERN = "(a:l1|l2)-[:follows]->(b:l3)"
+
+
+def _build(backend: str, m: int, mesh, seed: int = 0):
+    from repro.core import PropGraph
+    from repro.graph import random_uniform_graph
+
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    labels = rng.choice([f"l{i}" for i in range(12)], size=len(nodes))
+    pg.add_node_labels(nodes, labels)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es))
+    pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    return pg
+
+
+def run(m: int = 100_000, device_counts=(1, 2, 4, 8)) -> None:
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.core.io import load_propgraph, save_propgraph
+    from repro.launch.mesh import make_entity_mesh
+
+    avail = len(jax.devices())
+    counts = [c for c in device_counts if c <= avail]
+    if counts != list(device_counts):
+        print(f"# bench_shard: only {avail} device(s) visible — sweeping {counts} "
+              "(run standalone or set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    # ingest ONCE (the expensive §V path), then reopen per backend / locale
+    # count from disk — the saved format is backend- and placement-independent
+    tmp = tempfile.mkdtemp(prefix="bench_shard_")
+    path = save_propgraph(f"{tmp}/pg", _build("arr", m, mesh=None))
+
+    for backend in ("arr", "list", "listd"):
+        pg0 = load_propgraph(path, backend=backend)
+        t = time_call(lambda: pg0.query_labels(["l1", "l2"]))
+        emit_json(f"shard_query_{backend}_d0_m{m}", t, backend=backend, m=m,
+                  devices=0, method=METHOD, note="single-device baseline")
+        baseline = np.asarray(pg0.query_labels(["l1", "l2"]))
+
+        for p in counts:
+            mesh = make_entity_mesh(p)
+            pg = load_propgraph(path, backend=backend, mesh=mesh)
+            got = np.asarray(pg.query_labels(["l1", "l2"]))
+            assert (got == baseline).all(), (backend, p)  # bench rows are verified
+            t = time_call(lambda: pg.query_labels(["l1", "l2"]))
+            emit_json(f"shard_query_{backend}_d{p}_m{m}", t, backend=backend,
+                      m=m, devices=p, method=METHOD)
+            t = time_call(lambda: pg.match(PATTERN))
+            emit_json(f"shard_match_{backend}_d{p}_m{m}", t, backend=backend,
+                      m=m, devices=p, method=METHOD)
+
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=100_000)
+    a = ap.parse_args()
+    run(m=a.m)

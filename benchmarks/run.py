@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
   kernels      — Pallas kernels vs oracles (interpret mode)
   match        — pattern-engine rows (beyond-paper; JSON lines via
                  benchmarks.common.emit_json, see bench_match.py)
+  shard        — sharded-store locale sweep 1→8 virtual devices (JSON lines;
+                 run ``python -m benchmarks.bench_shard`` standalone to get
+                 8 virtual devices — in-process it sweeps what's visible)
 Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
@@ -38,6 +41,10 @@ def main() -> None:
     print("# match (pattern engine: declarative vs hand-composed, fusion, skew)")
     from benchmarks import bench_match
     bench_match.run(m=20_000 if small else 100_000)
+
+    print("# shard (sharded DIP stores: locale sweep over virtual devices)")
+    from benchmarks import bench_shard
+    bench_shard.run(m=20_000 if small else 100_000)
 
 
 if __name__ == "__main__":

@@ -14,8 +14,9 @@ with the explicit, sorted edge list so both edge-centric (load-balanced over
 ``m``) and vertex-centric (offset lookup over ``n``) algorithms are natural.
 
 Distribution: the edge arrays and the vertex array are 1-D block distributed —
-in this repo that is ``NamedSharding(mesh, P(("pod", "data")))`` applied at the
-launch layer; all functions below are pure and pjit-compatible.
+``core.dip_shard.place_graph`` applies the ``launch.sharding.pg_di_specs``
+NamedShardings (entity axes = ``("pod", "data")`` on production meshes); all
+functions below are pure and pjit-compatible (docs/ARCHITECTURE.md §7).
 """
 from __future__ import annotations
 

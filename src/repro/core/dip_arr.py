@@ -5,12 +5,15 @@ whether vertices or edges are stored); storing an attribute sets ``True`` for
 the entities that carry it.  Space Θ(N·K); insert O(NK/P); query O(N/P).
 
 Chapel's ``domain(2) dmapped Block`` becomes a dense ``(K, N)`` array.  One
-deliberate layout change (recorded in DESIGN.md §2): we shard the *entity*
-dimension only — ``P(None, "data")`` — rather than both dimensions, so a query
-for any attribute subset touches exclusively locally-owned entities.  This
-preserves the property the paper credits for DIP-ARR's scaling ("each locale
-only processes the array chunk it owns") while keeping the K dimension (≤ a few
-hundred) resident everywhere.
+deliberate layout change (recorded in docs/ARCHITECTURE.md §2): we shard the
+*entity* dimension only — ``P(None, entity_axes)`` — rather than both
+dimensions, so a query for any attribute subset touches exclusively
+locally-owned entities.  This preserves the property the paper credits for
+DIP-ARR's scaling ("each locale only processes the array chunk it owns")
+while keeping the K dimension (≤ a few hundred) resident everywhere.  The
+multi-device realization lives in ``core.dip_shard`` (placement + shard_map
+queries over ``launch.sharding.pg_arr_specs``); this module stays
+single-device and pure.
 
 Query formulations (benchmarked against each other in §Perf):
   * ``query_any_scan``   — paper-faithful row scan: ``any(bitmap[ids], axis=0)``.

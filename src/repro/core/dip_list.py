@@ -5,6 +5,10 @@ Ragged per-entity lists have exactly one TPU-native encoding: offsets + values
 (CSR).  ``off[N+1]`` and ``val[nnz]`` are 1-D block-distributable the same way
 DI's SEG/DST are — entity-major, so a query's membership scan touches only the
 shard-local slice of ``val`` (the paper's O(NK/P) with P = shard count).
+That distribution is realized in ``core.dip_shard``: ``val``/``slot_entity``
+shard over the slot axis per ``launch.sharding.pg_list_specs`` and the query
+runs under ``shard_map`` with one pmax all-reduce combining per-shard masks
+(docs/ARCHITECTURE.md §7).
 
 Space O(N·K) worst case (every entity holds every attribute), matching §IV-D.
 """

@@ -14,7 +14,8 @@ TPUs have no remote pointer dereference, so this module ships two forms:
      ~10× slower than DIP-LIST/DIP-ARR in our benchmarks too (bench_query.py).
 
   2. **Inverted CSR** (`query_any_inverted` / `query_any_budget`): the
-     TPU-idiomatic replacement recorded in DESIGN.md §2 — attribute-major
+     TPU-idiomatic replacement recorded in docs/ARCHITECTURE.md §2 —
+     attribute-major
      offsets ``a_off[k+1]`` + entity list ``a_ent[nnz]`` deliver the same
      attribute→entities capability with parallel reads.  ``query_any_budget``
      is genuinely output-sized: it touches only the selected attributes'

@@ -1,0 +1,349 @@
+"""Multi-device sharded DIP execution — the paper's "distributable" claim.
+
+The three DIP stores are distributable by construction (§IV): their entity
+axis block-distributes over P locales, giving O(NK/P) query cost.  This
+module realizes that on a JAX device mesh (docs/ARCHITECTURE.md §7):
+
+  * ``place_*`` pads the entity/slot axis of a host-built store up to a
+    multiple of the shard count P and places every array with the
+    ``NamedSharding`` from ``launch.sharding.pg_specs`` — bitmap rows,
+    CSR ``val`` slices and inverted-CSR segments each land block-distributed
+    over ``pg_entity_axes(mesh)``.
+  * ``query_any_sharded`` runs the OR-semantics query under ``shard_map``:
+    every device scans ONLY its local slice.
+      - ``arr``: (1, K) @ (K, N/P) matvec / row scan / Pallas kernel per
+        device; output stays entity-sharded — zero collectives.
+      - ``list`` / ``listd``: slot shards don't align with entity shards at
+        the boundaries, so each device scatters its local hits into a full
+        (n,) int8 partial mask and ONE ``pmax`` all-reduce ORs them (the
+        single mask-combination collective the executor's contract names;
+        1 byte/entity, overflow-free at any P).
+
+Padding is harmless by construction: pad slots scatter out of range (list)
+or carry ``slot_idx >= nnz`` and are masked (listd); pad bitmap columns are
+zero and are sliced off the output.  Every sharded query is
+bitwise-identical to its single-device counterpart (tests/test_shard_pg.py
+proves it on 8 virtual devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.di import DIGraph
+from repro.core.dip_arr import DIPArr
+from repro.core.dip_list import DIPList
+from repro.core.dip_listd import DIPListD
+
+__all__ = [
+    "ShardedDIPArr",
+    "ShardedDIPList",
+    "ShardedDIPListD",
+    "place_graph",
+    "place_store",
+    "place_column",
+    "query_any_sharded",
+    "query_any_batched_sharded",
+]
+
+
+def _axes(mesh):
+    from repro.launch.sharding import pg_entity_axes
+
+    return pg_entity_axes(mesh)
+
+
+def _shards(mesh) -> int:
+    from repro.launch.sharding import pg_entity_shards
+
+    return pg_entity_shards(mesh)
+
+
+def _pad_to(x: jax.Array, size: int, fill=0) -> jax.Array:
+    if x.shape[0] == size:
+        return x
+    return jnp.pad(x, [(0, size - x.shape[0])] + [(0, 0)] * (x.ndim - 1),
+                   constant_values=fill)
+
+
+# --------------------------------------------------------------- sharded stores
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["bitmap"],
+    meta_fields=["k", "n", "n_pad", "mesh"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedDIPArr:
+    """DIP-ARR bitmap padded to ``(k, n_pad)`` (n_pad = P⌈n/P⌉) and placed
+    ``P(None, entity_axes)`` — K resident everywhere, entities split."""
+
+    bitmap: jax.Array  # (k, n_pad) int8, entity-sharded
+    k: int
+    n: int  # logical entity count (columns ≥ n are zero padding)
+    n_pad: int
+    mesh: jax.sharding.Mesh
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["val", "slot_entity"],
+    meta_fields=["k", "n", "nnz", "nnz_pad", "mesh"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedDIPList:
+    """DIP-LIST CSR with ``val``/``slot_entity`` padded to nnz_pad and slot-
+    sharded.  Pad slots carry ``slot_entity = n`` (out of range), so the
+    query's ``mode='drop'`` scatter discards them for free — no validity
+    array needed.  The CSR ``off`` stays host-side: the sharded query
+    scatters by ``slot_entity`` and never reads per-entity offsets."""
+
+    val: jax.Array  # (nnz_pad,) int32, slot-sharded
+    slot_entity: jax.Array  # (nnz_pad,) int32, slot-sharded; pad slots = n
+    k: int
+    n: int
+    nnz: int  # logical slot count (slots ≥ nnz are padding)
+    nnz_pad: int
+    mesh: jax.sharding.Mesh
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["a_off", "a_ent", "slot_idx"],
+    meta_fields=["k", "n", "nnz", "nnz_pad", "mesh"],
+)
+@dataclasses.dataclass(frozen=True)
+class ShardedDIPListD:
+    """DIP-LISTD's inverted CSR, slot-sharded.  Only the query-side arrays
+    ship to devices: the linked-chain pointer arrays stay host-side (the
+    pointer chase is inherently sequential — §VI-B — and is exactly what the
+    inverted layout replaces; see docs/ARCHITECTURE.md §2)."""
+
+    a_off: jax.Array  # (k+1,) int32, replicated
+    a_ent: jax.Array  # (nnz_pad,) int32, slot-sharded (attribute-major)
+    slot_idx: jax.Array  # (nnz_pad,) int32 global slot index, slot-sharded
+    k: int
+    n: int
+    nnz: int
+    nnz_pad: int
+    mesh: jax.sharding.Mesh
+
+
+ShardedStore = Union[ShardedDIPArr, ShardedDIPList, ShardedDIPListD]
+
+_ARR_IMPLS = ("matvec", "scan", "kernel")
+
+
+# ------------------------------------------------------------------- placement
+def _put(x: jax.Array, mesh, spec: P) -> jax.Array:
+    """Place with ``spec``, falling back to replication when the leading dim
+    doesn't divide the shard count (NamedSharding placement requires even
+    shards; the DIP stores avoid this by padding, but the DI arrays and
+    property columns keep their exact logical sizes — same divisible-or-
+    replicate gate as ``launch.sharding.gnn_batch_specs``)."""
+    if spec != P() and x.ndim >= 1 and x.shape[0] % _shards(mesh) != 0:
+        spec = P()
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def place_column(col: jax.Array, mesh) -> jax.Array:
+    """Entity-shard a (n,)/(m,) column (typed property / valid mask)."""
+    from repro.launch.sharding import pg_prop_spec
+
+    return _put(col, mesh, pg_prop_spec(mesh))
+
+
+def place_graph(g: DIGraph, mesh) -> DIGraph:
+    """Place the DI arrays per ``pg_di_specs``: src/dst entity(edge)-sharded
+    (when divisible), seg/node_map replicated."""
+    from repro.launch.sharding import pg_di_specs
+
+    specs = pg_di_specs(mesh)
+    return dataclasses.replace(
+        g,
+        src=_put(g.src, mesh, specs["src"]),
+        dst=_put(g.dst, mesh, specs["dst"]),
+        seg=_put(g.seg, mesh, specs["seg"]),
+        node_map=_put(g.node_map, mesh, specs["node_map"]),
+    )
+
+
+def _pad_multiple(mesh, size: int) -> int:
+    """Smallest positive multiple of the shard count ≥ ``size`` — the padded
+    extent of every sharded store axis (shard_map needs even shards)."""
+    p = _shards(mesh)
+    return max(-(-size // p), 1) * p
+
+
+def place_store(backend: str, store, mesh) -> ShardedStore:
+    """Pad + place a host-built DIP store for sharded execution."""
+    if backend == "arr":
+        return place_dip_arr(store, mesh)
+    if backend == "list":
+        return place_dip_list(store, mesh)
+    if backend == "listd":
+        return place_dip_listd(store, mesh)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def place_dip_arr(store: DIPArr, mesh) -> ShardedDIPArr:
+    from repro.launch.sharding import pg_arr_specs
+
+    n_pad = _pad_multiple(mesh, store.n)
+    bitmap = jnp.pad(store.bitmap, ((0, 0), (0, n_pad - store.n)))
+    bitmap = jax.device_put(bitmap, NamedSharding(mesh, pg_arr_specs(mesh)["bitmap"]))
+    return ShardedDIPArr(bitmap=bitmap, k=store.k, n=store.n, n_pad=n_pad, mesh=mesh)
+
+
+def place_dip_list(store: DIPList, mesh) -> ShardedDIPList:
+    from repro.launch.sharding import pg_list_specs
+
+    specs = pg_list_specs(mesh)
+    nnz_pad = _pad_multiple(mesh, store.nnz)
+    put = lambda x, s: _put(x, mesh, s)
+    return ShardedDIPList(
+        val=put(_pad_to(store.val, nnz_pad), specs["val"]),
+        # pad fill = n: out of range, so the query scatter drops pad slots
+        slot_entity=put(_pad_to(store.slot_entity, nnz_pad, fill=store.n),
+                        specs["slot_entity"]),
+        k=store.k, n=store.n, nnz=store.nnz, nnz_pad=nnz_pad, mesh=mesh,
+    )
+
+
+def place_dip_listd(store: DIPListD, mesh) -> ShardedDIPListD:
+    from repro.launch.sharding import pg_listd_specs
+
+    specs = pg_listd_specs(mesh)
+    nnz_pad = _pad_multiple(mesh, store.nnz)
+    put = lambda x, s: _put(x, mesh, s)
+    return ShardedDIPListD(
+        a_off=put(store.a_off, specs["a_off"]),
+        a_ent=put(_pad_to(store.a_ent, nnz_pad), specs["a_ent"]),
+        slot_idx=put(jnp.arange(nnz_pad, dtype=jnp.int32), specs["a_ent"]),
+        k=store.k, n=store.n, nnz=store.nnz, nnz_pad=nnz_pad, mesh=mesh,
+    )
+
+
+# --------------------------------------------------------------------- queries
+def _local_arr(bitmap_l: jax.Array) -> DIPArr:
+    """The device-local (K, N/P) bitmap slice as a DIPArr, so the per-device
+    query delegates to dip_arr's impls — the OR-of-rows math lives there
+    only."""
+    return DIPArr(bitmap=bitmap_l, k=bitmap_l.shape[0], n=bitmap_l.shape[1])
+
+
+def _arr_local(bitmap_l: jax.Array, mask: jax.Array, impl: str):
+    from repro.core import dip_arr
+
+    return dip_arr.query_any(_local_arr(bitmap_l), mask, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("impl", "tile_n"))
+def _arr_query_sharded(ss: ShardedDIPArr, mask: jax.Array, *, impl: str,
+                       tile_n: int = 2048) -> jax.Array:
+    if impl == "kernel":
+        from repro.kernels.bitmap_query import ops as _ops
+
+        out = _ops.bitmap_query_sharded(ss.bitmap, mask, mesh=ss.mesh, tile_n=tile_n)
+        return out[: ss.n]
+    ax = _axes(ss.mesh)
+    f = shard_map(
+        partial(_arr_local, impl=impl),
+        mesh=ss.mesh, in_specs=(P(None, ax), P()), out_specs=P(ax),
+    )
+    return f(ss.bitmap, mask)[: ss.n]
+
+
+@partial(jax.jit, static_argnames=("impl", "tile_n"))
+def _arr_query_batched_sharded(ss: ShardedDIPArr, masks: jax.Array, *, impl: str,
+                               tile_n: int = 2048) -> jax.Array:
+    if impl == "kernel":
+        from repro.kernels.bitmap_query import ops as _ops
+
+        out = _ops.bitmap_query_batched_sharded(ss.bitmap, masks, mesh=ss.mesh,
+                                                tile_n=tile_n)
+        return out[:, : ss.n]
+    ax = _axes(ss.mesh)
+
+    def local(bitmap_l, ms):
+        from repro.core import dip_arr
+
+        return dip_arr.query_any_batched(_local_arr(bitmap_l), ms, impl=impl)
+
+    f = shard_map(local, mesh=ss.mesh, in_specs=(P(None, ax), P()),
+                  out_specs=P(None, ax))
+    return f(ss.bitmap, masks)[:, : ss.n]
+
+
+@jax.jit
+def _list_query_sharded(ss: ShardedDIPList, mask: jax.Array) -> jax.Array:
+    ax = _axes(ss.mesh)
+
+    def local(val_l, ent_l, m):
+        # hits among MY slots only; pad slots scatter to entity n → dropped
+        hit = m[jnp.clip(val_l, 0, ss.k - 1)]
+        part = jnp.zeros((ss.n,), jnp.int8).at[ent_l].max(
+            hit.astype(jnp.int8), mode="drop"
+        )
+        # the single mask-combination collective: OR (max of 0/1 bytes, so
+        # no overflow at any P) of partial masks across shards
+        return jax.lax.pmax(part, ax) > 0
+
+    f = shard_map(local, mesh=ss.mesh,
+                  in_specs=(P(ax), P(ax), P()), out_specs=P())
+    return f(ss.val, ss.slot_entity, mask)
+
+
+@jax.jit
+def _listd_query_sharded(ss: ShardedDIPListD, mask: jax.Array) -> jax.Array:
+    ax = _axes(ss.mesh)
+
+    def local(ent_l, idx_l, a_off, m):
+        # slot → owning attribute via the replicated inverted-CSR offsets
+        a = jnp.clip(jnp.searchsorted(a_off, idx_l, side="right") - 1, 0, ss.k - 1)
+        hit = m[a] & (idx_l < ss.nnz)
+        part = jnp.zeros((ss.n,), jnp.int8).at[ent_l].max(
+            hit.astype(jnp.int8), mode="drop"
+        )
+        return jax.lax.pmax(part, ax) > 0
+
+    f = shard_map(local, mesh=ss.mesh,
+                  in_specs=(P(ax), P(ax), P(), P()), out_specs=P())
+    return f(ss.a_ent, ss.slot_idx, ss.a_off, mask)
+
+
+def query_any_sharded(backend: str, ss: ShardedStore, attr_mask: jax.Array,
+                      *, impl: Optional[str] = None) -> jax.Array:
+    """(n,) bool OR-semantics query, distributed over the store's mesh.
+
+    ``impl`` follows the single-device namespace; impls whose work layout is
+    inherently single-device (``listd`` ``budget``/``linked``) degrade to the
+    ``inverted`` slot scan — the planner's estimates still hold (the sharded
+    scan is O(nnz/P))."""
+    if backend == "arr":
+        if (impl or "matvec") not in _ARR_IMPLS:
+            raise ValueError(f"unknown impl {impl!r}")
+        return _arr_query_sharded(ss, attr_mask, impl=impl or "matvec")
+    if backend == "list":
+        return _list_query_sharded(ss, attr_mask)
+    if backend == "listd":
+        # budget/linked are single-device work layouts → inverted slot scan;
+        # anything else is a typo and fails like the single-device dispatcher
+        if impl not in (None, "inverted", "budget", "linked"):
+            raise ValueError(f"unknown impl {impl!r}")
+        return _listd_query_sharded(ss, attr_mask)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def query_any_batched_sharded(ss: ShardedDIPArr, attr_masks: jax.Array,
+                              *, impl: Optional[str] = None) -> jax.Array:
+    """(Q, n) bool — the planner's fused multi-mask entry, sharded (arr only;
+    other backends batch via a host loop in ``_AttrStore``)."""
+    if (impl or "matvec") not in _ARR_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}")
+    return _arr_query_batched_sharded(ss, attr_masks, impl=impl or "matvec")

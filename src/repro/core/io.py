@@ -67,9 +67,15 @@ def save_propgraph(path: str, pg: PropGraph) -> str:
     return path
 
 
-def load_propgraph(path: str, *, backend: Optional[str] = None) -> PropGraph:
+def load_propgraph(
+    path: str, *, backend: Optional[str] = None, mesh=None
+) -> PropGraph:
     """Load; ``backend`` may differ from the saved one (stores are rebuilt
-    from raw pairs — the bulk build is the cheap step, §VII-B)."""
+    from raw pairs — the bulk build is the cheap step, §VII-B).  ``mesh``
+    loads the graph directly onto a device mesh (the saved format is
+    placement-independent) with the docs/ARCHITECTURE.md §7 layout — DIP
+    stores entity-sharded, DI arrays/columns sharded when divisible — so an
+    ingested-once graph reopens distributed without re-ingesting."""
     with open(os.path.join(path, "manifest.json")) as f:
         man = json.load(f)
     if man["version"] != _FORMAT_VERSION:
@@ -77,15 +83,19 @@ def load_propgraph(path: str, *, backend: Optional[str] = None) -> PropGraph:
     with np.load(os.path.join(path, "graph.npz")) as z:
         data = {k: z[k] for k in z.files}
 
-    pg = PropGraph(backend=backend or man["backend"])
+    pg = PropGraph(backend=backend or man["backend"], mesh=mesh)
     g = DIGraph(
         src=jnp.asarray(data["src"]), dst=jnp.asarray(data["dst"]),
         seg=jnp.asarray(data["seg"]), node_map=jnp.asarray(data["node_map"]),
         n=int(man["n"]), m=int(man["m"]),
     )
+    if mesh is not None:
+        from repro.core import dip_shard
+
+        g = dip_shard.place_graph(g, mesh)
     pg.graph = g
-    pg._vstore = _AttrStore(pg.backend, g.n)
-    pg._estore = _AttrStore(pg.backend, max(g.m, 1))
+    pg._vstore = _AttrStore(pg.backend, g.n, mesh=mesh)
+    pg._estore = _AttrStore(pg.backend, max(g.m, 1), mesh=mesh)
     pg._vstore.amap = AttributeMap(man["vertex_labels"])
     pg._estore.amap = AttributeMap(man["edge_relationships"])
     if len(data["v_ent"]):
@@ -95,9 +105,11 @@ def load_propgraph(path: str, *, backend: Optional[str] = None) -> PropGraph:
         pg._estore._pairs_e.append(data["e_ent"])
         pg._estore._pairs_a.append(data["e_attr"])
     for name in man["vertex_props"]:
-        pg.vertex_props[name] = (jnp.asarray(data[f"vp_{name}"]),
-                                 jnp.asarray(data[f"vpm_{name}"]))
+        pg.vertex_props[name] = pg._place_column(
+            jnp.asarray(data[f"vp_{name}"]), jnp.asarray(data[f"vpm_{name}"])
+        )
     for name in man["edge_props"]:
-        pg.edge_props[name] = (jnp.asarray(data[f"ep_{name}"]),
-                               jnp.asarray(data[f"epm_{name}"]))
+        pg.edge_props[name] = pg._place_column(
+            jnp.asarray(data[f"ep_{name}"]), jnp.asarray(data[f"epm_{name}"])
+        )
     return pg

@@ -16,6 +16,16 @@ dense int ids (`AttributeMap`), (2) internal vertex/edge indices generated
 (vertex normalization + `edge_lookup` binary search), (3) bulk insert into the
 chosen DIP backend.  Backends: ``arr`` (DIP-ARR bitmap), ``list`` (DIP-LIST
 CSR), ``listd`` (DIP-LISTD linked chains + inverted CSR).
+
+Distribution (docs/ARCHITECTURE.md §7): ``PropGraph(backend=..., mesh=...)``
+opts into multi-device execution via ``core.dip_shard`` and the
+``launch.sharding.pg_specs`` family.  The DIP stores — the heavy query-side
+data — are padded to the shard count and always entity-sharded, and every
+query runs under ``shard_map`` so each device scans only its N/P entity
+slice.  DI arrays and typed property columns keep their exact logical sizes:
+they shard when their length divides the device count and replicate
+otherwise (explicit placements require even shards).  Results are
+bitwise-identical to the default single-device path.
 """
 from __future__ import annotations
 
@@ -26,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dip_arr, dip_list, dip_listd
+from repro.core import dip_arr, dip_list, dip_listd, dip_shard
 from repro.core.attr_map import AttributeMap
 from repro.core.di import DIGraph, build_di, edge_lookup
 from repro.core.queries import extract_subgraph, filtered_bfs, induce_edge_mask
@@ -37,17 +47,24 @@ BACKENDS = ("arr", "list", "listd")
 
 
 class _AttrStore:
-    """One DIP instance over ``n_entities`` (vertices or edges)."""
+    """One DIP instance over ``n_entities`` (vertices or edges).
 
-    def __init__(self, backend: str, n_entities: int):
+    With ``mesh`` set, ``finalize_sharded()`` additionally maintains a padded,
+    device-placed copy of the store (``core.dip_shard``) and the query paths
+    run under ``shard_map``; both caches invalidate together on ``insert``.
+    """
+
+    def __init__(self, backend: str, n_entities: int, mesh=None):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.backend = backend
         self.n = n_entities
+        self.mesh = mesh
         self.amap = AttributeMap()
         self._pairs_e: List[np.ndarray] = []  # entity ids, insertion order
         self._pairs_a: List[np.ndarray] = []  # attribute ids
         self._store = None
+        self._sharded = None
         self._counts: Optional[np.ndarray] = None
         self._dirty = True
 
@@ -59,6 +76,7 @@ class _AttrStore:
         self._pairs_e.append(entity_ids[ok])
         self._pairs_a.append(attr_ids[ok].astype(np.int32))
         self._counts = None
+        self._sharded = None
         self._dirty = True
 
     @property
@@ -78,6 +96,13 @@ class _AttrStore:
             self._store = dip_listd.build_dip_listd(ent, att, k=self.k, n=self.n)
         self._dirty = False
         return self._store
+
+    def finalize_sharded(self):
+        """Padded, mesh-placed copy of the finalized store (mesh mode only)."""
+        store = self.finalize()  # clears _dirty; _sharded invalidates on insert
+        if self._sharded is None:
+            self._sharded = dip_shard.place_store(self.backend, store, self.mesh)
+        return self._sharded
 
     def known_ids(self, values: Sequence[str]) -> np.ndarray:
         """Interned attribute ids for ``values`` (unknown values dropped)."""
@@ -107,6 +132,11 @@ class _AttrStore:
             # degenerate query (empty list / all-unknown values): the answer
             # is definitionally empty — skip the store entirely
             return jnp.zeros((self.n,), jnp.bool_)
+        if self.mesh is not None:
+            mask = jnp.asarray(self.amap.mask(values, self.k))
+            return dip_shard.query_any_sharded(
+                self.backend, self.finalize_sharded(), mask, impl=impl
+            )
         store = self.finalize()
         mask = jnp.asarray(self.amap.mask(values, self.k))
         if self.backend == "arr":
@@ -128,19 +158,30 @@ class _AttrStore:
         Q masks go through ONE matvec / Pallas-kernel launch (the planner's
         fusion path); other backends fall back to a per-query loop."""
         if self.backend == "arr":
-            store = self.finalize()
             masks = jnp.asarray(
                 np.stack([self.amap.mask(v, self.k) for v in values_list])
             )
-            return dip_arr.query_any_batched(store, masks, impl=impl or "matvec")
+            if self.mesh is not None:
+                return dip_shard.query_any_batched_sharded(
+                    self.finalize_sharded(), masks, impl=impl
+                )
+            return dip_arr.query_any_batched(self.finalize(), masks, impl=impl or "matvec")
         return jnp.stack([self.query_any(v, impl=impl) for v in values_list])
 
 
 class PropGraph:
-    """A static, directed, labeled property multigraph over the DI structure."""
+    """A static, directed, labeled property multigraph over the DI structure.
 
-    def __init__(self, backend: str = "arr"):
+    ``mesh=None`` (default) runs single-device, exactly as before.  Passing a
+    device mesh (e.g. ``launch.mesh.make_entity_mesh()``) distributes the
+    entity axis of the DIP stores over its devices (DI arrays and property
+    columns shard when divisible, replicate otherwise) — queries return the
+    same masks, computed shard-locally (docs/ARCHITECTURE.md §7).
+    """
+
+    def __init__(self, backend: str = "arr", mesh=None):
         self.backend = backend
+        self.mesh = mesh
         self.graph: Optional[DIGraph] = None
         self._vstore: Optional[_AttrStore] = None
         self._estore: Optional[_AttrStore] = None
@@ -152,8 +193,10 @@ class PropGraph:
     def add_edges_from(self, src, dst) -> "PropGraph":
         """Bulk edge ingestion → DI build (sort + normalize + SEG)."""
         self.graph = build_di(np.asarray(src), np.asarray(dst))
-        self._vstore = _AttrStore(self.backend, self.graph.n)
-        self._estore = _AttrStore(self.backend, max(self.graph.m, 1))
+        if self.mesh is not None:
+            self.graph = dip_shard.place_graph(self.graph, self.mesh)
+        self._vstore = _AttrStore(self.backend, self.graph.n, mesh=self.mesh)
+        self._estore = _AttrStore(self.backend, max(self.graph.m, 1), mesh=self.mesh)
         return self
 
     def _require_graph(self) -> DIGraph:
@@ -200,7 +243,7 @@ class PropGraph:
         ok = idx >= 0
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
-        self.vertex_props[name] = (jnp.asarray(col), jnp.asarray(valid))
+        self.vertex_props[name] = self._place_column(col, valid)
         return self
 
     def add_edge_properties(self, name: str, src, dst, values, fill=0) -> "PropGraph":
@@ -212,8 +255,15 @@ class PropGraph:
         ok = idx >= 0
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
-        self.edge_props[name] = (jnp.asarray(col), jnp.asarray(valid))
+        self.edge_props[name] = self._place_column(col, valid)
         return self
+
+    def _place_column(self, col, valid) -> Tuple[jax.Array, jax.Array]:
+        col, valid = jnp.asarray(col), jnp.asarray(valid)
+        if self.mesh is not None:
+            col = dip_shard.place_column(col, self.mesh)
+            valid = dip_shard.place_column(valid, self.mesh)
+        return col, valid
 
     # --------------------------------------------------------------- queries
     def query_labels(self, labels, *, impl: Optional[str] = None) -> jax.Array:

@@ -2,8 +2,20 @@
 
 Dispatches interpret mode automatically off-TPU; on TPU backends the compiled
 Pallas kernels run with lane-aligned tiles.
+
+The ``*_sharded`` entries wrap the kernels in ``shard_map`` over the entity
+axis of a device mesh: the (K, N) bitmap arrives pre-sharded ``P(None,
+entity_axes)`` (``launch.sharding.pg_arr_specs``), the query mask(s) arrive
+replicated, and each device launches the kernel over ONLY its local (K, N/P)
+bitmap slice — the paper's "each locale only processes the array chunk it
+owns", O(N/P) per device with zero collectives (the output mask stays
+entity-sharded).
 """
+from functools import partial
+
 import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.bitmap_query.kernel import (
     bitmap_query_batched_pallas,
@@ -28,3 +40,46 @@ def bitmap_query_batched(
     return bitmap_query_batched_pallas(
         bitmap, attr_masks, tile_n=tile_n, interpret=not _on_tpu()
     )
+
+
+def _entity_axes(mesh):
+    from repro.launch.sharding import pg_entity_axes
+
+    return pg_entity_axes(mesh)
+
+
+@partial(jax.jit, static_argnames=("mesh", "tile_n"))
+def bitmap_query_sharded(
+    bitmap: jax.Array, attr_mask: jax.Array, *, mesh, tile_n: int = 2048
+) -> jax.Array:
+    """Sharded single-mask query: (K, N) bitmap with N divisible by the
+    entity shard count → (N,) bool mask, entity-sharded, one kernel launch
+    per device over its local slice."""
+    ax = _entity_axes(mesh)
+    f = shard_map(
+        lambda b, m: bitmap_query(b, m, tile_n=tile_n),
+        mesh=mesh,
+        in_specs=(P(None, ax), P()),
+        out_specs=P(ax),
+        check_rep=False,  # no replication rule for pallas_call
+    )
+    return f(bitmap, attr_mask)
+
+
+@partial(jax.jit, static_argnames=("mesh", "tile_n"))
+def bitmap_query_batched_sharded(
+    bitmap: jax.Array, attr_masks: jax.Array, *, mesh, tile_n: int = 2048
+) -> jax.Array:
+    """Sharded multi-mask query: (Q, K) masks replicated, bitmap entity-
+    sharded → (Q, N) bool, entity-sharded on N.  Each device runs the fused
+    batched kernel on its (K, N/P) slice — the planner's fusion and the
+    paper's distribution compose."""
+    ax = _entity_axes(mesh)
+    f = shard_map(
+        lambda b, m: bitmap_query_batched(b, m, tile_n=tile_n),
+        mesh=mesh,
+        in_specs=(P(None, ax), P()),
+        out_specs=P(None, ax),
+        check_rep=False,  # no replication rule for pallas_call
+    )
+    return f(bitmap, attr_masks)

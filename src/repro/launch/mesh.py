@@ -9,21 +9,41 @@ Topology: single pod = 16×16 = 256 chips (v5e pod), axes ("data", "model");
 multi-pod = 2×16×16 = 512 chips, axes ("pod", "data", "model").  The ``model``
 axis carries ICI-bandwidth-hungry collectives (TP/EP) and never crosses pods;
 ``pod`` composes with ``data`` for batch/entity parallelism so only gradient /
-mask all-reduces traverse the inter-pod links (DESIGN.md §5).
+mask all-reduces traverse the inter-pod links (docs/ARCHITECTURE.md §5).
+
+``make_entity_mesh`` is the property-graph entry point: a 1-D ``("data",)``
+mesh over the first P local devices, the "P locales" of the paper's O(NK/P)
+cost model.  CPU test/bench runs get P > 1 via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "dp_axes", "mesh_axes"]
+__all__ = ["make_production_mesh", "make_entity_mesh", "dp_axes", "mesh_axes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_entity_mesh(n_devices: Optional[int] = None):
+    """1-D ``("data",)`` mesh over ``n_devices`` local devices (default: all).
+
+    The property-graph stores shard their entity axis over this mesh
+    (``launch.sharding.pg_specs``); a sub-mesh (``n_devices < len(devices)``)
+    is how bench_shard.py sweeps the locale count 1→8 inside one process.
+    """
+    devs = jax.devices()
+    p = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= p <= len(devs):
+        raise ValueError(f"n_devices={p} not in [1, {len(devs)}]")
+    return jax.sharding.Mesh(np.array(devs[:p]), ("data",))
 
 
 def mesh_axes(mesh) -> Tuple[str, ...]:

@@ -1,6 +1,6 @@
 """Sharding rules: PartitionSpec trees per architecture family.
 
-One place owns the mesh-axis assignment policy (DESIGN.md §5):
+One place owns the mesh-axis assignment policy (docs/ARCHITECTURE.md §5):
 
   * LM params — Megatron TP over ``model`` (head dim / FFN hidden / vocab),
     optional FSDP over ``data`` on the non-TP weight dim (the big archs);
@@ -27,6 +27,8 @@ __all__ = [
     "lm_param_specs", "lm_batch_specs", "lm_cache_specs", "opt_state_specs",
     "gnn_batch_specs", "gnn_param_specs", "gc_batch_specs", "dlrm_param_specs",
     "dlrm_batch_specs", "named", "tree_named",
+    "pg_entity_axes", "pg_entity_shards", "pg_di_specs", "pg_arr_specs",
+    "pg_list_specs", "pg_listd_specs", "pg_prop_spec", "pg_specs",
 ]
 
 
@@ -132,6 +134,77 @@ def opt_state_specs(param_specs) -> Dict:
         "m": jax.tree.map(lambda s: s, param_specs, is_leaf=lambda x: isinstance(x, P)),
         "v": jax.tree.map(lambda s: s, param_specs, is_leaf=lambda x: isinstance(x, P)),
         "count": P(),
+    }
+
+
+# -------------------------------------------------------------- property graph
+def pg_entity_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the entity dimension of the DIP stores shards over — the
+    paper's block distribution ("each locale only processes the array chunk
+    it owns").  On the production ("data", "model") / ("pod", "data",
+    "model") meshes that is the data-parallel axis group; on a bare 1-D mesh
+    (``make_entity_mesh``) it is the sole axis."""
+    names = mesh.axis_names
+    if "data" in names:
+        return dp_axes(mesh)
+    return (names[0],)
+
+
+def pg_entity_shards(mesh) -> int:
+    """P — the entity shard count (the paper's locale count)."""
+    p = 1
+    for a in pg_entity_axes(mesh):
+        p *= mesh.shape[a]
+    return p
+
+
+def pg_di_specs(mesh) -> Dict[str, P]:
+    """DI graph placement: edge arrays block-distributed over entities;
+    ``seg`` (n+1 offsets) and ``node_map`` replicated — both are read by
+    every shard (offset lookups, original-id translation)."""
+    e = P(pg_entity_axes(mesh))
+    return {"src": e, "dst": e, "seg": P(), "node_map": P()}
+
+
+def pg_arr_specs(mesh) -> Dict[str, P]:
+    """DIP-ARR: shard the (K, N) bitmap on the ENTITY dim only — the K
+    attribute dim (≤ a few hundred) stays resident on every device so any
+    attribute-subset query touches exclusively locally-owned entities
+    (docs/ARCHITECTURE.md §2/§7)."""
+    return {"bitmap": P(None, pg_entity_axes(mesh))}
+
+
+def pg_list_specs(mesh) -> Dict[str, P]:
+    """DIP-LIST CSR: ``val``/``slot_entity`` (nnz-sized, entity-sorted) shard
+    over the slot dim — entity-aligned block distribution to within one
+    entity's list; ``off`` (n+1) replicated."""
+    e = P(pg_entity_axes(mesh))
+    return {"off": P(), "val": e, "slot_entity": e}
+
+
+def pg_listd_specs(mesh) -> Dict[str, P]:
+    """DIP-LISTD: only the inverted-CSR query arrays ship to devices — the
+    entity list shards over slots, the attribute offsets replicate.  The
+    linked-chain arrays (entity/attr/prev/nxt/last_tracker) deliberately
+    stay host-side: the pointer chase is sequential (docs/ARCHITECTURE.md
+    §2) and has no sharded execution."""
+    e = P(pg_entity_axes(mesh))
+    return {"a_off": P(), "a_ent": e}
+
+
+def pg_prop_spec(mesh) -> P:
+    """Typed property columns + their valid masks: entity-sharded."""
+    return P(pg_entity_axes(mesh))
+
+
+def pg_specs(mesh) -> Dict[str, Any]:
+    """The whole property-graph spec family keyed by structure name."""
+    return {
+        "di": pg_di_specs(mesh),
+        "arr": pg_arr_specs(mesh),
+        "list": pg_list_specs(mesh),
+        "listd": pg_listd_specs(mesh),
+        "prop": pg_prop_spec(mesh),
     }
 
 

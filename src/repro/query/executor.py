@@ -18,6 +18,15 @@ Execution in three stages:
 
 The result is exact (not an estimate): ``vertex_mask``/``edge_mask`` are
 the unions of all full-pattern assignments.
+
+Sharded execution (``PropGraph(mesh=...)``): stages 1–2 run shard-local —
+every DIP mask comes off a ``shard_map`` query that touches only the
+device's own entity slice (``core.dip_shard``), and predicate masks come
+off entity-sharded columns.  At the mask-combination point the per-slot
+candidate masks are replicated across the mesh in ONE all-gather
+(``_gather_masks``) so the chain propagation's arbitrary src/dst gathers
+run collective-free; masks are tiny (1 byte/entity) next to the stores the
+shard-local stage avoided streaming.
 """
 from __future__ import annotations
 
@@ -167,6 +176,15 @@ def _materialize_masks(pg, plan: Plan) -> Tuple[Dict[int, jax.Array], Dict[int, 
     return node_masks, edge_masks
 
 
+def _gather_masks(masks, mesh):
+    """The sharded pipeline's single all-gather: replicate the combined
+    per-slot masks across the mesh in ONE batched transfer."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    return list(jax.device_put(list(masks), [rep] * len(masks)))
+
+
 def execute_plan(pg, plan: Plan) -> MatchResult:
     """Execute ``plan`` against ``pg``; see module docstring for stages."""
     g = pg._require_graph()
@@ -191,6 +209,11 @@ def execute_plan(pg, plan: Plan) -> MatchResult:
                     step.predicate.name, step.predicate.op, step.predicate.value
                 )
         emasks.append(e)
+
+    mesh = getattr(pg, "mesh", None)
+    if mesh is not None:
+        cands = _gather_masks(cands, mesh)
+        emasks = _gather_masks(emasks, mesh)
 
     dirs = tuple(e.direction for e in plan.pattern.edges)
     vmask, emask, node_masks, alive = _propagate(g, tuple(cands), emasks=tuple(emasks), dirs=dirs)

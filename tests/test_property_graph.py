@@ -83,6 +83,33 @@ def test_properties_typed_columns(pg):
     assert (np.asarray(col)[np.asarray(valid)] == ages[:10]).all()
 
 
+def test_attr_counts_match_brute_force(pg):
+    """attr_counts() — the planner's selectivity stats — equals a host-side
+    bincount of the inserted labels on every backend."""
+    counts = pg._vstore.attr_counts()
+    for i, name in enumerate(pg._vstore.amap.values):
+        assert counts[i] == int((pg._labels_np == name).sum()), name
+
+
+def test_attr_counts_invalidate_on_incremental_insert(pg):
+    """insert() must clear the cached stats (and the store) so the planner
+    never orders joins with stale counts."""
+    before = dict(pg.label_counts())
+    assert "vip" not in before
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes[:7], ["vip"] * 7)
+    assert pg._vstore._counts is None and pg._vstore._dirty  # cache dropped
+    after = pg.label_counts()
+    assert after["vip"] == 7
+    for name, c in before.items():
+        assert after[name] == c, name  # old attributes unchanged
+    # a second increment accumulates rather than resetting
+    pg.add_node_labels(nodes[7:10], ["vip"] * 3)
+    assert pg.label_counts()["vip"] == 10
+    # and the refreshed stats drive a correct query
+    assert int(np.asarray(pg.query_labels(["vip"])).sum()) == 10
+
+
 def test_paper_generator_stats():
     """Tab. I regime: n/m ≈ 0.865 for the uniform generator."""
     src, dst = random_uniform_graph(100_000, seed=0)

@@ -1,0 +1,219 @@
+"""Sharded ≡ single-device equivalence for the DIP stores (docs/ARCHITECTURE.md §7).
+
+Two layers:
+
+* In-process tests build a ``make_entity_mesh`` over however many devices the
+  running interpreter has (1 under plain pytest — the mesh path must also be
+  exact at P=1) and check every query surface bitwise against the default
+  single-device path.
+* ``test_eight_virtual_devices_subprocess`` re-runs the equivalence matrix in
+  a fresh interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+  so the multi-shard path (P=8, uneven entity counts, pmax mask combination)
+  is exercised even when the parent process owns a single device.  CI sets
+  the flag for the whole suite, making the in-process layer multi-device too.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.core.io import load_propgraph, save_propgraph
+from repro.graph import random_uniform_graph
+from repro.launch.mesh import make_entity_mesh
+
+BACKENDS = ("arr", "list", "listd")
+PATTERNS = (
+    "(a:l1|l2)-[:follows]->(b:l3)",
+    "(a:l1|l2 {age > 30})-[:follows]->(b)",
+    "(a)<-[:likes]-(b:l0|l4)",
+)
+
+
+_PAIR_CACHE = {}
+
+
+def _build_pair(backend, mesh, m=1200, seed=7):
+    """(single-device pg, mesh pg) with identical structure + attributes.
+    Cached per (backend, mesh, m, seed) — graphs are immutable across the
+    read-only tests; mutating tests must build their own."""
+    key = (backend, id(mesh), m, seed)
+    if key not in _PAIR_CACHE:
+        _PAIR_CACHE[key] = _build_pair_uncached(backend, mesh, m, seed)
+    return _PAIR_CACHE[key]
+
+
+def _build_pair_uncached(backend, mesh, m, seed):
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg1 = PropGraph(backend=backend).add_edges_from(src, dst)
+    pg2 = PropGraph(backend=backend, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg1.graph.node_map)
+    labels = rng.choice([f"l{i}" for i in range(12)], size=len(nodes))
+    es, ed = np.asarray(pg1.graph.src), np.asarray(pg1.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es))
+    ages = rng.integers(0, 90, len(nodes)).astype(np.int32)
+    for pg in (pg1, pg2):
+        pg.add_node_labels(nodes, labels)
+        pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+        pg.add_node_properties("age", nodes, ages)
+    return pg1, pg2
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_entity_mesh()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_query_masks_bitwise_equal(backend, mesh):
+    pg1, pg2 = _build_pair(backend, mesh)
+    assert _eq(pg1.query_labels(["l1", "l2"]), pg2.query_labels(["l1", "l2"]))
+    assert _eq(pg1.query_relationships(["follows"]),
+               pg2.query_relationships(["follows"]))
+    # degenerate queries short-circuit identically
+    assert _eq(pg1.query_labels([]), pg2.query_labels([]))
+    assert _eq(pg1.query_labels(["nope"]), pg2.query_labels(["nope"]))
+
+
+# full pattern matrix on one backend, smoke pattern on the others — the mask
+# materialization is the only backend-specific stage, and it is covered for
+# every backend by the query tests above; this keeps compile time bounded
+_MATCH_CASES = [("arr", p) for p in PATTERNS] + [
+    ("list", PATTERNS[0]), ("listd", PATTERNS[0])
+]
+
+
+@pytest.mark.parametrize("backend,pattern", _MATCH_CASES)
+def test_match_bitwise_equal(backend, pattern, mesh):
+    pg1, pg2 = _build_pair(backend, mesh)
+    r1, r2 = pg1.match(pattern), pg2.match(pattern)
+    assert _eq(r1.vertex_mask, r2.vertex_mask)
+    assert _eq(r1.edge_mask, r2.edge_mask)
+    for m1, m2 in zip(r1.node_masks, r2.node_masks):
+        assert _eq(m1, m2)
+    for m1, m2 in zip(r1.edge_masks, r2.edge_masks):
+        assert _eq(m1, m2)
+
+
+def test_arr_impl_variants_agree(mesh):
+    """All three DIP-ARR impls (scan / matvec / shard_map'd Pallas kernel)
+    produce the same sharded mask."""
+    pg1, pg2 = _build_pair("arr", mesh)
+    ref = np.asarray(pg1.query_labels(["l1", "l2"]))
+    for impl in ("matvec", "scan", "kernel"):
+        assert _eq(ref, pg2.query_labels(["l1", "l2"], impl=impl)), impl
+    with pytest.raises(ValueError, match="unknown impl"):
+        pg2.query_labels(["l1", "l2"], impl="inverted")
+
+
+def test_listd_single_device_impls_degrade(mesh):
+    """budget/linked are single-device work layouts; the sharded path runs
+    the inverted slot scan instead — same mask either way."""
+    pg1, pg2 = _build_pair("listd", mesh)
+    ref = np.asarray(pg1.query_labels(["l1"], impl="budget"))
+    assert _eq(ref, pg2.query_labels(["l1"], impl="budget"))
+    assert _eq(ref, pg2.query_labels(["l1"], impl="linked"))
+    with pytest.raises(ValueError, match="unknown impl"):  # typos still fail
+        pg2.query_labels(["l1"], impl="linkd")
+
+
+def test_batched_fused_masks_equal(mesh):
+    pg1, pg2 = _build_pair("arr", mesh)
+    qs = [("l1", "l2"), ("l3",), ("l0", "l4", "l5")]
+    assert _eq(pg1._vstore.query_any_batched(qs), pg2._vstore.query_any_batched(qs))
+
+
+def test_incremental_insert_invalidates_sharded_store(mesh):
+    """insert() after a query must rebuild the placed store, not serve the
+    stale shard cache."""
+    pg1, pg2 = _build_pair_uncached("list", mesh, 1200, 7)  # mutates: no cache
+    before = np.asarray(pg2.query_labels(["extra"]))
+    assert not before.any()
+    nodes = np.asarray(pg1.graph.node_map)
+    for pg in (pg1, pg2):
+        pg.add_node_labels(nodes[:17], ["extra"] * 17)
+    assert _eq(pg1.query_labels(["extra"]), pg2.query_labels(["extra"]))
+    assert np.asarray(pg2.query_labels(["extra"])).sum() == 17
+
+
+def test_save_load_onto_mesh(tmp_path, mesh):
+    pg1, _ = _build_pair("arr", mesh)
+    path = save_propgraph(str(tmp_path / "pg"), pg1)
+    for backend in BACKENDS:
+        pg2 = load_propgraph(path, backend=backend, mesh=mesh)
+        assert _eq(pg1.query_labels(["l1", "l2"]), pg2.query_labels(["l1", "l2"]))
+        assert _eq(pg1.match(PATTERNS[0]).edge_mask, pg2.match(PATTERNS[0]).edge_mask)
+
+
+def test_submesh_sweep(mesh):
+    """Every locale count P that fits the process (1, 2, 4, 8 ∩ available)
+    yields the same masks — the bench_shard.py sweep's correctness basis."""
+    import jax
+
+    avail = len(jax.devices())
+    pg1, _ = _build_pair("list", None)
+    ref = np.asarray(pg1.query_labels(["l1", "l2"]))
+    for p in (1, 2, 4, 8):
+        if p > avail:
+            continue
+        sub = make_entity_mesh(p)
+        _, pg2 = _build_pair("list", sub)
+        assert _eq(ref, pg2.query_labels(["l1", "l2"])), p
+
+
+_SUBPROCESS_SCRIPT = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, len(jax.devices())
+import sys
+sys.path.insert(0, {src!r})
+from repro.core import PropGraph
+from repro.graph import random_uniform_graph
+from repro.launch.mesh import make_entity_mesh
+
+rng = np.random.default_rng(7)
+src, dst = random_uniform_graph(1200, seed=7)
+mesh = make_entity_mesh()
+assert mesh.devices.size == 8
+for be in ("arr", "list", "listd"):
+    pg1 = PropGraph(backend=be).add_edges_from(src, dst)
+    pg2 = PropGraph(backend=be, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg1.graph.node_map)
+    labels = rng.choice([f"l{{i}}" for i in range(12)], size=len(nodes))
+    es, ed = np.asarray(pg1.graph.src), np.asarray(pg1.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es))
+    for pg in (pg1, pg2):
+        pg.add_node_labels(nodes, labels)
+        pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    assert (np.asarray(pg1.query_labels(["l1", "l2"]))
+            == np.asarray(pg2.query_labels(["l1", "l2"]))).all(), be
+    assert (np.asarray(pg1.query_relationships(["follows"]))
+            == np.asarray(pg2.query_relationships(["follows"]))).all(), be
+    r1 = pg1.match("(a:l1|l2)-[:follows]->(b:l3)")
+    r2 = pg2.match("(a:l1|l2)-[:follows]->(b:l3)")
+    assert (np.asarray(r1.vertex_mask) == np.asarray(r2.vertex_mask)).all(), be
+    assert (np.asarray(r1.edge_mask) == np.asarray(r2.edge_mask)).all(), be
+print("SHARD8 OK")
+"""
+
+
+def test_eight_virtual_devices_subprocess():
+    """The acceptance check proper: P=8 sharded ≡ single-device on all three
+    backends, guaranteed 8 virtual devices via a fresh interpreter."""
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"  # skip accelerator probing in the child
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT.format(src=os.path.abspath(src_dir))],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARD8 OK" in proc.stdout

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docs link check — keeps ARCHITECTURE.md (and friends) honest.
+
+Two rules, run over the checked docs:
+
+1. Every repo-relative path referenced in a checked doc (markdown links and
+   backticked ``src/...``-style paths) must exist.
+2. No dangling ``DESIGN.md`` references may reappear in the property-graph
+   core (``src/repro/core``, ``src/repro/launch``, ``src/repro/query``,
+   ``src/repro/kernels/bitmap_query``) — they were replaced by
+   ``docs/ARCHITECTURE.md`` sections in PR 2.  (Seed-era modules elsewhere
+   still carry them; Appendix A of ARCHITECTURE.md decodes those.)
+
+Exit 0 = clean; exit 1 prints every violation.  Run from the repo root:
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CHECKED_DOCS = [
+    "docs/ARCHITECTURE.md",
+    "src/repro/query/README.md",
+]
+NO_DESIGN_REF_TREES = [
+    "src/repro/core",
+    "src/repro/launch",
+    "src/repro/query",
+    "src/repro/kernels/bitmap_query",
+]
+
+# markdown links [text](target) with local targets, plus backticked paths
+# (which may carry a trailing section/member, e.g. `docs/ARCHITECTURE.md §7`
+# or `src/x/y.py: name` — _strip_member reduces them to the file part)
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#:]+)(?:#[^)]*)?\)")
+TICKED_PATH = re.compile(r"`((?:src|docs|tests|benchmarks|examples|tools)/[^`]+?)`")
+
+
+def _strip_member(path: str) -> str:
+    """``src/x/y.py: name`` / ``src/x/y.py §7``-style refs → the file part."""
+    return path.split(":")[0].split(" ")[0].strip()
+
+
+def check_doc(rel: str) -> list:
+    errs = []
+    doc = os.path.join(REPO, rel)
+    text = open(doc).read()
+    targets = set()
+    for pat in (MD_LINK, TICKED_PATH):
+        for mt in pat.finditer(text):
+            t = _strip_member(mt.group(1))
+            if t and not t.startswith(("http", "mailto")):
+                targets.add(t)
+    base = os.path.dirname(doc)
+    for t in sorted(targets):
+        # relative to the doc's directory, else to the repo root
+        if not (os.path.exists(os.path.join(base, t))
+                or os.path.exists(os.path.join(REPO, t))):
+            errs.append(f"{rel}: broken reference {t!r}")
+    return errs
+
+
+def check_no_design_refs() -> list:
+    errs = []
+    for tree in NO_DESIGN_REF_TREES:
+        for dirpath, _, files in os.walk(os.path.join(REPO, tree)):
+            for f in files:
+                if not f.endswith((".py", ".md")):
+                    continue
+                p = os.path.join(dirpath, f)
+                for i, line in enumerate(open(p), 1):
+                    if "DESIGN.md" in line:
+                        rel = os.path.relpath(p, REPO)
+                        errs.append(f"{rel}:{i}: dangling DESIGN.md reference "
+                                    "(cite docs/ARCHITECTURE.md instead)")
+    return errs
+
+
+def main() -> int:
+    errs = []
+    for rel in CHECKED_DOCS:
+        if not os.path.exists(os.path.join(REPO, rel)):
+            errs.append(f"missing checked doc: {rel}")
+            continue
+        errs.extend(check_doc(rel))
+    errs.extend(check_no_design_refs())
+    for e in errs:
+        print(e)
+    print(f"check_links: {len(errs)} problem(s) in {len(CHECKED_DOCS)} doc(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
