@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
   shard        — sharded-store locale sweep 1→8 virtual devices (JSON lines;
                  run ``python -m benchmarks.bench_shard`` standalone to get
                  8 virtual devices — in-process it sweeps what's visible)
+  serve        — service layer: coalesced concurrent serving vs sequential
+                 per-request baseline, concurrency 1/2/4/8 (JSON lines;
+                 see bench_serve.py)
 Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
@@ -45,6 +48,11 @@ def main() -> None:
     print("# shard (sharded DIP stores: locale sweep over virtual devices)")
     from benchmarks import bench_shard
     bench_shard.run(m=20_000 if small else 100_000)
+
+    print("# serve (service layer: coalesced vs sequential, concurrency sweep)")
+    from benchmarks import bench_serve
+    bench_serve.run(m=10_000 if small else 50_000,
+                    requests=32 if small else 64)
 
 
 if __name__ == "__main__":

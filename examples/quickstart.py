@@ -123,4 +123,23 @@ if len(jax.devices()) > 1:
 else:
     print("sharded demo skipped: 1 device "
           "(set XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# -- 8. serving: many concurrent queries → few fused launches -----------------
+# The service layer (src/repro/service/README.md, docs/ARCHITECTURE.md §8)
+# holds named graphs in a registry, micro-batches concurrent requests,
+# coalesces their masks into single batched kernel launches and caches
+# plans + results (invalidated automatically when a graph mutates).
+# CLI driver with a synthetic multi-tenant workload:
+#   PYTHONPATH=src python -m repro.launch.pgserve --smoke
+from repro.service import Service
+
+with Service() as svc:
+    svc.add_graph("quickstart", pg)  # or svc.load_graph("quickstart", path)
+    res_s = svc.query("quickstart", pattern)  # blocking single query
+    assert bool((res_s.edge_mask == res.edge_mask).all())
+    futs = [svc.submit("quickstart", pattern) for _ in range(8)]  # concurrent
+    assert all(bool((f.result().edge_mask == res.edge_mask).all()) for f in futs)
+    s = svc.stats()
+    print(f"service: {s['completed']} served, {s['result_hits']} cache hits, "
+          f"{s.get('coalesced_launches', 0)} coalesced launches ✓")
 print("OK")

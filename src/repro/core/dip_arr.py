@@ -32,6 +32,7 @@ import jax.numpy as jnp
 __all__ = [
     "DIPArr",
     "build_dip_arr",
+    "build_dip_arr_host",
     "insert",
     "query_any_scan",
     "query_any_matvec",
@@ -61,12 +62,28 @@ class DIPArr:
 def build_dip_arr(entity_ids, attr_ids, *, k: int, n: int) -> DIPArr:
     """Bulk build: flag ``bitmap[attr, entity] = 1`` for every pair.
 
-    O(nnz) scatter — the paper's per-entity flag write, done as one vectorized
-    ``scatter`` instead of mutex-guarded loop iterations (static graphs ⇒ bulk).
+    O(nnz) — the paper's per-entity flag write, done as one vectorized
+    host-side scatter instead of mutex-guarded loop iterations (static
+    graphs ⇒ bulk), then uploaded.  Builds through ``build_dip_arr_host``
+    so the bitmap layout (out-of-range pairs dropped) has one definition
+    for both the single-device store and the sharded placement path.
     """
-    entity_ids = jnp.asarray(entity_ids, jnp.int32)
-    attr_ids = jnp.asarray(attr_ids, jnp.int32)
-    bitmap = jnp.zeros((k, n), jnp.int8).at[attr_ids, entity_ids].set(1, mode="drop")
+    host = build_dip_arr_host(entity_ids, attr_ids, k=k, n=n)
+    return dataclasses.replace(host, bitmap=jnp.asarray(host.bitmap))
+
+
+def build_dip_arr_host(entity_ids, attr_ids, *, k: int, n: int) -> DIPArr:
+    """``build_dip_arr`` with HOST (numpy) storage — same bitmap, no device
+    allocation.  The sharded path builds here, derives the per-attribute
+    stats, then places only the padded shards on devices
+    (docs/ARCHITECTURE.md §7), so no device ever holds the full replica."""
+    import numpy as np
+
+    entity_ids = np.asarray(entity_ids, np.int32).ravel()
+    attr_ids = np.asarray(attr_ids, np.int32).ravel()
+    bitmap = np.zeros((k, n), np.int8)
+    ok = (entity_ids >= 0) & (entity_ids < n) & (attr_ids >= 0) & (attr_ids < k)
+    bitmap[attr_ids[ok], entity_ids[ok]] = 1  # mode="drop" equivalent
     return DIPArr(bitmap=bitmap, k=k, n=n)
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 __all__ = [
     "DIPList",
     "build_dip_list",
+    "build_dip_list_host",
     "query_any",
     "attrs_of_entity_padded",
     "entity_of_slot",
@@ -53,28 +54,45 @@ class DIPList:
     nnz: int
 
 
+def build_dip_list_host(
+    entity_ids, attr_ids, *, k: int, n: int, dedupe: bool = True
+) -> DIPList:
+    """``build_dip_list`` with HOST (numpy) storage — identical layout, no
+    device allocation.  The sharded path builds here, reads the per-attribute
+    stats off ``val``, then places only the padded slot shards on devices
+    (docs/ARCHITECTURE.md §7)."""
+    import numpy as np
+
+    entity_ids = np.asarray(entity_ids, np.int32).ravel()
+    attr_ids = np.asarray(attr_ids, np.int32).ravel()
+    order = np.lexsort((attr_ids, entity_ids))
+    ent_s, attr_s = entity_ids[order], attr_ids[order]
+    if dedupe and ent_s.size:
+        keep = np.concatenate(
+            [[True], (ent_s[1:] != ent_s[:-1]) | (attr_s[1:] != attr_s[:-1])]
+        )
+        ent_s, attr_s = ent_s[keep], attr_s[keep]
+    nnz = int(ent_s.shape[0])
+    counts = np.bincount(ent_s, minlength=n)[:n] if nnz else np.zeros(n, np.int64)
+    off = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return DIPList(off=off, val=attr_s, slot_entity=ent_s, k=k, n=n, nnz=nnz)
+
+
 def build_dip_list(entity_ids, attr_ids, *, k: int, n: int, dedupe: bool = True) -> DIPList:
     """Bulk build from (entity, attribute) pairs: sort by (entity, attr), then
     CSR offsets via bincount+cumsum — the vectorized replacement for the
     paper's mutex-guarded per-element list insertions (§IV-B notes the Chapel
-    insertion path is suboptimal; static graphs admit this bulk path)."""
-    entity_ids = jnp.asarray(entity_ids, jnp.int32)
-    attr_ids = jnp.asarray(attr_ids, jnp.int32)
-    order = jnp.lexsort((attr_ids, entity_ids))
-    ent_s, attr_s = entity_ids[order], attr_ids[order]
-    if dedupe and ent_s.size:
-        import numpy as np
+    insertion path is suboptimal; static graphs admit this bulk path).
 
-        keep = np.asarray(
-            jnp.concatenate(
-                [jnp.array([True]), (ent_s[1:] != ent_s[:-1]) | (attr_s[1:] != attr_s[:-1])]
-            )
-        )
-        ent_s, attr_s = ent_s[keep], attr_s[keep]
-    nnz = int(ent_s.shape[0])
-    counts = jnp.bincount(ent_s, length=n)
-    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
-    return DIPList(off=off, val=attr_s, slot_entity=ent_s, k=k, n=n, nnz=nnz)
+    Builds host-side, then uploads — one layout definition for both the
+    single-device store and the sharded placement path."""
+    host = build_dip_list_host(entity_ids, attr_ids, k=k, n=n, dedupe=dedupe)
+    return dataclasses.replace(
+        host,
+        off=jnp.asarray(host.off),
+        val=jnp.asarray(host.val),
+        slot_entity=jnp.asarray(host.slot_entity),
+    )
 
 
 @jax.jit

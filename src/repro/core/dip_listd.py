@@ -36,6 +36,7 @@ import numpy as np
 __all__ = [
     "DIPListD",
     "build_dip_listd",
+    "build_dip_listd_host",
     "query_any_linked",
     "query_any_inverted",
     "query_any_budget",
@@ -69,13 +70,12 @@ class DIPListD:
     nnz: int
 
 
-def build_dip_listd(entity_ids, attr_ids, *, k: int, n: int) -> DIPListD:
-    """Build from insertion-ordered (entity, attribute) pairs.
-
-    The linked-chain pointers replay the paper's insertion protocol exactly
-    (update next of the previous node, prev of the new node, bump the
-    tracker) — vectorized on the host since construction is bulk/static.
-    """
+def build_dip_listd_host(entity_ids, attr_ids, *, k: int, n: int) -> DIPListD:
+    """``build_dip_listd`` with HOST (numpy) storage — identical layout, no
+    device allocation (the construction is host-side replay anyway; this
+    entry just skips the final upload).  The sharded path builds here,
+    reads the per-attribute stats off ``a_off``, then places only the
+    padded inverted-CSR shards on devices (docs/ARCHITECTURE.md §7)."""
     ent = np.asarray(entity_ids, dtype=np.int32).ravel()
     att = np.asarray(attr_ids, dtype=np.int32).ravel()
     nnz = int(ent.shape[0])
@@ -97,16 +97,28 @@ def build_dip_listd(entity_ids, attr_ids, *, k: int, n: int) -> DIPListD:
     a_off = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
 
     return DIPListD(
-        entity=jnp.asarray(ent),
-        attr=jnp.asarray(att),
-        prev=jnp.asarray(prev),
-        nxt=jnp.asarray(nxt),
-        last_tracker=jnp.asarray(last),
-        a_off=jnp.asarray(a_off),
-        a_ent=jnp.asarray(a_ent),
-        k=k,
-        n=n,
-        nnz=nnz,
+        entity=ent, attr=att, prev=prev, nxt=nxt, last_tracker=last,
+        a_off=a_off, a_ent=a_ent, k=k, n=n, nnz=nnz,
+    )
+
+
+def build_dip_listd(entity_ids, attr_ids, *, k: int, n: int) -> DIPListD:
+    """Build from insertion-ordered (entity, attribute) pairs.
+
+    The linked-chain pointers replay the paper's insertion protocol exactly
+    (update next of the previous node, prev of the new node, bump the
+    tracker) — vectorized on the host since construction is bulk/static.
+    """
+    host = build_dip_listd_host(entity_ids, attr_ids, k=k, n=n)
+    return dataclasses.replace(
+        host,
+        entity=jnp.asarray(host.entity),
+        attr=jnp.asarray(host.attr),
+        prev=jnp.asarray(host.prev),
+        nxt=jnp.asarray(host.nxt),
+        last_tracker=jnp.asarray(host.last_tracker),
+        a_off=jnp.asarray(host.a_off),
+        a_ent=jnp.asarray(host.a_ent),
     )
 
 

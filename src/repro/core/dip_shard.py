@@ -33,6 +33,7 @@ from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -65,11 +66,15 @@ def _shards(mesh) -> int:
     return pg_entity_shards(mesh)
 
 
-def _pad_to(x: jax.Array, size: int, fill=0) -> jax.Array:
+def _pad_to(x, size: int, fill=0):
+    """Pad axis 0 to ``size``.  Host (numpy) inputs pad host-side — the
+    O(NK/P) placement contract: the dense form must never materialize on a
+    device (``jnp.pad`` on a numpy array would upload it whole)."""
     if x.shape[0] == size:
         return x
-    return jnp.pad(x, [(0, size - x.shape[0])] + [(0, 0)] * (x.ndim - 1),
-                   constant_values=fill)
+    xp = np if isinstance(x, np.ndarray) else jnp
+    return xp.pad(x, [(0, size - x.shape[0])] + [(0, 0)] * (x.ndim - 1),
+                  constant_values=fill)
 
 
 # --------------------------------------------------------------- sharded stores
@@ -195,7 +200,8 @@ def place_dip_arr(store: DIPArr, mesh) -> ShardedDIPArr:
     from repro.launch.sharding import pg_arr_specs
 
     n_pad = _pad_multiple(mesh, store.n)
-    bitmap = jnp.pad(store.bitmap, ((0, 0), (0, n_pad - store.n)))
+    xp = np if isinstance(store.bitmap, np.ndarray) else jnp
+    bitmap = xp.pad(store.bitmap, ((0, 0), (0, n_pad - store.n)))
     bitmap = jax.device_put(bitmap, NamedSharding(mesh, pg_arr_specs(mesh)["bitmap"]))
     return ShardedDIPArr(bitmap=bitmap, k=store.k, n=store.n, n_pad=n_pad, mesh=mesh)
 
@@ -224,7 +230,9 @@ def place_dip_listd(store: DIPListD, mesh) -> ShardedDIPListD:
     return ShardedDIPListD(
         a_off=put(store.a_off, specs["a_off"]),
         a_ent=put(_pad_to(store.a_ent, nnz_pad), specs["a_ent"]),
-        slot_idx=put(jnp.arange(nnz_pad, dtype=jnp.int32), specs["a_ent"]),
+        # host-side arange: device_put splits it per shard, so no device
+        # transiently holds the full O(nnz) index array
+        slot_idx=put(np.arange(nnz_pad, dtype=np.int32), specs["a_ent"]),
         k=store.k, n=store.n, nnz=store.nnz, nnz_pad=nnz_pad, mesh=mesh,
     )
 

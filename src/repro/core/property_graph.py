@@ -65,6 +65,7 @@ class _AttrStore:
         self._pairs_a: List[np.ndarray] = []  # attribute ids
         self._store = None
         self._sharded = None
+        self._host = None  # host-built dense form awaiting upload/placement
         self._counts: Optional[np.ndarray] = None
         self._dirty = True
 
@@ -77,31 +78,59 @@ class _AttrStore:
         self._pairs_a.append(attr_ids[ok].astype(np.int32))
         self._counts = None
         self._sharded = None
+        self._host = None
         self._dirty = True
 
     @property
     def k(self) -> int:
         return max(len(self.amap), 1)
 
-    def finalize(self):
-        if not self._dirty and self._store is not None:
-            return self._store
+    def _build_host(self):
+        """Dense store with HOST (numpy) arrays, built from the raw pairs.
+
+        Also derives the per-attribute selectivity stats (``attr_counts``)
+        while the dense form is in hand — bitmap row sums / CSR segment
+        lengths, computed host-side so the stats never require a device
+        store.  The build is stashed in ``_host`` so a stats read followed
+        by a query builds once, not twice; ``finalize`` /
+        ``finalize_sharded`` consume the stash — after placement the dense
+        copy is RELEASED in mesh mode (per-device memory stays O(NK/P),
+        docs/ARCHITECTURE.md §7)."""
+        if self._host is not None:
+            return self._host
         ent = np.concatenate(self._pairs_e) if self._pairs_e else np.zeros(0, np.int32)
         att = np.concatenate(self._pairs_a) if self._pairs_a else np.zeros(0, np.int32)
         if self.backend == "arr":
-            self._store = dip_arr.build_dip_arr(ent, att, k=self.k, n=self.n)
+            host = dip_arr.build_dip_arr_host(ent, att, k=self.k, n=self.n)
+            self._counts = host.bitmap.sum(axis=1, dtype=np.int64)
         elif self.backend == "list":
-            self._store = dip_list.build_dip_list(ent, att, k=self.k, n=self.n)
+            host = dip_list.build_dip_list_host(ent, att, k=self.k, n=self.n)
+            self._counts = np.bincount(np.asarray(host.val), minlength=self.k)
         else:
-            self._store = dip_listd.build_dip_listd(ent, att, k=self.k, n=self.n)
+            host = dip_listd.build_dip_listd_host(ent, att, k=self.k, n=self.n)
+            self._counts = np.asarray(host.a_off[1:] - host.a_off[:-1])
+        self._host = host
+        return host
+
+    def finalize(self):
+        if not self._dirty and self._store is not None:
+            return self._store
+        self._store = jax.tree_util.tree_map(jnp.asarray, self._build_host())
+        self._host = None  # consumed; the device copy is the cache now
         self._dirty = False
         return self._store
 
     def finalize_sharded(self):
-        """Padded, mesh-placed copy of the finalized store (mesh mode only)."""
-        store = self.finalize()  # clears _dirty; _sharded invalidates on insert
+        """Padded, mesh-placed copy of the store (mesh mode only).
+
+        Builds the dense form host-side, places the padded shards, and
+        releases the dense copy — no device (and no cache slot) holds a
+        full replica; the selectivity stats survive in ``_counts``."""
         if self._sharded is None:
-            self._sharded = dip_shard.place_store(self.backend, store, self.mesh)
+            self._sharded = dip_shard.place_store(
+                self.backend, self._build_host(), self.mesh
+            )
+            self._host = None  # dense copy released after placement
         return self._sharded
 
     def known_ids(self, values: Sequence[str]) -> np.ndarray:
@@ -112,20 +141,20 @@ class _AttrStore:
     def attr_counts(self) -> np.ndarray:
         """(k,) per-attribute entity counts — the DIP selectivity statistics
         the planner orders joins with (bitmap row sums / CSR segment
-        lengths; each store carries them for free).  Cached host-side and
-        invalidated with the store (``insert`` clears it) — the planner
+        lengths; each store carries them for free).  Derived host-side
+        during ``_build_host`` — reading them never uploads a store — and
+        invalidated with the store (``insert`` clears them); the planner
         reads these on every ``match()``."""
-        if self._counts is not None:
-            return self._counts
-        store = self.finalize()
-        if self.backend == "arr":
-            counts = np.asarray(jnp.sum(store.bitmap.astype(jnp.int32), axis=1))
-        elif self.backend == "list":
-            counts = np.bincount(np.asarray(store.val), minlength=self.k)
-        else:
-            counts = np.asarray(store.a_off[1:] - store.a_off[:-1])
-        self._counts = counts
-        return counts
+        if self._counts is None:
+            self._build_host()  # sets _counts; build stays stashed for the
+            # next finalize, so stats-then-query builds once
+        return self._counts
+
+    @property
+    def nnz(self) -> int:
+        """Stored (entity, attribute) pair count (post-dedupe where the
+        backend dedupes) — Σ attr_counts, so reading it needs no store."""
+        return int(np.sum(self.attr_counts()))
 
     def query_any(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
         if len(values) == 0 or self.known_ids(values).size == 0:
@@ -188,15 +217,37 @@ class PropGraph:
         # typed property columns: name -> (values (x,), valid mask (x,))
         self.vertex_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
         self.edge_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+        # monotone mutation counter + observers — the service layer's cache
+        # invalidation contract (a result cached at version v is dead the
+        # moment any mutator runs; see src/repro/service/README.md)
+        self.version: int = 0
+        self._mutation_hooks: List = []
+
+    # ----------------------------------------------------------- mutation API
+    def on_mutation(self, hook) -> "PropGraph":
+        """Register ``hook(pg)`` to run after every mutating call (structure
+        or attributes).  Hooks fire AFTER ``version`` is bumped, so a hook
+        reading ``pg.version`` sees the post-mutation value."""
+        self._mutation_hooks.append(hook)
+        return self
+
+    def _bump_version(self) -> None:
+        self.version += 1
+        for hook in list(self._mutation_hooks):
+            hook(self)
 
     # ------------------------------------------------------------- structure
     def add_edges_from(self, src, dst) -> "PropGraph":
-        """Bulk edge ingestion → DI build (sort + normalize + SEG)."""
+        """Bulk edge ingestion → DI build (sort + normalize + SEG).
+
+        Rebuilding the structure drops all previously attached attributes
+        (fresh stores) — and, like every mutator, bumps ``version``."""
         self.graph = build_di(np.asarray(src), np.asarray(dst))
         if self.mesh is not None:
             self.graph = dip_shard.place_graph(self.graph, self.mesh)
         self._vstore = _AttrStore(self.backend, self.graph.n, mesh=self.mesh)
         self._estore = _AttrStore(self.backend, max(self.graph.m, 1), mesh=self.mesh)
+        self._bump_version()
         return self
 
     def _require_graph(self) -> DIGraph:
@@ -227,11 +278,13 @@ class PropGraph:
     def add_node_labels(self, nodes, labels) -> "PropGraph":
         self._require_graph()
         self._vstore.insert(self._vertex_internal(nodes), labels)
+        self._bump_version()
         return self
 
     def add_edge_relationships(self, src, dst, relationships) -> "PropGraph":
         self._require_graph()
         self._estore.insert(self._edge_internal(src, dst), relationships)
+        self._bump_version()
         return self
 
     def add_node_properties(self, name: str, nodes, values, fill=0) -> "PropGraph":
@@ -244,6 +297,7 @@ class PropGraph:
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
         self.vertex_props[name] = self._place_column(col, valid)
+        self._bump_version()
         return self
 
     def add_edge_properties(self, name: str, src, dst, values, fill=0) -> "PropGraph":
@@ -256,6 +310,7 @@ class PropGraph:
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
         self.edge_props[name] = self._place_column(col, valid)
+        self._bump_version()
         return self
 
     def _place_column(self, col, valid) -> Tuple[jax.Array, jax.Array]:
@@ -396,14 +451,17 @@ class PropGraph:
         return self._estore.amap.values if self._estore else []
 
     def label_counts(self) -> Dict[str, int]:
-        """Per-label vertex counts (the planner's selectivity statistics)."""
+        """Per-label vertex counts, read off the cached ``attr_counts()``
+        stats (host-derived; never a per-value ``query_any`` scan and never
+        a device store upload)."""
         if self._vstore is None:
             return {}
         counts = self._vstore.attr_counts()
         return {v: int(counts[i]) for i, v in enumerate(self._vstore.amap.values)}
 
     def relationship_counts(self) -> Dict[str, int]:
-        """Per-relationship edge counts (planner selectivity statistics)."""
+        """Per-relationship edge counts, read off the cached
+        ``attr_counts()`` stats (same contract as ``label_counts``)."""
         if self._estore is None:
             return {}
         counts = self._estore.attr_counts()

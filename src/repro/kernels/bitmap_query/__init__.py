@@ -1,4 +1,10 @@
 from repro.kernels.bitmap_query import ops, ref
-from repro.kernels.bitmap_query.ops import bitmap_query, bitmap_query_batched
+from repro.kernels.bitmap_query.ops import (
+    Q_BUCKETS,
+    bitmap_query,
+    bitmap_query_batched,
+    bucketed_q,
+)
 
-__all__ = ["ops", "ref", "bitmap_query", "bitmap_query_batched"]
+__all__ = ["ops", "ref", "bitmap_query", "bitmap_query_batched",
+           "bucketed_q", "Q_BUCKETS"]

@@ -27,6 +27,30 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Q-dimension buckets for the batched entries.  The batched kernels (and the
+# jitted matvec fallbacks) specialize on Q, so a service coalescing a varying
+# number of concurrent queries would otherwise compile once per distinct
+# batch size.  Padding Q up to the next bucket (pad masks are all-False ⇒
+# all-False output rows, sliced off by the caller) bounds the number of
+# compiled programs to len(Q_BUCKETS) per (K, N) shape.
+Q_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucketed_q(q: int) -> int:
+    """Smallest bucket ≥ ``q`` (multiples of the largest bucket beyond it).
+
+    ``src/repro/service/scheduler.py`` pads its coalesced mask batches to
+    this size before calling the ``*_batched`` entries (single-device or
+    shard_map'd alike — both specialize on Q)."""
+    if q < 1:
+        raise ValueError(f"q must be ≥ 1, got {q}")
+    for b in Q_BUCKETS:
+        if q <= b:
+            return b
+    top = Q_BUCKETS[-1]
+    return -(-q // top) * top
+
+
 def bitmap_query(bitmap: jax.Array, attr_mask: jax.Array, *, tile_n: int = 2048) -> jax.Array:
     """(K, N) int8 bitmap × (K,) bool query mask → (N,) bool entity mask."""
     return bitmap_query_pallas(bitmap, attr_mask, tile_n=tile_n, interpret=not _on_tpu())

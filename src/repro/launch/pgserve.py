@@ -1,0 +1,309 @@
+"""pgserve — CLI driver for the graph analytics service (src/repro/service/).
+
+Builds named tenant graphs, generates a synthetic multi-tenant pattern
+workload (zipf-skewed over a pattern pool — hot patterns repeat, like real
+dashboards), and drives a ``Service`` with closed-loop concurrent clients,
+reporting throughput/latency and the service's coalescing/cache counters.
+
+    # throughput report: 2 tenant graphs, 64 requests, 8 concurrent clients
+    PYTHONPATH=src python -m repro.launch.pgserve --graphs 2 --requests 64 \
+        --concurrency 8
+
+    # CI smoke: correctness across all backends (+ mesh when >1 device)
+    PYTHONPATH=src python -m repro.launch.pgserve --smoke
+
+The workload/runner helpers here are also the benchmark's building blocks
+(``benchmarks/bench_serve.py`` imports them), so the CLI and the benchmark
+measure the same thing.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "build_tenant_graph",
+    "pattern_pool",
+    "synthetic_workload",
+    "run_workload",
+    "run_sequential",
+    "smoke",
+    "main",
+]
+
+N_LABELS = 12
+RELS = ("follows", "likes")
+
+
+def build_tenant_graph(backend: str, m: int, *, mesh=None, seed: int = 0):
+    """One synthetic tenant: Tab.-I-regime random graph with labels
+    ``l0..l{N_LABELS-1}``, relationships ``follows``/``likes`` and an
+    ``age`` property — the attribute shape every pool pattern queries."""
+    from repro.core import PropGraph
+    from repro.graph import random_uniform_graph
+
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes, rng.choice([f"l{i}" for i in range(N_LABELS)],
+                                         size=len(nodes)))
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.add_edge_relationships(nodes[es], nodes[ed],
+                              rng.choice(RELS, size=len(es)))
+    pg.add_node_properties("age", nodes,
+                           rng.integers(0, 90, len(nodes)).astype(np.int32))
+    return pg
+
+
+def pattern_pool() -> List[str]:
+    """The query mix: 1-hop label/relationship shapes, predicate filters,
+    reverse hops and a 2-hop chain — every planner path gets traffic."""
+    return [
+        "(a:l1|l2)-[:follows]->(b:l3)",
+        "(a:l0)-[:likes]->(b:l4|l5)",
+        "(a:l6 {age > 30})-[:follows]->(b)",
+        "(a)<-[:likes]-(b:l7|l8)",
+        "(a:l9)-[:follows]->(b:l10)",
+        "(a:l2|l3 {age <= 60})-[:likes]->(b:l0)",
+        "(a:l11)-[:likes]->(b:l1)",
+        "(a:l4)-[:follows]->(b)-[:likes]->(c:l5)",
+        "(a:l5|l6)-[:follows]->(b:l7)",
+        "(a:l8 {age >= 18})-[:likes]->(b:l9|l10)",
+        "(a:l3)<-[:follows]-(b:l2)",
+        "(a:l0|l1|l2)-[:likes]->(b:l3|l4|l5)",
+    ]
+
+
+def synthetic_workload(
+    graph_names: Sequence[str],
+    pool: Sequence[str],
+    n_requests: int,
+    *,
+    seed: int = 0,
+    skew: float = 1.1,
+) -> List[Tuple[str, str]]:
+    """(graph, pattern) stream: tenants drawn uniformly, patterns drawn
+    zipf-skewed (weight ∝ 1/rank^skew) — a hot head and a long tail, the
+    distribution request coalescing and result caching are built for."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, len(pool) + 1, dtype=np.float64)
+    w = ranks ** -skew
+    w /= w.sum()
+    return [
+        (graph_names[int(rng.integers(len(graph_names)))],
+         pool[int(rng.choice(len(pool), p=w))])
+        for _ in range(n_requests)
+    ]
+
+
+def run_workload(service, workload: Sequence[Tuple[str, str]],
+                 concurrency: int, *, repeats: int = 1) -> Dict[str, float]:
+    """Closed-loop clients: the workload splits round-robin over
+    ``concurrency`` threads; each client submits its next request only
+    after the previous one resolved.  Returns wall/qps/latency metrics.
+
+    ``repeats`` > 1 replays the workload and keeps the best-throughput
+    run (latencies from that run) — multithreaded closed loops are highly
+    exposed to cgroup CPU-quota throttling and noisy neighbors, and the
+    best run is the least-interfered estimate of the service's own cost.
+    Replays hit warm caches; measure cold behavior with ``repeats=1`` on
+    a fresh ``Service``."""
+    if repeats > 1:
+        runs = [run_workload(service, workload, concurrency) for _ in range(repeats)]
+        return max(runs, key=lambda r: r["qps"])
+    lat_lock = threading.Lock()
+    latencies: List[float] = []
+    errors: List[BaseException] = []
+
+    def client(items: List[Tuple[str, str]]) -> None:
+        for graph, pattern in items:
+            t0 = time.monotonic()
+            try:
+                fut = service.submit(graph, pattern)
+                fut.result(timeout=120)
+            except BaseException as e:  # noqa: BLE001 — reported, not raised
+                with lat_lock:
+                    errors.append(e)
+                return
+            with lat_lock:
+                latencies.append(time.monotonic() - t0)
+
+    shards = [list(workload[i::concurrency]) for i in range(concurrency)]
+    threads = [threading.Thread(target=client, args=(s,)) for s in shards if s]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    if errors:
+        raise errors[0]
+    lat = np.sort(np.asarray(latencies))
+    return {
+        "wall_s": wall,
+        "qps": len(workload) / wall,
+        "p50_ms": float(lat[len(lat) // 2] * 1e3),
+        "p95_ms": float(lat[min(int(len(lat) * 0.95), len(lat) - 1)] * 1e3),
+    }
+
+
+def warm_serving_path(pg, pool: Sequence[str], *, max_masks: int = 64) -> None:
+    """Compile everything steady-state serving will hit: each pattern's
+    propagation program (direct match) and the batched store queries at
+    every Q bucket ≤ ``max_masks`` — batch composition varies with load,
+    and an unvisited bucket would otherwise pay its compile inside a
+    measured (or served) window."""
+    import jax
+
+    from repro.kernels.bitmap_query.ops import Q_BUCKETS, bucketed_q
+
+    for p in pool:
+        jax.block_until_ready(pg.match(p))
+    for b in Q_BUCKETS:
+        jax.block_until_ready(pg._vstore.query_any_batched([()] * b))
+        jax.block_until_ready(pg._estore.query_any_batched([()] * b))
+        if b >= bucketed_q(max_masks):
+            break
+
+
+def run_sequential(graphs: Dict[str, object],
+                   workload: Sequence[Tuple[str, str]], *,
+                   repeats: int = 1) -> Dict[str, float]:
+    """The per-request baseline: every request is a cold, single-tenant
+    ``PropGraph.match`` call, one after another (no service, no caches, no
+    coalescing).  ``repeats`` keeps the best run, like ``run_workload``."""
+    import jax
+
+    best = None
+    for _ in range(max(repeats, 1)):
+        t0 = time.monotonic()
+        for graph, pattern in workload:
+            jax.block_until_ready(graphs[graph].match(pattern))
+        wall = time.monotonic() - t0
+        if best is None or wall < best:
+            best = wall
+    return {"wall_s": best, "qps": len(workload) / best}
+
+
+def _verify_bitwise(service, graphs: Dict[str, object],
+                    pool: Sequence[str]) -> None:
+    """Service answers ≡ direct ``match()`` for every (graph, pattern)."""
+    for name, pg in graphs.items():
+        for pattern in pool:
+            ref = pg.match(pattern)
+            got = service.query(name, pattern)
+            assert (np.asarray(got.vertex_mask) == np.asarray(ref.vertex_mask)).all(), \
+                (name, pattern)
+            assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all(), \
+                (name, pattern)
+
+
+def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
+          seed: int = 0) -> None:
+    """CI gate: service ≡ direct match on all three backends (and on a
+    device mesh when >1 device is visible), invalidation works, and the
+    arr path actually coalesced.  Prints ``PGSERVE SMOKE OK``."""
+    import jax
+
+    from repro.service import Service
+
+    pool = pattern_pool()
+    for backend in ("arr", "list", "listd"):
+        pg = build_tenant_graph(backend, m, seed=seed)
+        with Service() as svc:
+            svc.add_graph("g", pg)
+            wl = synthetic_workload(["g"], pool, requests, seed=seed)
+            run_workload(svc, wl, concurrency)
+            _verify_bitwise(svc, {"g": pg}, pool)
+            # mutation → version bump → cached results die
+            before = svc.query("g", pool[0])
+            nodes = np.asarray(pg.graph.node_map)
+            pg.add_node_labels(nodes[:5], ["l1"] * 5)
+            after = svc.query("g", pool[0])
+            ref = pg.match(pool[0])
+            assert (np.asarray(after.vertex_mask) == np.asarray(ref.vertex_mask)).all()
+            stats = svc.stats()
+            assert stats.get("invalidated_results", 0) > 0, backend
+            if backend == "arr":
+                assert stats.get("coalesced_launches", 0) > 0, stats
+            else:
+                assert stats.get("fallback_requests", 0) > 0, stats
+        print(f"pgserve smoke: backend={backend} OK "
+              f"(coalesced_launches={stats.get('coalesced_launches', 0)}, "
+              f"result_hits={stats.get('result_hits', 0)})")
+
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_entity_mesh
+
+        mesh = make_entity_mesh()
+        pg1 = build_tenant_graph("arr", m, seed=seed)
+        pg2 = build_tenant_graph("arr", m, mesh=mesh, seed=seed)
+        with Service() as svc:
+            svc.add_graph("sharded", pg2)
+            for pattern in pool[:4]:
+                ref = pg1.match(pattern)
+                got = svc.query_batch("sharded", [pattern])[0]
+                assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all(), \
+                    pattern
+        print(f"pgserve smoke: mesh P={len(mesh.devices)} ≡ single-device OK")
+    else:
+        print("pgserve smoke: mesh check skipped (1 device)")
+    print("PGSERVE SMOKE OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast correctness pass for CI; exits non-zero on failure")
+    ap.add_argument("--graphs", type=int, default=2, help="tenant graph count")
+    ap.add_argument("--backend", default="arr", choices=("arr", "list", "listd"))
+    ap.add_argument("--m", type=int, default=20_000, help="edges per tenant graph")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--mesh", action="store_true",
+                    help="place tenant graphs on an entity mesh over all devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke(seed=args.seed)
+        return
+
+    from repro.service import Service
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_entity_mesh
+
+        mesh = make_entity_mesh()
+    graphs = {
+        f"tenant{i}": build_tenant_graph(args.backend, args.m, mesh=mesh,
+                                         seed=args.seed + i)
+        for i in range(args.graphs)
+    }
+    pool = pattern_pool()
+    wl = synthetic_workload(sorted(graphs), pool, args.requests, seed=args.seed)
+
+    for pg in graphs.values():  # steady-state numbers, not compile time
+        warm_serving_path(pg, pool)
+    seq = run_sequential(graphs, wl)
+    print(f"sequential baseline: {seq['qps']:.1f} qps ({seq['wall_s']:.2f}s)")
+
+    with Service() as svc:
+        for name, pg in graphs.items():
+            svc.add_graph(name, pg)
+        metrics = run_workload(svc, wl, args.concurrency)
+        stats = svc.stats()
+    print(f"service (c={args.concurrency}): {metrics['qps']:.1f} qps, "
+          f"p50={metrics['p50_ms']:.2f}ms p95={metrics['p95_ms']:.2f}ms, "
+          f"speedup ×{metrics['qps'] / seq['qps']:.2f}")
+    print(f"stats: {stats}")
+
+
+if __name__ == "__main__":
+    main()

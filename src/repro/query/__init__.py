@@ -6,7 +6,7 @@ entry points on ``PropGraph`` are ``match()`` / ``explain()``; this package
 is the machinery behind them.
 """
 from repro.query.ast import EdgePattern, NodePattern, Pattern, Predicate
-from repro.query.executor import MatchResult, execute_plan
+from repro.query.executor import MatchResult, execute_plan, execute_plan_with_masks
 from repro.query.parser import ParseError, parse
 from repro.query.plan import MaskStep, Plan, PredicateStep
 from repro.query.planner import plan_pattern
@@ -24,4 +24,5 @@ __all__ = [
     "plan_pattern",
     "MatchResult",
     "execute_plan",
+    "execute_plan_with_masks",
 ]

@@ -42,7 +42,7 @@ from repro.core.di import DIGraph
 from repro.core.queries import extract_subgraph, induce_edge_mask_directed
 from repro.query.plan import Plan
 
-__all__ = ["MatchResult", "execute_plan"]
+__all__ = ["MatchResult", "execute_plan", "execute_plan_with_masks"]
 
 
 @partial(
@@ -187,8 +187,29 @@ def _gather_masks(masks, mesh):
 
 def execute_plan(pg, plan: Plan) -> MatchResult:
     """Execute ``plan`` against ``pg``; see module docstring for stages."""
-    g = pg._require_graph()
+    pg._require_graph()  # the documented RuntimeError, before store access
     label_masks, rel_masks = _materialize_masks(pg, plan)
+    return execute_plan_with_masks(pg, plan, label_masks, rel_masks)
+
+
+def execute_plan_with_masks(
+    pg,
+    plan: Plan,
+    label_masks: Dict[int, jax.Array],
+    rel_masks: Dict[int, jax.Array],
+) -> MatchResult:
+    """Stages 2–3 of ``execute_plan``, taking PRE-MATERIALIZED attribute
+    masks: ``label_masks[slot]`` / ``rel_masks[slot]`` replace the plan's
+    ``mask_steps`` outputs (missing slots mean "no attribute constraint").
+
+    This is the service layer's coalescing entry point
+    (``src/repro/service/``): a micro-batch of requests materializes ALL
+    its label/relationship masks in one ``bitmap_query_batched`` launch,
+    then runs each request's propagation here.  Masks must cover the same
+    entity universe the plan's own steps would produce — for bitwise parity
+    with ``execute_plan``, hand in masks computed from the same stores
+    (any DIP-ARR impl; they agree bitwise)."""
+    g = pg._require_graph()
 
     cands = []
     for slot, node in enumerate(plan.pattern.nodes):

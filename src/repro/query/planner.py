@@ -92,9 +92,10 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
     for slot, node in enumerate(pattern.nodes):
         if node.labels:
             est, sel = _estimate(vstore, node.labels, g.n)
-            chosen = _choose_impl(
-                pg.backend, est, getattr(vstore.finalize(), "nnz", 0), vstore.k, impl
-            )
+            # stats-only read: nnz comes off attr_counts, so planning never
+            # materializes a store (mesh mode would otherwise build a dense
+            # device copy just to read its size)
+            chosen = _choose_impl(pg.backend, est, vstore.nnz, vstore.k, impl)
             mask_steps.append(
                 MaskStep(
                     kind="node",
@@ -110,9 +111,7 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
     for slot, edge in enumerate(pattern.edges):
         if edge.rels:
             est, sel = _estimate(estore, edge.rels, g.m)
-            chosen = _choose_impl(
-                pg.backend, est, getattr(estore.finalize(), "nnz", 0), estore.k, impl
-            )
+            chosen = _choose_impl(pg.backend, est, estore.nnz, estore.k, impl)
             mask_steps.append(
                 MaskStep(
                     kind="edge",

@@ -1,0 +1,29 @@
+"""repro.service — in-process concurrent graph analytics service.
+
+The serving layer over the property-graph stack (docs/ARCHITECTURE.md §8):
+a ``GraphRegistry`` of named, versioned ``PropGraph``s, a micro-batching
+scheduler that coalesces concurrent pattern queries into single
+``bitmap_query_batched`` launches, and a two-tier plan/result cache keyed
+to survive exactly as long as correctness allows.  README.md in this
+directory documents the request lifecycle, coalescing rules and cache
+keys; ``repro.launch.pgserve`` is the CLI driver.
+
+    from repro.service import Service
+    with Service() as svc:
+        svc.add_graph("social", pg)
+        res = svc.query("social", "(a:person)-[:follows]->(b:person)")
+        futs = [svc.submit("social", p) for p in patterns]  # concurrent
+"""
+from repro.service.cache import LRUCache
+from repro.service.registry import GraphRegistry
+from repro.service.scheduler import MicroBatcher, execute_coalesced
+from repro.service.service import Service, ServiceConfig
+
+__all__ = [
+    "Service",
+    "ServiceConfig",
+    "GraphRegistry",
+    "LRUCache",
+    "MicroBatcher",
+    "execute_coalesced",
+]

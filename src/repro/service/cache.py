@@ -1,0 +1,94 @@
+"""Thread-safe LRU caches for the analytics service.
+
+Two instances per ``Service`` (src/repro/service/README.md "Cache keys"):
+
+* **plan cache** — key ``(canonical pattern, backend, impl)`` → ``Plan``.
+  Plans are graph-independent semantically (a plan is the pattern plus
+  per-mask impl choices; reorientation only changes propagation ORDER, not
+  the match set), so the key deliberately excludes the graph version —
+  a plan survives mutations; only its selectivity estimates go stale,
+  which costs performance, never correctness.
+* **result cache** — key ``(graph name, version, canonical pattern, impl)``
+  → ``MatchResult``.  The version component makes stale reads structurally
+  impossible: every ``PropGraph`` mutator bumps ``version``, so a cached
+  result is unreachable the moment its graph changes.  ``purge`` drops the
+  dead entries eagerly when the registry reports a mutation (they would
+  otherwise linger until LRU eviction).
+
+``maxsize=0`` disables a cache (every ``get`` misses, ``put`` is a no-op) —
+the benchmark's "coalescing only" configuration.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Hashable, Optional
+
+__all__ = ["LRUCache"]
+
+_MISS = object()
+
+
+class LRUCache:
+    """OrderedDict-based LRU with hit/miss/eviction accounting.
+
+    All operations take the internal lock — safe to share between client
+    threads (submit-side result-cache probes), the scheduler worker and
+    mutation hooks (purge)."""
+
+    def __init__(self, maxsize: int):
+        if maxsize < 0:
+            raise ValueError(f"maxsize must be ≥ 0, got {maxsize}")
+        self.maxsize = maxsize
+        self._data: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        with self._lock:
+            val = self._data.get(key, _MISS)
+            if val is _MISS:
+                self.misses += 1
+                return default
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.maxsize == 0:
+            return
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def purge(self, predicate: Callable[[Hashable], bool]) -> int:
+        """Drop every entry whose KEY satisfies ``predicate``; returns the
+        number dropped (the service's invalidation counter feed)."""
+        with self._lock:
+            dead = [k for k in self._data if predicate(k)]
+            for k in dead:
+                del self._data[k]
+            return len(dead)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "size": len(self._data),
+                "maxsize": self.maxsize,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }

@@ -1,0 +1,342 @@
+"""Service — the client-facing concurrent graph analytics API.
+
+Wires the three subsystems together (src/repro/service/README.md walks the
+request lifecycle):
+
+    registry (named, versioned graphs)
+      └─ scheduler (micro-batches compatible requests, coalesces masks)
+           ├─ plan cache    (canonical pattern, backend, impl) → Plan
+           └─ result cache  (graph, version, canonical, impl) → MatchResult
+
+``submit()`` returns a ``concurrent.futures.Future`` immediately;
+``query()`` blocks on one request; ``query_batch()`` is the synchronous
+entry that runs a whole group through the coalesced path in the caller's
+thread (deterministic batching — what the equivalence tests and benchmarks
+use).  All device execution happens on one scheduler thread, so concurrent
+clients never race in the JAX runtime, and cache bookkeeping has a single
+writer for the async path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.query import Pattern, execute_plan, parse, plan_pattern
+from repro.service.cache import LRUCache
+from repro.service.registry import GraphRegistry
+from repro.service.scheduler import MicroBatcher, execute_coalesced
+
+__all__ = ["Service", "ServiceConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs, all orthogonal.  ``coalesce=False`` + zero cache sizes turns
+    the service into a plain per-request executor — the benchmark's
+    sequential baseline inside the same machinery."""
+
+    max_batch: int = 32  # requests per micro-batch
+    window_ms: float = 2.0  # batching window opened by the first request
+    plan_cache_size: int = 256
+    result_cache_size: int = 256
+    coalesce: bool = True  # fuse compatible mask steps into batched launches
+    submit_fastpath: bool = True  # resolve result-cache hits at submit(),
+    # before the queue — hot patterns skip the batching window entirely
+
+
+@dataclasses.dataclass
+class _Request:
+    graph: str
+    canonical: str
+    ast: Pattern
+    impl: Optional[str]
+    future: Future
+
+
+class Service:
+    """In-process graph analytics service (see module docstring).
+
+    Use as a context manager or call ``close()`` — the scheduler owns a
+    worker thread.
+    """
+
+    def __init__(self, registry: Optional[GraphRegistry] = None, *,
+                 config: Optional[ServiceConfig] = None):
+        self.registry = registry if registry is not None else GraphRegistry()
+        self.config = config if config is not None else ServiceConfig()
+        self.plan_cache = LRUCache(self.config.plan_cache_size)
+        self.result_cache = LRUCache(self.config.result_cache_size)
+        self._canon_cache = LRUCache(512)  # raw text → (canonical, ast)
+        self._stats: Dict[str, int] = {}
+        self._stats_lock = threading.Lock()
+        self.registry.subscribe(self._on_mutation)
+        self._batcher = MicroBatcher(
+            self._execute_batch,
+            max_batch=self.config.max_batch,
+            window_ms=self.config.window_ms,
+        )
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        self._batcher.close()
+        # a shared registry must not keep feeding (and pinning) this
+        # service's caches after shutdown
+        self.registry.unsubscribe(self._on_mutation)
+
+    def __enter__(self) -> "Service":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------------- graphs
+    def add_graph(self, name: str, pg) -> "Service":
+        """Register a built ``PropGraph`` under ``name``."""
+        self.registry.register(name, pg)
+        return self
+
+    def load_graph(self, name: str, path: str, *, backend: Optional[str] = None,
+                   mesh=None) -> "Service":
+        """Reopen a saved graph (optionally onto a mesh) and serve it."""
+        self.registry.load(name, path, backend=backend, mesh=mesh)
+        return self
+
+    # --------------------------------------------------------------- clients
+    def submit(self, graph: str, pattern: Union[str, Pattern], *,
+               impl: Optional[str] = None) -> Future:
+        """Enqueue one pattern query; returns its ``Future`` immediately.
+
+        Parse errors surface here (caller's thread), not on the future —
+        a malformed pattern is a client bug, not a serving failure."""
+        if self._batcher.closed:
+            # uniform closed-service contract: even a pattern the result
+            # cache could answer raises, like every cache miss would
+            raise RuntimeError("scheduler is closed")
+        canonical, ast = self._canon(pattern)
+        fut: Future = Future()
+        self._bump("submitted")
+        if self.config.submit_fastpath:
+            try:
+                pg = self.registry.get(graph)
+            except KeyError:
+                pg = None  # unknown graph: uniform error path via the worker
+            if pg is not None:
+                hit = self.result_cache.get((graph, pg.version, canonical, impl))
+                if hit is not None:
+                    self._bump("result_hits")
+                    self._bump("fastpath_hits")
+                    self._bump("completed")
+                    fut.set_result(hit)
+                    return fut
+        self._batcher.submit(
+            _Request(graph=graph, canonical=canonical, ast=ast, impl=impl,
+                     future=fut)
+        )
+        return fut
+
+    def query(self, graph: str, pattern: Union[str, Pattern], *,
+              impl: Optional[str] = None, timeout: Optional[float] = 60.0):
+        """Blocking single query → ``MatchResult``."""
+        return self.submit(graph, pattern, impl=impl).result(timeout=timeout)
+
+    def query_batch(self, graph: str, patterns: Sequence[Union[str, Pattern]],
+                    *, impl: Optional[str] = None) -> List:
+        """Synchronous coalesced execution of ``patterns`` as ONE group in
+        the caller's thread (bypasses the queue — batch composition is
+        deterministic, which the bitwise-equivalence tests rely on).
+        The first failing pattern's error raises; prior semantics of a
+        plain loop of ``match()`` calls."""
+        pg = self.registry.get(graph)
+        positions: Dict[str, List[int]] = {}  # canonical → indices (dedup)
+        canon_asts: Dict[str, Pattern] = {}
+        for i, pat in enumerate(patterns):
+            canonical, ast = self._canon(pat)
+            if canonical in positions:
+                self._bump("dedup_hits")
+            else:
+                canon_asts[canonical] = ast
+            positions.setdefault(canonical, []).append(i)
+        outcomes = self._serve_group(pg, graph, impl, canon_asts)
+        out: List = [None] * len(patterns)
+        for canonical, idxs in positions.items():
+            res = outcomes[canonical]
+            if isinstance(res, BaseException):
+                raise res
+            for i in idxs:
+                out[i] = res
+        self._bump("batches")
+        self._bump("batched_requests", len(patterns))
+        self._bump("completed", len(patterns))
+        return out
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, object]:
+        """Counter snapshot: request/batch totals, coalescing activity,
+        cache hit/miss/eviction/invalidation accounting."""
+        with self._stats_lock:
+            out: Dict[str, object] = dict(self._stats)
+        out["plan_cache"] = self.plan_cache.stats()
+        out["result_cache"] = self.result_cache.stats()
+        return out
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self._stats[key] = self._stats.get(key, 0) + n
+
+    # ------------------------------------------------------------- internals
+    def _canon(self, pattern: Union[str, Pattern]):
+        """Pattern → (canonical text, AST); the canonical form is
+        ``parse(...).to_text()``, so textual variants ("(a)-[]->(b)" with
+        odd spacing) share cache entries."""
+        if isinstance(pattern, Pattern):
+            return pattern.to_text(), pattern
+        cached = self._canon_cache.get(pattern)
+        if cached is not None:
+            return cached
+        ast = parse(pattern)
+        entry = (ast.to_text(), ast)
+        self._canon_cache.put(pattern, entry)
+        return entry
+
+    def _plan(self, pg, canonical: str, ast: Pattern, impl: Optional[str]):
+        key = (canonical, pg.backend, impl)
+        plan = self.plan_cache.get(key)
+        if plan is not None:
+            self._bump("plan_hits")
+            return plan
+        self._bump("plan_misses")
+        plan = plan_pattern(pg, ast, impl=impl)
+        self.plan_cache.put(key, plan)
+        return plan
+
+    def _execute_plans(self, pg, plans: List, impl: Optional[str]) -> List:
+        if not self.config.coalesce:
+            return [execute_plan(pg, p) for p in plans]
+        local: Dict[str, int] = {}
+        results = execute_coalesced(pg, plans, impl=impl, stats=local)
+        for k, v in local.items():
+            self._bump(k, v)
+        return results
+
+    def _serve_group(self, pg, graph: str, impl: Optional[str],
+                     canon_asts: Dict[str, Pattern]) -> Dict[str, object]:
+        """The serve pipeline for ONE deduplicated group: result-cache
+        probe → per-request planning → coalesced execution → cache put.
+        Returns canonical → ``MatchResult`` or ``Exception`` — both entry
+        points (``query_batch`` and the scheduler worker) fan the outcomes
+        out to their callers.
+
+        Failure isolation: planning errors (bad property names etc.) fail
+        only their own request; if the COALESCED execution raises, the
+        group re-runs per-request so one poisoned plan cannot take down
+        co-batched tenants.  Consistency under concurrent mutators: the
+        version is read before executing and re-checked after — a
+        mid-flight mutation (torn graph/store view) retries the group and
+        nothing torn is ever cached or returned as authoritative."""
+        outcomes: Dict[str, object] = {}
+        version = pg.version
+        todo: Dict[str, Pattern] = {}
+        for canonical, ast in canon_asts.items():
+            hit = self.result_cache.get((graph, version, canonical, impl))
+            if hit is not None:
+                self._bump("result_hits")
+                outcomes[canonical] = hit
+            else:
+                self._bump("result_misses")
+                todo[canonical] = ast
+        if not todo:
+            return outcomes
+
+        plans: Dict[str, object] = {}
+        for canonical, ast in todo.items():
+            try:
+                plans[canonical] = self._plan(pg, canonical, ast, impl)
+            except Exception as e:  # noqa: BLE001 — isolated to this request
+                outcomes[canonical] = e
+                self._bump("errors")
+        if not plans:
+            return outcomes
+
+        keys = list(plans)
+        results: List[object] = []
+        stable = False
+        for attempt in range(3):
+            version = pg.version
+            try:
+                results = self._execute_plans(pg, [plans[c] for c in keys], impl)
+            except Exception as e:  # noqa: BLE001
+                if pg.version != version and attempt < 2:
+                    continue  # a concurrent mutation tore the view — retry
+                # the group itself failed: isolate by per-request execution
+                results = []
+                for c in keys:
+                    try:
+                        results.append(execute_plan(pg, plans[c]))
+                    except Exception as ee:  # noqa: BLE001
+                        results.append(ee)
+                break
+            if pg.version == version:
+                stable = True
+                break  # consistent snapshot — safe to cache
+        for c, res in zip(keys, results):
+            if isinstance(res, BaseException):
+                outcomes[c] = res
+                self._bump("errors")
+            else:
+                if stable:
+                    self.result_cache.put((graph, version, c, impl), res)
+                outcomes[c] = res
+        return outcomes
+
+    def _on_mutation(self, name: str, pg) -> None:
+        """Registry subscriber: eagerly drop result-cache entries for the
+        mutated graph.  Versioned keys already make them unreachable; the
+        purge frees the memory and feeds the invalidation counters."""
+        dropped = self.result_cache.purge(lambda key: key[0] == name)
+        self._bump("invalidation_events")
+        if dropped:
+            self._bump("invalidated_results", dropped)
+
+    def _execute_batch(self, batch: List[_Request]) -> None:
+        """MicroBatcher callback: group compatible requests, serve cache
+        hits, run the rest coalesced.  Never raises — failures land on the
+        affected futures."""
+        self._bump("batches")
+        self._bump("batched_requests", len(batch))
+        groups: Dict[tuple, List[_Request]] = {}
+        for req in batch:
+            groups.setdefault((req.graph, req.impl), []).append(req)
+        for (gname, impl), reqs in groups.items():
+            try:
+                pg = self.registry.get(gname)
+            except KeyError as e:
+                for r in reqs:
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_exception(e)
+                        self._bump("errors")
+                continue
+            # duplicate canonicals inside one window execute ONCE and fan
+            # the result out (the multi-tenant hot-pattern case)
+            by_canonical: Dict[str, List[_Request]] = {}
+            canon_asts: Dict[str, Pattern] = {}
+            for r in reqs:
+                if not r.future.set_running_or_notify_cancel():
+                    continue  # client cancelled while queued
+                if r.canonical in by_canonical:
+                    self._bump("dedup_hits")
+                else:
+                    canon_asts[r.canonical] = r.ast
+                by_canonical.setdefault(r.canonical, []).append(r)
+            if not by_canonical:
+                continue
+            outcomes = self._serve_group(pg, gname, impl, canon_asts)
+            for canonical, rs in by_canonical.items():
+                res = outcomes[canonical]
+                for r in rs:
+                    if isinstance(res, BaseException):
+                        r.future.set_exception(res)
+                    else:
+                        r.future.set_result(res)
+                        self._bump("completed")

@@ -25,6 +25,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CHECKED_DOCS = [
     "docs/ARCHITECTURE.md",
     "src/repro/query/README.md",
+    "src/repro/service/README.md",
 ]
 NO_DESIGN_REF_TREES = [
     "src/repro/core",
