@@ -12,12 +12,16 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
                  run ``python -m benchmarks.bench_shard`` standalone to get
                  8 virtual devices — in-process it sweeps what's visible)
   serve        — service layer: coalesced concurrent serving vs sequential
-                 per-request baseline, concurrency 1/2/4/8 (JSON lines;
+                 per-request baseline, concurrency 1/2/4/8, adaptive- vs
+                 fixed-window, plus cross-process TCP rows (JSON lines;
+                 ALWAYS appended to ``BENCH_serve.json`` — override with
+                 ``BENCH_JSON_PATH`` — so the perf trajectory records;
                  see bench_serve.py)
 Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 
@@ -49,10 +53,13 @@ def main() -> None:
     from benchmarks import bench_shard
     bench_shard.run(m=20_000 if small else 100_000)
 
-    print("# serve (service layer: coalesced vs sequential, concurrency sweep)")
+    print("# serve (service layer: coalesced vs sequential, concurrency sweep,")
+    print("#        adaptive vs fixed window, cross-process TCP)")
     from benchmarks import bench_serve
     bench_serve.run(m=10_000 if small else 50_000,
-                    requests=32 if small else 64)
+                    requests=32 if small else 64,
+                    json_path=os.environ.get("BENCH_JSON_PATH",
+                                             "BENCH_serve.json"))
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import tempfile
 from typing import Optional
 
 import jax.numpy as jnp
@@ -36,34 +37,60 @@ def _store_pairs(store: Optional[_AttrStore]):
 
 
 def save_propgraph(path: str, pg: PropGraph) -> str:
-    """Atomic save (tmp + rename).  Overwrites an existing graph at ``path``."""
+    """Atomic save (unique tmp dir + swap).  Overwrites an existing graph at
+    ``path``: the new directory is renamed in only after it is complete, and
+    the old one is moved aside first (``os.rename`` onto a non-empty
+    directory raises).  A reader never observes a half-written graph at
+    ``path``; a crash mid-swap can at worst leave the previous version
+    parked in a ``<name>.old.*`` sibling, never a torn one."""
     g = pg._require_graph()
-    tmp = path + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
-    ve, va, vvals = _store_pairs(pg._vstore)
-    ee, ea, evals = _store_pairs(pg._estore)
-    arrays = {
-        "src": np.asarray(g.src), "dst": np.asarray(g.dst),
-        "seg": np.asarray(g.seg), "node_map": np.asarray(g.node_map),
-        "v_ent": ve, "v_attr": va, "e_ent": ee, "e_attr": ea,
-    }
-    for name, (col, valid) in pg.vertex_props.items():
-        arrays[f"vp_{name}"] = np.asarray(col)
-        arrays[f"vpm_{name}"] = np.asarray(valid)
-    for name, (col, valid) in pg.edge_props.items():
-        arrays[f"ep_{name}"] = np.asarray(col)
-        arrays[f"epm_{name}"] = np.asarray(valid)
-    np.savez_compressed(os.path.join(tmp, "graph.npz"), **arrays)
-    manifest = {
-        "version": _FORMAT_VERSION, "n": g.n, "m": g.m, "backend": pg.backend,
-        "vertex_labels": vvals, "edge_relationships": evals,
-        "vertex_props": list(pg.vertex_props), "edge_props": list(pg.edge_props),
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+    path = path.rstrip(os.sep)
+    parent = os.path.dirname(os.path.abspath(path)) or os.sep
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(path) + ".tmp.", dir=parent)
+    try:
+        ve, va, vvals = _store_pairs(pg._vstore)
+        ee, ea, evals = _store_pairs(pg._estore)
+        arrays = {
+            "src": np.asarray(g.src), "dst": np.asarray(g.dst),
+            "seg": np.asarray(g.seg), "node_map": np.asarray(g.node_map),
+            "v_ent": ve, "v_attr": va, "e_ent": ee, "e_attr": ea,
+        }
+        for name, (col, valid) in pg.vertex_props.items():
+            arrays[f"vp_{name}"] = np.asarray(col)
+            arrays[f"vpm_{name}"] = np.asarray(valid)
+        for name, (col, valid) in pg.edge_props.items():
+            arrays[f"ep_{name}"] = np.asarray(col)
+            arrays[f"epm_{name}"] = np.asarray(valid)
+        np.savez_compressed(os.path.join(tmp, "graph.npz"), **arrays)
+        manifest = {
+            "version": _FORMAT_VERSION, "n": g.n, "m": g.m,
+            "backend": pg.backend,
+            "vertex_labels": vvals, "edge_relationships": evals,
+            "vertex_props": list(pg.vertex_props),
+            "edge_props": list(pg.edge_props),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.lexists(path):
+            # replace-or-swap: move the old graph aside (same filesystem, so
+            # both renames are atomic), expose the new one, then reclaim
+            old = tempfile.mkdtemp(prefix=os.path.basename(path) + ".old.",
+                                   dir=parent)
+            old_g = os.path.join(old, "g")
+            os.rename(path, old_g)
+            try:
+                os.rename(tmp, path)
+            except BaseException:
+                os.rename(old_g, path)  # roll the previous version back in
+                shutil.rmtree(old, ignore_errors=True)
+                raise
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return path
 
 

@@ -12,6 +12,18 @@ reporting throughput/latency and the service's coalescing/cache counters.
     # CI smoke: correctness across all backends (+ mesh when >1 device)
     PYTHONPATH=src python -m repro.launch.pgserve --smoke
 
+Network mode (the ``pgd`` front-end, docs/ARCHITECTURE.md §9):
+
+    # foreground server process owning the graphs and devices
+    PYTHONPATH=src python -m repro.launch.pgserve --serve --port 8945
+
+    # cross-process throughput: spawns the server, drives it with
+    # concurrent PGClient connections over TCP
+    PYTHONPATH=src python -m repro.launch.pgserve --net --concurrency 8
+
+    # CI smoke: client↔server round-trip bitwise vs in-process match
+    PYTHONPATH=src python -m repro.launch.pgserve --net --smoke
+
 The workload/runner helpers here are also the benchmark's building blocks
 (``benchmarks/bench_serve.py`` imports them), so the CLI and the benchmark
 measure the same thing.
@@ -19,6 +31,9 @@ measure the same thing.
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -30,8 +45,12 @@ __all__ = [
     "pattern_pool",
     "synthetic_workload",
     "run_workload",
+    "run_workload_net",
     "run_sequential",
+    "spawn_server",
+    "serve",
     "smoke",
+    "net_smoke",
     "main",
 ]
 
@@ -101,11 +120,16 @@ def synthetic_workload(
     ]
 
 
-def run_workload(service, workload: Sequence[Tuple[str, str]],
-                 concurrency: int, *, repeats: int = 1) -> Dict[str, float]:
-    """Closed-loop clients: the workload splits round-robin over
-    ``concurrency`` threads; each client submits its next request only
-    after the previous one resolved.  Returns wall/qps/latency metrics.
+def _run_closed_loop(make_session, workload: Sequence[Tuple[str, str]],
+                     concurrency: int, *, repeats: int = 1) -> Dict[str, float]:
+    """The shared closed-loop harness behind ``run_workload`` (in-process)
+    and ``run_workload_net`` (TCP): the workload splits round-robin over
+    ``concurrency`` client threads; each thread gets its own session from
+    ``make_session()`` — ``(call(graph, pattern), close())`` — and issues
+    its next request only after the previous one resolved.  Session setup
+    runs inside the measured loop on the client's own thread (a real
+    client pays its connection cost too).  Returns wall/qps/latency
+    metrics.
 
     ``repeats`` > 1 replays the workload and keeps the best-throughput
     run (latencies from that run) — multithreaded closed loops are highly
@@ -114,24 +138,33 @@ def run_workload(service, workload: Sequence[Tuple[str, str]],
     Replays hit warm caches; measure cold behavior with ``repeats=1`` on
     a fresh ``Service``."""
     if repeats > 1:
-        runs = [run_workload(service, workload, concurrency) for _ in range(repeats)]
+        runs = [_run_closed_loop(make_session, workload, concurrency)
+                for _ in range(repeats)]
         return max(runs, key=lambda r: r["qps"])
     lat_lock = threading.Lock()
     latencies: List[float] = []
     errors: List[BaseException] = []
 
     def client(items: List[Tuple[str, str]]) -> None:
-        for graph, pattern in items:
-            t0 = time.monotonic()
-            try:
-                fut = service.submit(graph, pattern)
-                fut.result(timeout=120)
-            except BaseException as e:  # noqa: BLE001 — reported, not raised
-                with lat_lock:
-                    errors.append(e)
-                return
+        try:
+            call, close = make_session()
+        except BaseException as e:  # noqa: BLE001 — reported, not raised
             with lat_lock:
-                latencies.append(time.monotonic() - t0)
+                errors.append(e)
+            return
+        try:
+            for graph, pattern in items:
+                t0 = time.monotonic()
+                try:
+                    call(graph, pattern)
+                except BaseException as e:  # noqa: BLE001
+                    with lat_lock:
+                        errors.append(e)
+                    return
+                with lat_lock:
+                    latencies.append(time.monotonic() - t0)
+        finally:
+            close()
 
     shards = [list(workload[i::concurrency]) for i in range(concurrency)]
     threads = [threading.Thread(target=client, args=(s,)) for s in shards if s]
@@ -150,6 +183,20 @@ def run_workload(service, workload: Sequence[Tuple[str, str]],
         "p50_ms": float(lat[len(lat) // 2] * 1e3),
         "p95_ms": float(lat[min(int(len(lat) * 0.95), len(lat) - 1)] * 1e3),
     }
+
+
+def run_workload(service, workload: Sequence[Tuple[str, str]],
+                 concurrency: int, *, repeats: int = 1) -> Dict[str, float]:
+    """Closed-loop clients against an in-process ``Service`` (the shared
+    harness's docstring has the methodology)."""
+
+    def make_session():
+        return (lambda graph, pattern:
+                service.submit(graph, pattern).result(timeout=120),
+                lambda: None)
+
+    return _run_closed_loop(make_session, workload, concurrency,
+                            repeats=repeats)
 
 
 def warm_serving_path(pg, pool: Sequence[str], *, max_masks: int = 64) -> None:
@@ -188,6 +235,206 @@ def run_sequential(graphs: Dict[str, object],
         if best is None or wall < best:
             best = wall
     return {"wall_s": best, "qps": len(workload) / best}
+
+
+# ------------------------------------------------------------- network mode
+def serve(*, port: int = 0, host: str = "127.0.0.1", backend: str = "arr",
+          backends: Optional[Sequence[str]] = None, graphs: int = 2,
+          m: int = 20_000, seed: int = 0, mesh: bool = False,
+          warm: bool = False) -> None:
+    """Foreground server process: build the tenant graphs, bind, print
+    ``PGSERVE LISTENING <port>`` (the spawn handshake), serve until a
+    client sends ``shutdown``.
+
+    ``backends`` (e.g. ``("arr", "list", "listd")``) builds ONE graph per
+    backend, named after it — the multi-backend smoke layout; otherwise
+    ``graphs`` tenants named ``tenant{i}`` on ``backend`` — the layout the
+    workload generator and benchmarks address."""
+    from repro.service import PGServer, Service
+
+    dev_mesh = None
+    if mesh:
+        from repro.launch.mesh import make_entity_mesh
+
+        dev_mesh = make_entity_mesh()
+    with Service() as svc:
+        if backends:
+            named = {b: build_tenant_graph(b, m, mesh=dev_mesh, seed=seed)
+                     for b in backends}
+        else:
+            named = {f"tenant{i}": build_tenant_graph(backend, m, mesh=dev_mesh,
+                                                      seed=seed + i)
+                     for i in range(graphs)}
+        pool = pattern_pool()
+        for name, pg in named.items():
+            svc.add_graph(name, pg)
+            if warm:
+                warm_serving_path(pg, pool)
+        server = PGServer(svc, host=host, port=port).start()
+        print(f"PGSERVE LISTENING {server.port}", flush=True)
+        server.wait_shutdown()
+        server.close()
+    print("PGSERVE SERVER EXIT", flush=True)
+
+
+def spawn_server(extra_args: Sequence[str], *, timeout: float = 180.0):
+    """Launch ``pgserve --serve --port 0 <extra_args>`` as a SEPARATE OS
+    process and wait for its listening handshake; returns ``(proc, port)``.
+    The child inherits the environment (``PYTHONPATH``, ``XLA_FLAGS`` — CI's
+    8 virtual devices apply server-side too)."""
+    cmd = [sys.executable, "-m", "repro.launch.pgserve", "--serve",
+           "--port", "0", *extra_args]
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(cmd, stdout=subprocess.PIPE, text=True, env=env)
+    # the handshake wait must not block in readline() itself — a wedged
+    # child that stays silent would hang the caller past any deadline — so
+    # a pump thread reads lines and the deadline is enforced on the queue
+    # (the pump also keeps draining stdout afterwards, so a chatty server
+    # can never fill the pipe and stall)
+    import queue as _queue
+
+    lines: "_queue.Queue" = _queue.Queue()
+
+    def _pump() -> None:
+        for line in proc.stdout:
+            lines.put(line)
+        lines.put(None)  # EOF
+
+    threading.Thread(target=_pump, name="pgserve-spawn-pump",
+                     daemon=True).start()
+    deadline = time.monotonic() + timeout
+    port = None
+    while True:
+        try:
+            line = lines.get(timeout=max(0.0, deadline - time.monotonic()))
+        except _queue.Empty:
+            break  # deadline passed with the child alive but silent
+        if line is None:
+            break  # child exited without the handshake
+        if line.startswith("PGSERVE LISTENING "):
+            port = int(line.split()[-1])
+            break
+    if port is None:
+        proc.kill()
+        raise RuntimeError("server process never reached LISTENING")
+    return proc, port
+
+
+def run_workload_net(port: int, workload: Sequence[Tuple[str, str]],
+                     concurrency: int, *, repeats: int = 1,
+                     host: str = "127.0.0.1") -> Dict[str, float]:
+    """``run_workload`` over TCP: each closed-loop client is its own
+    ``PGClient`` CONNECTION (its own session), so the server's batching
+    window is fed by genuinely independent sockets."""
+    from repro.service import PGClient
+
+    def make_session():
+        c = PGClient(host, port=port)
+        return c.query, c.close
+
+    return _run_closed_loop(make_session, workload, concurrency,
+                            repeats=repeats)
+
+
+def _assert_wire_result_matches(got, ref, context) -> None:
+    assert (np.asarray(got.vertex_mask) == np.asarray(ref.vertex_mask)).all(), context
+    assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all(), context
+    rb = ref.bindings()
+    gb = got.bindings()
+    assert sorted(gb) == sorted(rb), context
+    for k in rb:
+        assert (np.asarray(gb[k]) == np.asarray(rb[k])).all(), (context, k)
+
+
+def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> None:
+    """CI gate for the network path: one server SUBPROCESS serving all
+    three backends; a client in THIS process verifies every pool pattern
+    bitwise against an in-process ``PropGraph.match`` reference (the
+    tenant build is seeded, so both processes construct identical graphs),
+    then exercises pipelining, wire mutation + invalidation, the
+    save→``load_graph`` path (cross-backend), error isolation, and
+    graceful drain/shutdown.  Prints ``PGSERVE NET SMOKE OK``."""
+    import tempfile
+
+    from repro.core.io import save_propgraph
+    from repro.service import PGClient
+
+    backends = ("arr", "list", "listd")
+    pool = pattern_pool()
+    refs = {b: build_tenant_graph(b, m, seed=seed) for b in backends}
+    proc, port = spawn_server(["--backends", ",".join(backends),
+                               "--m", str(m), "--seed", str(seed)])
+    try:
+        with PGClient(port=port) as c:
+            ping = c.ping()
+            assert ping, "server did not answer ping"
+            assert sorted(c.graphs()) == sorted(backends)
+            # blocking queries: every backend, every pattern, bitwise
+            for b in backends:
+                for pattern in pool:
+                    _assert_wire_result_matches(
+                        c.query(b, pattern), refs[b].match(pattern), (b, pattern))
+                print(f"pgserve net smoke: backend={b} ≡ in-process match OK",
+                      flush=True)
+            # pipelined burst: one pressure wave, still exact (dups included)
+            burst = pool + pool[:4]
+            got = c.query_batch("arr", burst)
+            for pattern, res in zip(burst, got):
+                _assert_wire_result_matches(res, refs["arr"].match(pattern),
+                                            ("pipelined", pattern))
+            # explain crosses the wire as text
+            assert "plan" in c.explain("arr", pool[0]).lower()
+            # mutation over the wire: version bump + cache invalidation,
+            # mirrored locally on the reference graph
+            nodes = np.asarray(refs["arr"].graph.node_map)
+            v = c.add_node_labels("arr", nodes[:7], ["l1"] * 7)
+            assert v == refs["arr"].add_node_labels(nodes[:7], ["l1"] * 7).version
+            _assert_wire_result_matches(c.query("arr", pool[0]),
+                                        refs["arr"].match(pool[0]),
+                                        ("post-mutation", pool[0]))
+            # save here → load_graph there (cross-backend reopen via wire)
+            with tempfile.TemporaryDirectory(dir=tmp_dir) as td:
+                path = save_propgraph(os.path.join(td, "pg"), refs["arr"])
+                info = c.load_graph("disk", path, backend="listd")
+                assert info["backend"] == "listd"
+                _assert_wire_result_matches(c.query("disk", pool[1]),
+                                            refs["arr"].match(pool[1]),
+                                            "load_graph")
+                # with >1 device server-side (CI forces 8), reopen the same
+                # save onto the server's entity mesh: the §7 sharded path,
+                # driven cross-process, must stay bitwise too
+                devices = c.server_info().get("devices", 1)
+                if devices > 1:
+                    c.load_graph("sharded", path, backend="arr", mesh=True)
+                    for pattern in pool[:4]:
+                        _assert_wire_result_matches(
+                            c.query("sharded", pattern),
+                            refs["arr"].match(pattern), ("sharded", pattern))
+                    print(f"pgserve net smoke: sharded P={devices} ≡ "
+                          "single-device OK", flush=True)
+                else:
+                    print("pgserve net smoke: sharded check skipped (1 device)",
+                          flush=True)
+            # a bad request fails alone, with the real exception type
+            try:
+                c.query("arr", "(a {nosuchprop > 1})-[:follows]->(b)")
+            except KeyError as e:
+                assert "nosuchprop" in str(e)
+            else:
+                raise AssertionError("bad property should raise KeyError")
+            assert c.ping()  # session survived the failed request
+            stats = c.stats()
+            assert stats.get("completed", 0) > 0
+            c.drain()
+            c.shutdown()
+        assert proc.wait(timeout=60) == 0, "server exit code"
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    print("PGSERVE NET SMOKE OK")
 
 
 def _verify_bitwise(service, graphs: Dict[str, object],
@@ -260,6 +507,17 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--smoke", action="store_true",
                     help="fast correctness pass for CI; exits non-zero on failure")
+    ap.add_argument("--serve", action="store_true",
+                    help="run as a foreground pgd server process")
+    ap.add_argument("--net", action="store_true",
+                    help="cross-process mode: spawn a server, drive it over TCP")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--serve bind port (0 = OS-assigned, printed on stdout)")
+    ap.add_argument("--backends", default=None,
+                    help="--serve: comma list; one graph per backend, named after it")
+    ap.add_argument("--warm", action="store_true",
+                    help="--serve: pre-compile the serving path before LISTENING")
     ap.add_argument("--graphs", type=int, default=2, help="tenant graph count")
     ap.add_argument("--backend", default="arr", choices=("arr", "list", "listd"))
     ap.add_argument("--m", type=int, default=20_000, help="edges per tenant graph")
@@ -270,6 +528,38 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.serve:
+        serve(port=args.port, host=args.host, backend=args.backend,
+              backends=args.backends.split(",") if args.backends else None,
+              graphs=args.graphs, m=args.m, seed=args.seed, mesh=args.mesh,
+              warm=args.warm)
+        return
+    if args.net and args.smoke:
+        net_smoke(seed=args.seed)
+        return
+    if args.net:
+        proc, port = spawn_server(["--host", args.host,
+                                   "--graphs", str(args.graphs),
+                                   "--backend", args.backend,
+                                   "--m", str(args.m),
+                                   "--seed", str(args.seed), "--warm"])
+        try:
+            names = [f"tenant{i}" for i in range(args.graphs)]
+            wl = synthetic_workload(names, pattern_pool(), args.requests,
+                                    seed=args.seed)
+            met = run_workload_net(port, wl, args.concurrency, host=args.host)
+            print(f"net service (c={args.concurrency}): {met['qps']:.1f} qps, "
+                  f"p50={met['p50_ms']:.2f}ms p95={met['p95_ms']:.2f}ms")
+            from repro.service import PGClient
+
+            with PGClient(args.host, port=port) as c:
+                print(f"stats: {c.stats()}")
+                c.shutdown()
+            proc.wait(timeout=60)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+        return
     if args.smoke:
         smoke(seed=args.seed)
         return

@@ -1,12 +1,17 @@
-"""repro.service — in-process concurrent graph analytics service.
+"""repro.service — concurrent graph analytics service + network front-end.
 
-The serving layer over the property-graph stack (docs/ARCHITECTURE.md §8):
-a ``GraphRegistry`` of named, versioned ``PropGraph``s, a micro-batching
-scheduler that coalesces concurrent pattern queries into single
-``bitmap_query_batched`` launches, and a two-tier plan/result cache keyed
-to survive exactly as long as correctness allows.  README.md in this
-directory documents the request lifecycle, coalescing rules and cache
-keys; ``repro.launch.pgserve`` is the CLI driver.
+The serving layer over the property-graph stack (docs/ARCHITECTURE.md
+§8–§9): a ``GraphRegistry`` of named, versioned ``PropGraph``s, a
+micro-batching scheduler (adaptive window) that coalesces concurrent
+pattern queries into single ``bitmap_query_batched`` launches, a two-tier
+plan/result cache keyed to survive exactly as long as correctness allows,
+and the ``pgd`` wire layer — ``PGServer``/``PGClient`` over a
+length-prefixed JSON+binary codec (``wire.py``) — so multiple OS
+processes share one registry, one mesh and one scheduler, the paper §III
+deployment shape.  README.md in this directory documents the request
+lifecycle, coalescing rules, cache keys and the client/server quickstart;
+``repro.launch.pgserve`` is the CLI driver (``--net`` for the network
+path).
 
     from repro.service import Service
     with Service() as svc:
@@ -15,8 +20,10 @@ keys; ``repro.launch.pgserve`` is the CLI driver.
         futs = [svc.submit("social", p) for p in patterns]  # concurrent
 """
 from repro.service.cache import LRUCache
+from repro.service.client import PGClient
 from repro.service.registry import GraphRegistry
 from repro.service.scheduler import MicroBatcher, execute_coalesced
+from repro.service.server import PGServer
 from repro.service.service import Service, ServiceConfig
 
 __all__ = [
@@ -26,4 +33,6 @@ __all__ = [
     "LRUCache",
     "MicroBatcher",
     "execute_coalesced",
+    "PGServer",
+    "PGClient",
 ]

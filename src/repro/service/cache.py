@@ -61,6 +61,10 @@ class LRUCache:
             return
         with self._lock:
             self._data[key] = value
+            # move_to_end is load-bearing on overwrite: assignment to an
+            # EXISTING key keeps its old OrderedDict position, and a hot
+            # re-inserted entry left there would be evicted as if cold
+            # (tests/test_service.py: ..._put_on_existing_key_refreshes...)
             self._data.move_to_end(key)
             while len(self._data) > self.maxsize:
                 self._data.popitem(last=False)

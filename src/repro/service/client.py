@@ -1,0 +1,231 @@
+"""pgd client — the lightweight Python side of the wire (ARCHITECTURE §9).
+
+The paper's interactivity story (§III, §VI) depends on the client staying
+thin: it holds no graph data, just names — every byte of real work happens
+where the graphs and devices live.  ``PGClient`` speaks the ``wire`` frame
+format over one TCP connection and exposes the same verbs as the
+in-process ``Service`` plus the registry's mutators:
+
+    with PGClient(port=p) as c:
+        c.load_graph("social", "/data/social.pg")
+        res = c.query("social", "(a:person)-[:follows]->(b:person)")
+        res.vertex_mask, res.bindings()          # numpy, bitwise == match()
+
+    # pipelined: all requests go out before any response is read, so the
+    # server's micro-batcher sees them as ONE pressure wave and coalesces
+    handles = [c.submit("social", p) for p in patterns]
+    results = [h.result() for h in handles]      # same as query_batch(...)
+
+A ``PGClient`` is one session: requests carry monotone ids, responses may
+arrive out of order (cache fastpath hits overtake executing batches) and
+are matched back by id.  One OS thread per client — instances are NOT
+thread-safe; concurrent client threads each open their own connection
+(that is the multi-process tenancy model, and what ``bench_serve``'s net
+sweep measures).
+"""
+from __future__ import annotations
+
+import socket
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.service import wire
+from repro.service.wire import WireMatchResult
+
+__all__ = ["PGClient", "PGFuture"]
+
+
+class PGFuture:
+    """Handle for one pipelined request; ``result()`` blocks on its id."""
+
+    def __init__(self, client: "PGClient", rid: int):
+        self._client = client
+        self._rid = rid
+
+    def result(self, timeout: Optional[float] = None) -> WireMatchResult:
+        return self._client._wait(self._rid, timeout=timeout)
+
+
+class PGClient:
+    """Blocking + pipelined client for ``PGServer`` (module docstring)."""
+
+    def __init__(self, host: str = "127.0.0.1", *, port: int,
+                 connect_timeout: float = 30.0,
+                 timeout: Optional[float] = 120.0):
+        self._sock = socket.create_connection((host, port),
+                                              timeout=connect_timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._timeout = timeout
+        self._sock.settimeout(timeout)
+        self._next_id = 0
+        self._broken: Optional[str] = None  # why the stream is unusable
+        self._stash: Dict[int, tuple] = {}  # id → (header, arrays) arrived
+        # while we were waiting for a different id (out-of-order responses)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "PGClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- plumbing
+    def _send(self, op: str, arrays: Sequence[np.ndarray] = (),
+              **fields) -> int:
+        if self._broken is not None:
+            raise ConnectionError(f"client is unusable: {self._broken}")
+        self._next_id += 1
+        rid = self._next_id
+        header = {"op": op, "id": rid, **fields}
+        try:
+            wire.send_msg(self._sock, header, arrays)
+        except OSError as e:
+            # a partial frame may be on the wire — the stream is desynced,
+            # same fail-fast treatment as the read path
+            self._broken = f"{type(e).__name__}: {e}"
+            raise
+        return rid
+
+    def _wait(self, rid: int, timeout: Optional[float] = None):
+        """Read frames until ``rid``'s response arrives; other ids are
+        stashed for their own waiters (pipelining).
+
+        ``timeout`` overrides the connection default for THIS wait only
+        (``None`` keeps the default).  A timeout mid-frame leaves the
+        stream positioned mid-message, so the client is marked broken —
+        every later call fails fast instead of misparsing bytes."""
+        if self._broken is not None:
+            raise ConnectionError(f"client is unusable: {self._broken}")
+        if timeout is not None:
+            self._sock.settimeout(timeout)
+        try:
+            while rid not in self._stash:
+                try:
+                    header, arrays = wire.recv_msg(self._sock)
+                except (socket.timeout, wire.ProtocolError) as e:
+                    self._broken = f"{type(e).__name__}: {e}"
+                    raise
+                self._stash[header["id"]] = (header, arrays)
+        finally:
+            if timeout is not None:
+                self._sock.settimeout(self._timeout)
+        header, arrays = self._stash.pop(rid)
+        if not header.get("ok"):
+            raise wire.wire_to_exc(header["error"])
+        if "result" in header:
+            return wire.wire_to_result(header["result"], arrays)
+        return header
+
+    def _call(self, op: str, arrays: Sequence[np.ndarray] = (), **fields):
+        return self._wait(self._send(op, arrays, **fields))
+
+    # -------------------------------------------------------------- queries
+    def submit(self, graph: str, pattern: str, *,
+               impl: Optional[str] = None) -> PGFuture:
+        """Pipelined query: sends the request, returns without reading.
+
+        Every handle should eventually be ``result()``-ed: a response whose
+        handle is abandoned stays stashed on the client for the life of
+        the connection (the stream has no way to un-receive it)."""
+        return PGFuture(self, self._send("query", graph=graph,
+                                         pattern=pattern, impl=impl))
+
+    def query(self, graph: str, pattern: str, *,
+              impl: Optional[str] = None) -> WireMatchResult:
+        return self.submit(graph, pattern, impl=impl).result()
+
+    def query_batch(self, graph: str, patterns: Sequence[str], *,
+                    impl: Optional[str] = None) -> List[WireMatchResult]:
+        """All requests on the wire before any response is read — the
+        server's batching window sees the whole group.  Every handle is
+        awaited even when one fails (their responses would otherwise pile
+        up in the stash for the life of the connection); the first failure
+        then raises, matching ``Service.query_batch``."""
+        handles = [self.submit(graph, p, impl=impl) for p in patterns]
+        results: List[WireMatchResult] = []
+        first_err: Optional[BaseException] = None
+        for h in handles:
+            try:
+                results.append(h.result())
+            except ConnectionError:
+                raise  # stream is dead/desynced: nothing more will arrive
+            except BaseException as e:  # noqa: BLE001
+                if first_err is None:
+                    first_err = e
+                results.append(None)
+        if first_err is not None:
+            raise first_err
+        return results
+
+    def explain(self, graph: str, pattern: str, *,
+                impl: Optional[str] = None) -> str:
+        return self._call("explain", graph=graph, pattern=pattern,
+                          impl=impl)["explain"]
+
+    # ------------------------------------------------------------- registry
+    def load_graph(self, name: str, path: str, *,
+                   backend: Optional[str] = None, mesh: bool = False) -> Dict:
+        """Server-side ``load_propgraph`` + register; returns {n, m, backend}."""
+        return self._call("load_graph", name=name, path=path,
+                          backend=backend, mesh=mesh)
+
+    def graphs(self) -> Dict[str, int]:
+        """Registered graph names → current versions."""
+        return self._call("graphs")["graphs"]
+
+    # ------------------------------------------------------------ mutations
+    def add_edges_from(self, graph: str, src, dst) -> int:
+        return self._call("mutate", [np.asarray(src), np.asarray(dst)],
+                          graph=graph, action="add_edges_from")["version"]
+
+    def add_node_labels(self, graph: str, nodes, labels) -> int:
+        return self._call("mutate", [np.asarray(nodes)], graph=graph,
+                          action="add_node_labels",
+                          strings=list(map(str, labels)))["version"]
+
+    def add_edge_relationships(self, graph: str, src, dst,
+                               relationships) -> int:
+        return self._call("mutate", [np.asarray(src), np.asarray(dst)],
+                          graph=graph, action="add_edge_relationships",
+                          strings=list(map(str, relationships)))["version"]
+
+    def add_node_properties(self, graph: str, name: str, nodes, values,
+                            fill=0) -> int:
+        return self._call("mutate", [np.asarray(nodes), np.asarray(values)],
+                          graph=graph, action="add_node_properties",
+                          name=name, fill=fill)["version"]
+
+    def add_edge_properties(self, graph: str, name: str, src, dst, values,
+                            fill=0) -> int:
+        return self._call(
+            "mutate", [np.asarray(src), np.asarray(dst), np.asarray(values)],
+            graph=graph, action="add_edge_properties", name=name, fill=fill,
+        )["version"]
+
+    # ---------------------------------------------------------------- admin
+    def ping(self) -> bool:
+        return bool(self.server_info()["pong"])
+
+    def server_info(self) -> Dict:
+        """The server's ping payload: ``{"pong": True, "devices": N}`` —
+        ``devices`` is the SERVER process's accelerator count (what a mesh
+        load will shard over), not this client's."""
+        info = self._call("ping")
+        return {k: v for k, v in info.items() if k not in ("id", "ok")}
+
+    def stats(self) -> Dict:
+        return self._call("stats")["stats"]
+
+    def drain(self) -> None:
+        self._call("drain")
+
+    def shutdown(self) -> None:
+        """Graceful remote stop: drain, then the server releases itself."""
+        self._call("shutdown")

@@ -104,16 +104,25 @@ class GraphRegistry:
 
     # ---------------------------------------------------------- subscription
     def subscribe(self, listener: Callable[[str, PropGraph], None]) -> None:
-        self._listeners.append(listener)
+        with self._lock:
+            self._listeners.append(listener)
 
     def unsubscribe(self, listener: Callable[[str, PropGraph], None]) -> None:
         """Remove ``listener`` if present (no-op otherwise) — a closed
         service detaches so a shared registry stops feeding dead caches."""
-        try:
-            self._listeners.remove(listener)
-        except ValueError:
-            pass
+        with self._lock:
+            try:
+                self._listeners.remove(listener)
+            except ValueError:
+                pass
 
     def _notify(self, name: str, pg: PropGraph) -> None:
-        for listener in list(self._listeners):
+        # snapshot under the lock: services subscribe/unsubscribe (open/
+        # close) concurrently with mutation dispatch, and an unsynchronized
+        # list mutation mid-iteration would skip or crash a listener.
+        # Dispatch OUTSIDE the lock — listeners (cache purges) must not be
+        # able to deadlock against registry readers.
+        with self._lock:
+            listeners = list(self._listeners)
+        for listener in listeners:
             listener(name, pg)

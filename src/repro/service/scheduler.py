@@ -29,8 +29,12 @@ Two pieces, both policy-free about caches (the ``Service`` owns those):
 * ``MicroBatcher`` — the concurrency piece: a worker thread drains a queue
   of requests; the first request opens a batching window (``window_ms``)
   and everything arriving inside it (up to ``max_batch``) executes as one
-  batch.  Single worker by design: device work serializes anyway, and one
-  consumer makes version reads and cache updates race-free.
+  batch.  The window is ADAPTIVE by default: when the queue is empty at
+  dequeue time (an idle service, c=1) the request executes immediately —
+  no latency tax for batching that cannot happen — and the window opens
+  only under queue pressure, where waiting actually buys coalescing.
+  Single worker by design: device work serializes anyway, and one consumer
+  makes version reads and cache updates race-free.
 """
 from __future__ import annotations
 
@@ -115,12 +119,14 @@ class MicroBatcher:
     _SENTINEL = object()
 
     def __init__(self, execute_batch: Callable[[List], None], *,
-                 max_batch: int = 32, window_ms: float = 2.0):
+                 max_batch: int = 32, window_ms: float = 2.0,
+                 adaptive: bool = True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
         self._execute_batch = execute_batch
         self.max_batch = max_batch
         self.window_s = window_ms / 1e3
+        self.adaptive = adaptive
         self._queue: "queue.Queue" = queue.Queue()
         self._closed = False
         self._lifecycle = threading.Lock()  # orders submit vs close: nothing
@@ -156,14 +162,22 @@ class MicroBatcher:
             if first is self._SENTINEL:
                 return
             batch = [first]
-            deadline = time.monotonic() + self.window_s
             stop = False
-            while len(batch) < self.max_batch:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    break
+            # adaptive window: an empty queue means nothing can coalesce —
+            # skip the window entirely (c=1 pays zero batching latency);
+            # a non-empty queue means pressure, so the window opens and
+            # late arrivals join the batch
+            open_window = not (self.adaptive and self._queue.empty())
+            deadline = time.monotonic() + (self.window_s if open_window else 0.0)
+            while open_window and len(batch) < self.max_batch:
+                # clamp: under load the deadline may already be in the past,
+                # and a negative timeout must never reach the queue wait
+                remaining = max(0.0, deadline - time.monotonic())
                 try:
-                    req = self._queue.get(timeout=remaining)
+                    # remaining == 0 (window_ms=0 or expired) still drains
+                    # whatever is already queued, without blocking
+                    req = (self._queue.get_nowait() if remaining == 0.0
+                           else self._queue.get(timeout=remaining))
                 except queue.Empty:
                     break
                 if req is self._SENTINEL:

@@ -39,6 +39,8 @@ class ServiceConfig:
 
     max_batch: int = 32  # requests per micro-batch
     window_ms: float = 2.0  # batching window opened by the first request
+    adaptive_window: bool = True  # skip the window when the queue is empty
+    # (c=1 pays no batching latency); open it only under queue pressure
     plan_cache_size: int = 256
     result_cache_size: int = 256
     coalesce: bool = True  # fuse compatible mask steps into batched launches
@@ -76,6 +78,7 @@ class Service:
             self._execute_batch,
             max_batch=self.config.max_batch,
             window_ms=self.config.window_ms,
+            adaptive=self.config.adaptive_window,
         )
 
     # ------------------------------------------------------------- lifecycle

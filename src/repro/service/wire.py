@@ -1,0 +1,246 @@
+"""Wire codec for the pgd network front-end — length-prefixed JSON + binary.
+
+Arachne rides Arkouda's request/reply server: a thin Python client sends
+small messages naming server-held objects, the server answers with small
+metadata plus (when needed) bulk array payloads (paper §III,
+docs/ARCHITECTURE.md §9).  This module is that message format for the
+analytics service — one codec shared by ``server.py`` and ``client.py`` so
+the two can never disagree about framing.
+
+Frame layout (all integers big-endian)::
+
+    MAGIC (4 bytes, b"PGW1")
+    payload_len   uint32        # bytes after this field
+    header_len    uint32        # JSON part of the payload
+    header        UTF-8 JSON    # op/id/fields + "arrays": [spec, ...]
+    blob          bytes         # the arrays' buffers, concatenated
+
+The header is small and human-debuggable JSON; bulk data (masks, id
+arrays, property columns) travels as raw buffers described by per-array
+specs ``{"dtype", "shape"}`` appended by the codec.  Bool arrays are
+``np.packbits``-packed on the wire (8× smaller) and restored exactly —
+mask round-trips are bitwise, which the cross-process equivalence gate
+relies on (``pgserve --net --smoke``).
+
+``recv_msg`` raises ``ConnectionError`` on a clean EOF at a frame
+boundary (peer closed) and ``ProtocolError`` on everything else —
+truncated frames, bad magic, oversized payloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "MAGIC",
+    "MAX_PAYLOAD",
+    "ProtocolError",
+    "RemoteError",
+    "encode_msg",
+    "send_msg",
+    "recv_msg",
+    "result_to_wire",
+    "wire_to_result",
+    "WireMatchResult",
+    "exc_to_wire",
+    "wire_to_exc",
+]
+
+MAGIC = b"PGW1"
+MAX_PAYLOAD = 1 << 30  # 1 GiB — fail fast on garbage length prefixes
+_LEN = struct.Struct("!I")
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame: bad magic, truncated payload, oversized length."""
+
+
+class RemoteError(RuntimeError):
+    """A server-side exception type we cannot reconstruct locally."""
+
+    def __init__(self, type_name: str, message: str):
+        super().__init__(f"{type_name}: {message}")
+        self.type_name = type_name
+        self.message = message
+
+
+# ------------------------------------------------------------------ arrays
+def _pack_array(a: np.ndarray) -> Tuple[dict, bytes]:
+    a = np.ascontiguousarray(a)
+    spec = {"dtype": str(a.dtype), "shape": list(a.shape)}
+    if a.dtype == np.bool_:
+        return spec, np.packbits(a.reshape(-1)).tobytes()
+    return spec, a.tobytes()
+
+
+def _parse_spec(spec) -> Tuple[np.dtype, Tuple[int, ...], int]:
+    """Validate an untrusted array spec → (dtype, shape, element count);
+    anything off is ``ProtocolError`` (a corrupt frame must never surface
+    as a raw numpy error — the server session and client loops only handle
+    protocol exceptions).  The count is computed with Python ints, so an
+    absurd shape cannot overflow into a plausible-looking size."""
+    try:
+        dtype = np.dtype(spec["dtype"])
+        shape = tuple(spec["shape"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"bad array spec {spec!r}: {e}") from None
+    if dtype.hasobject or not all(
+            isinstance(d, int) and 0 <= d <= MAX_PAYLOAD for d in shape):
+        raise ProtocolError(f"bad array spec {spec!r}")
+    count = 1
+    for d in shape:
+        count *= d
+    if count * max(dtype.itemsize, 1) > MAX_PAYLOAD:
+        raise ProtocolError(f"bad array spec {spec!r}: too large")
+    return dtype, shape, count
+
+
+def _blob_nbytes(dtype: np.dtype, count: int) -> int:
+    if dtype == np.bool_:
+        return (count + 7) // 8
+    return count * dtype.itemsize
+
+
+def _unpack_array(dtype: np.dtype, shape: Tuple[int, ...], count: int,
+                  buf: memoryview) -> np.ndarray:
+    if dtype == np.bool_:
+        bits = np.unpackbits(np.frombuffer(buf, np.uint8), count=count)
+        return bits.astype(np.bool_).reshape(shape)
+    return np.frombuffer(buf, dtype=dtype, count=count).reshape(shape)
+
+
+# ------------------------------------------------------------------ framing
+def encode_msg(header: Dict, arrays: Sequence[np.ndarray] = ()) -> bytes:
+    """One complete frame.  ``header`` must be JSON-serializable; the codec
+    owns the ``"arrays"`` key."""
+    specs, blobs = [], []
+    for a in arrays:
+        spec, blob = _pack_array(np.asarray(a))
+        specs.append(spec)
+        blobs.append(blob)
+    hdr = dict(header)
+    hdr["arrays"] = specs
+    hbytes = json.dumps(hdr, sort_keys=True).encode("utf-8")
+    payload_len = _LEN.size + len(hbytes) + sum(len(b) for b in blobs)
+    if payload_len > MAX_PAYLOAD:
+        raise ProtocolError(f"frame too large: {payload_len} bytes")
+    parts = [MAGIC, _LEN.pack(payload_len), _LEN.pack(len(hbytes)), hbytes]
+    parts.extend(blobs)
+    return b"".join(parts)
+
+
+def send_msg(sock: socket.socket, header: Dict,
+             arrays: Sequence[np.ndarray] = ()) -> None:
+    sock.sendall(encode_msg(header, arrays))
+
+
+def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes:
+    chunks, got = [], 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if at_boundary and got == 0:
+                raise ConnectionError("peer closed the connection")
+            raise ProtocolError(f"truncated frame: wanted {n} bytes, got {got}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_msg(sock: socket.socket) -> Tuple[Dict, List[np.ndarray]]:
+    """Read one frame → ``(header, arrays)``; blocks until complete."""
+    head = _recv_exact(sock, len(MAGIC) + _LEN.size, at_boundary=True)
+    if head[: len(MAGIC)] != MAGIC:
+        raise ProtocolError(f"bad magic {head[:len(MAGIC)]!r}")
+    (payload_len,) = _LEN.unpack(head[len(MAGIC):])
+    if payload_len > MAX_PAYLOAD or payload_len < _LEN.size:
+        raise ProtocolError(f"bad payload length {payload_len}")
+    payload = memoryview(_recv_exact(sock, payload_len, at_boundary=False))
+    (header_len,) = _LEN.unpack(payload[: _LEN.size])
+    if _LEN.size + header_len > payload_len:
+        raise ProtocolError(f"bad header length {header_len}")
+    try:
+        header = json.loads(bytes(payload[_LEN.size:_LEN.size + header_len]))
+    except ValueError as e:
+        raise ProtocolError(f"bad header JSON: {e}") from None
+    specs = header.pop("arrays", []) if isinstance(header, dict) else None
+    if not isinstance(specs, list):
+        raise ProtocolError("header is not an object with an array list")
+    arrays: List[np.ndarray] = []
+    off = _LEN.size + header_len
+    for spec in specs:
+        dtype, shape, count = _parse_spec(spec)
+        n = _blob_nbytes(dtype, count)
+        if off + n > payload_len:
+            raise ProtocolError("array blobs exceed payload")
+        arrays.append(_unpack_array(dtype, shape, count, payload[off:off + n]))
+        off += n
+    return header, arrays
+
+
+# ------------------------------------------------------------ MatchResult
+@dataclasses.dataclass(frozen=True)
+class WireMatchResult:
+    """Client-side view of a ``query.executor.MatchResult``.
+
+    Carries the participation masks and name-keyed bindings (computed
+    server-side — the ``Plan`` object itself never crosses the wire); the
+    mask payloads are bitwise-identical to the in-process result's.
+    """
+
+    vertex_mask: np.ndarray  # (n,) bool
+    edge_mask: np.ndarray  # (m,) bool
+    _bindings: Dict[str, np.ndarray]
+
+    def bindings(self) -> Dict[str, np.ndarray]:
+        return dict(self._bindings)
+
+    def n_vertices(self) -> int:
+        return int(self.vertex_mask.sum())
+
+    def n_edges(self) -> int:
+        return int(self.edge_mask.sum())
+
+
+def result_to_wire(res) -> Tuple[Dict, List[np.ndarray]]:
+    """``MatchResult`` → (meta, arrays): masks first, bindings after in
+    ``meta["vars"]`` order."""
+    bindings = res.bindings()
+    names = sorted(bindings)
+    arrays = [np.asarray(res.vertex_mask), np.asarray(res.edge_mask)]
+    arrays.extend(np.asarray(bindings[k]) for k in names)
+    return {"vars": names}, arrays
+
+
+def wire_to_result(meta: Dict, arrays: Sequence[np.ndarray]) -> WireMatchResult:
+    names = meta["vars"]
+    if len(arrays) != 2 + len(names):
+        raise ProtocolError(
+            f"result carries {len(arrays)} arrays for {len(names)} vars")
+    return WireMatchResult(
+        vertex_mask=arrays[0], edge_mask=arrays[1],
+        _bindings=dict(zip(names, arrays[2:])),
+    )
+
+
+# -------------------------------------------------------------- exceptions
+def exc_to_wire(e: BaseException) -> Dict[str, str]:
+    return {"type": type(e).__name__, "message": str(e)}
+
+
+def wire_to_exc(d: Dict[str, str]) -> BaseException:
+    """Rebuild a builtin exception when possible (so ``pytest.raises
+    (KeyError)`` works across the wire), ``RemoteError`` otherwise."""
+    cls = getattr(__builtins__, d["type"], None) if not isinstance(
+        __builtins__, dict) else __builtins__.get(d["type"])
+    if isinstance(cls, type) and issubclass(cls, Exception):
+        try:
+            return cls(d["message"])
+        except Exception:  # noqa: BLE001 — odd constructor signature
+            pass
+    return RemoteError(d["type"], d["message"])

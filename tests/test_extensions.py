@@ -49,6 +49,54 @@ def test_propgraph_load_different_backend(pg, tmp_path):
     assert bool(jnp.all(back.query_labels(["b"]) == pg.query_labels(["b"])))
 
 
+def test_propgraph_save_overwrites_existing_directory(pg, tmp_path):
+    """Regression: saving onto an existing destination must replace it
+    safely (the old 'tmp + rename' could not rename onto a non-empty
+    directory) and leave no tmp/old litter behind."""
+    p = str(tmp_path / "graph")
+    save_propgraph(p, pg)
+    stale = load_propgraph(p)
+    # mutate, overwrite IN PLACE, reload: new content, not the stale save
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes, ["fresh"] * len(nodes))
+    save_propgraph(p, pg)
+    back = load_propgraph(p)
+    assert "fresh" in back.label_set()
+    assert "fresh" not in stale.label_set()
+    assert bool(jnp.all(back.query_labels(["fresh"]) == pg.query_labels(["fresh"])))
+    # the swap cleaned up after itself: only the graph dir remains
+    assert [e.name for e in tmp_path.iterdir()] == ["graph"]
+    # and a THIRD overwrite works too (old dir non-empty both times)
+    save_propgraph(p, pg)
+    assert load_propgraph(p).n_edges == pg.n_edges
+
+
+def test_propgraph_cross_backend_reopen_match_bitwise(tmp_path):
+    """save on arr → load as list/listd: the full pattern path (labels,
+    relationships, predicates) must return bitwise-identical masks on the
+    reopened stores."""
+    from repro.launch.pgserve import build_tenant_graph, pattern_pool
+
+    pg = build_tenant_graph("arr", 800, seed=21)
+    path = save_propgraph(str(tmp_path / "pg"), pg)
+    patterns = pattern_pool()[:6]
+    refs = {p: pg.match(p) for p in patterns}
+    for backend in ("list", "listd"):
+        back = load_propgraph(path, backend=backend)
+        assert back.backend == backend
+        for p in patterns:
+            got, ref = back.match(p), refs[p]
+            np.testing.assert_array_equal(np.asarray(got.vertex_mask),
+                                          np.asarray(ref.vertex_mask), err_msg=p)
+            np.testing.assert_array_equal(np.asarray(got.edge_mask),
+                                          np.asarray(ref.edge_mask), err_msg=p)
+            gb, rb = got.bindings(), ref.bindings()
+            assert sorted(gb) == sorted(rb)
+            for k in rb:
+                np.testing.assert_array_equal(np.asarray(gb[k]),
+                                              np.asarray(rb[k]), err_msg=(p, k))
+
+
 # ---------------------------------------------------------------- GAT/SAGE
 def test_gat_smoke_and_grad():
     cfg = gat.GATConfig(d_in=16, d_hidden=4, n_heads=2, n_classes=3)

@@ -1,0 +1,389 @@
+"""pgd network front-end: wire codec, server/client round-trips, adaptive
+batching (src/repro/service/{wire,server,client}.py, ARCHITECTURE §9).
+
+The contracts under test:
+
+* the codec round-trips headers and arrays exactly (bool masks travel
+  packbits-packed and come back bitwise-identical), and rejects garbage
+  frames with ``ProtocolError`` instead of misreading them;
+* a query through ``PGClient`` → TCP → ``PGServer`` → ``Service`` returns
+  masks bitwise-equal to in-process ``PropGraph.match`` (the paper §III
+  client–server split must be invisible to correctness), including
+  pipelined bursts, cross-backend ``load_graph`` reopens, and mutations
+  applied over the wire;
+* failures stay isolated: a bad request errors its own response (with the
+  real exception type) and the session keeps serving;
+* the adaptive micro-batch window (ROADMAP item): no batching latency when
+  the queue is empty, window-batching under pressure, and ``window_ms=0``
+  stays live (the negative-timeout clamp regression).
+"""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.launch.pgserve import build_tenant_graph, pattern_pool
+from repro.service import MicroBatcher, PGClient, PGServer, Service, ServiceConfig
+from repro.service import wire
+
+PATTERNS = (
+    "(a:l1|l2)-[:follows]->(b:l3)",
+    "(a:l0 {age > 30})-[:likes]->(b)",
+    "(a)<-[:likes]-(b:l4|l5)",
+    "(a:l6)-[:follows]->(b)-[:likes]->(c:l7)",
+)
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+def _assert_wire_matches(got, ref):
+    assert _eq(got.vertex_mask, ref.vertex_mask)
+    assert _eq(got.edge_mask, ref.edge_mask)
+    gb, rb = got.bindings(), ref.bindings()
+    assert sorted(gb) == sorted(rb)
+    for k in rb:
+        assert _eq(gb[k], rb[k]), k
+
+
+# ------------------------------------------------------------------- codec
+def test_wire_roundtrip_header_and_arrays():
+    arrays = [
+        np.arange(7, dtype=np.int32),
+        np.random.default_rng(0).standard_normal((3, 5)).astype(np.float32),
+        np.array([], dtype=np.int64),
+        np.random.default_rng(1).random(83) > 0.5,  # bool: packbits path
+        np.zeros((2, 9), dtype=np.bool_),
+    ]
+    header = {"op": "query", "id": 3, "pattern": "(a)-[]->(b)", "impl": None}
+    a, b = socket.socketpair()
+    try:
+        wire.send_msg(a, header, arrays)
+        got_header, got_arrays = wire.recv_msg(b)
+        assert got_header == header
+        assert len(got_arrays) == len(arrays)
+        for orig, back in zip(arrays, got_arrays):
+            assert back.dtype == orig.dtype and back.shape == orig.shape
+            assert _eq(back, orig)
+    finally:
+        a.close(), b.close()
+
+
+def test_wire_rejects_garbage_and_truncation():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"HTTP/1.1 200 OK\r\n\r\n" + b"x" * 20)
+        with pytest.raises(wire.ProtocolError, match="magic"):
+            wire.recv_msg(b)
+    finally:
+        a.close(), b.close()
+    a, b = socket.socketpair()
+    try:
+        frame = wire.encode_msg({"op": "ping", "id": 1}, [np.arange(100)])
+        a.sendall(frame[: len(frame) // 2])
+        a.close()  # truncated mid-frame
+        with pytest.raises(wire.ProtocolError, match="truncated"):
+            wire.recv_msg(b)
+    finally:
+        b.close()
+
+
+def test_wire_rejects_hostile_array_specs():
+    """A frame whose header carries bad array specs must surface as
+    ProtocolError (the session/client loops only handle protocol errors),
+    never a raw numpy exception."""
+    import json
+    import struct
+
+    def frame_with_specs(specs, blob=b""):
+        hdr = json.dumps({"op": "x", "id": 1, "arrays": specs}).encode()
+        payload = struct.pack("!I", len(hdr)) + hdr + blob
+        return wire.MAGIC + struct.pack("!I", len(payload)) + payload
+
+    for specs in (
+        [{"dtype": "bogus", "shape": [3]}],
+        [{"dtype": "int32", "shape": [-4]}],
+        [{"dtype": "object", "shape": [2]}],
+        [{"shape": [2]}],
+        [{"dtype": "int32", "shape": [2**30, 2**30, 2**30]}],  # int64 wrap
+        "not-a-list",
+    ):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(frame_with_specs(specs))
+            with pytest.raises(wire.ProtocolError):
+                wire.recv_msg(b)
+        finally:
+            a.close(), b.close()
+
+
+def test_wire_clean_eof_is_connection_error():
+    a, b = socket.socketpair()
+    a.close()
+    try:
+        with pytest.raises(ConnectionError):
+            wire.recv_msg(b)
+    finally:
+        b.close()
+
+
+def test_wire_exception_roundtrip():
+    e = wire.wire_to_exc(wire.exc_to_wire(KeyError("nosuchprop")))
+    assert isinstance(e, KeyError) and "nosuchprop" in str(e)
+    e = wire.wire_to_exc({"type": "SomeServerOnlyError", "message": "boom"})
+    assert isinstance(e, wire.RemoteError) and "boom" in str(e)
+
+
+def test_wire_match_result_roundtrip():
+    pg = build_tenant_graph("arr", 400, seed=7)
+    ref = pg.match(PATTERNS[0])
+    meta, arrays = wire.result_to_wire(ref)
+    back = wire.wire_to_result(meta, [np.asarray(x) for x in arrays])
+    _assert_wire_matches(back, ref)
+
+
+# ----------------------------------------------------------- server/client
+@pytest.fixture(scope="module")
+def served():
+    """One server (own thread pool, real TCP socket) + the graph it serves;
+    module-scoped — sessions are cheap, graphs are not."""
+    pg = build_tenant_graph("arr", 800, seed=3)
+    svc = Service()
+    svc.add_graph("g", pg)
+    server = PGServer(svc, port=0).start()
+    yield server, pg
+    server.close()
+    svc.close()
+
+
+def test_net_query_bitwise_equals_match(served):
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        assert c.ping()
+        for p in PATTERNS:
+            _assert_wire_matches(c.query("g", p), pg.match(p))
+
+
+def test_net_pipelined_batch_with_duplicates(served):
+    server, pg = served
+    burst = list(PATTERNS) + [PATTERNS[0], PATTERNS[2]]
+    with PGClient(port=server.port) as c:
+        got = c.query_batch("g", burst)
+    for p, res in zip(burst, got):
+        _assert_wire_matches(res, pg.match(p))
+
+
+def test_net_out_of_order_resolution(served):
+    """Submit A then B, read B first: responses are matched by id, not
+    arrival order — the pipelining contract."""
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        ha = c.submit("g", PATTERNS[0])
+        hb = c.submit("g", PATTERNS[1])
+        _assert_wire_matches(hb.result(), pg.match(PATTERNS[1]))
+        _assert_wire_matches(ha.result(), pg.match(PATTERNS[0]))
+
+
+def test_net_errors_fail_alone_and_session_survives(served):
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        with pytest.raises(KeyError, match="nosuchprop"):
+            c.query("g", "(a {nosuchprop > 1})-[:follows]->(b)")
+        with pytest.raises(KeyError, match="unknown graph"):
+            c.query("nope", PATTERNS[0])
+        with pytest.raises(Exception):  # noqa: B017 — any server-side error
+            c._call("no_such_op")
+        # the connection is still good after three failed requests
+        _assert_wire_matches(c.query("g", PATTERNS[0]), pg.match(PATTERNS[0]))
+        assert "plan" in c.explain("g", PATTERNS[0]).lower()
+        stats = c.stats()
+        assert stats["completed"] > 0
+        assert c.graphs()["g"] == pg.version
+
+
+def test_net_mutation_invalidates_and_stays_bitwise():
+    pg = build_tenant_graph("arr", 500, seed=11)
+    local = build_tenant_graph("arr", 500, seed=11)  # in-process reference
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        with PGServer(svc, port=0) as server, PGClient(port=server.port) as c:
+            before = c.query("g", PATTERNS[0])
+            nodes = np.asarray(local.graph.node_map)
+            v = c.add_node_labels("g", nodes[:9], ["l1"] * 9)
+            local.add_node_labels(nodes[:9], ["l1"] * 9)
+            assert v == local.version
+            after = c.query("g", PATTERNS[0])
+            _assert_wire_matches(after, local.match(PATTERNS[0]))
+            assert before is not None  # first query really executed
+            stats = c.stats()
+            assert stats.get("invalidated_results", 0) >= 1  # purge fired
+            # property mutation over the wire too
+            c.add_node_properties("g", "age", nodes[:5],
+                                  np.full(5, 99, np.int32))
+            local.add_node_properties("age", nodes[:5], np.full(5, 99, np.int32))
+            _assert_wire_matches(c.query("g", PATTERNS[1]),
+                                 local.match(PATTERNS[1]))
+
+
+def test_net_load_graph_cross_backend(served, tmp_path):
+    from repro.core.io import save_propgraph
+
+    server, pg = served
+    path = save_propgraph(str(tmp_path / "pg"), pg)
+    with PGClient(port=server.port) as c:
+        info = c.load_graph("disk", path, backend="listd")
+        assert info["backend"] == "listd"
+        assert info["n"] == pg.n_vertices and info["m"] == pg.n_edges
+        _assert_wire_matches(c.query("disk", PATTERNS[0]), pg.match(PATTERNS[0]))
+
+
+def test_net_concurrent_client_connections(served):
+    """Several OS-level connections at once: per-session framing must not
+    interleave (each session has its own write lock)."""
+    server, pg = served
+    refs = {p: pg.match(p) for p in PATTERNS}
+    errors = []
+
+    def one_client():
+        try:
+            with PGClient(port=server.port) as c:
+                for p in PATTERNS:
+                    _assert_wire_matches(c.query("g", p), refs[p])
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=one_client) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+
+def test_net_graceful_drain_completes_inflight():
+    pg = build_tenant_graph("arr", 500, seed=13)
+    svc = Service()
+    svc.add_graph("g", pg)
+    server = PGServer(svc, port=0).start()
+    try:
+        with PGClient(port=server.port) as c:
+            handles = [c.submit("g", p) for p in PATTERNS]
+            c.drain()  # stops the listener, waits for the futures above
+            for h, p in zip(handles, PATTERNS):
+                _assert_wire_matches(h.result(), pg.match(p))
+            # drained server accepts no NEW connections
+            with pytest.raises(OSError):
+                PGClient(port=server.port, connect_timeout=2).ping()
+    finally:
+        server.close()
+        svc.close()
+
+
+# ------------------------------------------------------- adaptive batching
+def _collecting_batcher(**kw):
+    batches, done = [], threading.Event()
+
+    def execute(batch):
+        batches.append(list(batch))
+        done.set()
+
+    return MicroBatcher(execute, **kw), batches, done
+
+
+def test_adaptive_window_skips_wait_when_idle():
+    """With a HUGE window, an idle-queue request must still execute
+    immediately — the adaptive bypass is what removes the c=1 latency tax."""
+    b, batches, done = _collecting_batcher(window_ms=5_000.0, adaptive=True)
+    try:
+        t0 = time.monotonic()
+        b.submit("r1")
+        assert done.wait(timeout=2.0), "request stuck behind the window"
+        assert time.monotonic() - t0 < 2.0
+        assert batches[0] == ["r1"]
+    finally:
+        b.close(timeout=1.0)
+
+
+def test_window_opens_under_queue_pressure():
+    """When requests are already queued, the window forms a real batch."""
+    gate = threading.Event()
+    batches = []
+
+    def execute(batch):
+        batches.append(list(batch))
+        gate.wait(timeout=5.0)  # hold the worker so pressure builds
+
+    b = MicroBatcher(execute, window_ms=200.0, adaptive=True, max_batch=8)
+    try:
+        b.submit("first")  # worker blocks inside execute()
+        time.sleep(0.05)
+        for i in range(5):
+            b.submit(f"r{i}")  # all queued while the worker is held
+        gate.set()
+        b.close(timeout=5.0)  # drains: the 5 must have batched together
+        assert batches[0] == ["first"]
+        assert ["r%d" % i for i in range(5)] in batches  # one pressure batch
+    finally:
+        gate.set()
+        b.close(timeout=1.0)
+
+
+def test_window_ms_zero_stays_live():
+    """The negative-timeout clamp regression: a zero (or already-expired)
+    window must drain what is queued and never pass a negative timeout to
+    the queue wait."""
+    b, batches, _ = _collecting_batcher(window_ms=0.0, adaptive=False)
+    try:
+        for i in range(16):
+            b.submit(i)
+        b.close(timeout=5.0)
+        assert sorted(x for batch in batches for x in batch) == list(range(16))
+    finally:
+        b.close(timeout=1.0)
+
+
+def test_service_window_ms_zero_end_to_end():
+    pg = build_tenant_graph("arr", 400, seed=5)
+    with Service(config=ServiceConfig(window_ms=0.0)) as svc:
+        svc.add_graph("g", pg)
+        futs = [svc.submit("g", p) for p in PATTERNS]
+        for f, p in zip(futs, PATTERNS):
+            got = f.result(timeout=120)
+            assert _eq(got.vertex_mask, pg.match(p).vertex_mask)
+
+
+def test_fixed_window_config_still_available():
+    """adaptive_window=False restores the PR 3 behavior (benchmark's
+    fixed-window comparison row depends on it)."""
+    pg = build_tenant_graph("arr", 400, seed=5)
+    cfg = ServiceConfig(adaptive_window=False, window_ms=1.0)
+    with Service(config=cfg) as svc:
+        svc.add_graph("g", pg)
+        got = svc.query("g", PATTERNS[0])
+        assert _eq(got.vertex_mask, pg.match(PATTERNS[0]).vertex_mask)
+
+
+# ------------------------------------------------------------ cross-process
+def test_cross_process_net_roundtrip():
+    """A REAL second OS process: spawn the serve-mode CLI, query it over
+    TCP, compare bitwise against this process's match().  (The CI smoke
+    runs the full three-backend version; this keeps a single-backend gate
+    inside the suite.)"""
+    from repro.launch.pgserve import spawn_server
+
+    pg = build_tenant_graph("arr", 400, seed=0)
+    proc, port = spawn_server(["--backends", "arr", "--m", "400", "--seed", "0"])
+    try:
+        with PGClient(port=port) as c:
+            for p in PATTERNS[:2]:
+                _assert_wire_matches(c.query("arr", p), pg.match(p))
+            c.shutdown()
+        assert proc.wait(timeout=60) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()

@@ -239,6 +239,65 @@ def test_lru_cache_eviction_and_disable():
     assert off.get("a") is None and len(off) == 0
 
 
+def test_lru_cache_put_on_existing_key_refreshes_recency():
+    """Regression: re-inserting a hot key must move it to the MRU end —
+    an overwrite that leaves the entry in its old position gets the entry
+    evicted as if cold."""
+    c = LRUCache(2)
+    c.put("hot", 1)
+    c.put("b", 2)
+    c.put("hot", 10)  # overwrite must also refresh recency
+    c.put("c", 3)  # evicts b — NOT the just-re-inserted "hot"
+    assert c.get("hot") == 10
+    assert c.get("b") is None
+    assert c.get("c") == 3
+
+
+def test_registry_concurrent_subscribe_during_notify():
+    """Regression: subscribe/unsubscribe racing an in-flight _notify must
+    not corrupt the listener list (snapshot under the registry lock)."""
+    pg = _build("arr", m=300, seed=9)
+    reg = GraphRegistry()
+    reg.register("g", pg)
+    nodes = np.asarray(pg.graph.node_map)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        try:
+            while not stop.is_set():
+                listeners = [lambda name, g: None for _ in range(4)]
+                for ln in listeners:
+                    reg.subscribe(ln)
+                for ln in listeners:
+                    reg.unsubscribe(ln)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    def mutate():
+        try:
+            for i in range(60):  # every mutation fires _notify
+                pg.add_node_labels(nodes[:2], [f"l{i % 3}"] * 2)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    churners = [threading.Thread(target=churn) for _ in range(3)]
+    mut = threading.Thread(target=mutate)
+    for t in churners:
+        t.start()
+    mut.start()
+    mut.join(timeout=120)
+    stop.set()
+    for t in churners:
+        t.join(timeout=30)
+    assert not errors
+    # steady state: only the registration hook's listeners remain
+    survivor = []
+    reg.subscribe(lambda name, g: survivor.append(name))
+    pg.add_node_labels(nodes[:2], ["x"] * 2)
+    assert survivor == ["g"]
+
+
 # ---------------------------------------------------------------- registry
 def test_registry_load_and_errors(tmp_path):
     from repro.core.io import save_propgraph
