@@ -1,0 +1,141 @@
+"""Frontier-engine benchmark: k-hop + components, CSR vs edge-centric vs
+the per-hop composition the engine replaces, single-device vs mesh.
+
+Rows (JSON via ``benchmarks.common.emit_json``; ``BENCH_JSON_PATH`` or the
+``json_path`` arg appends to a file — run.py pins ``BENCH_traverse.json``
+so the perf trajectory records):
+
+  * ``khop_frontier_{backend}_k{K}`` — ``PropGraph.khop``: ONE jitted
+    ``while_loop`` of masked frontier steps (docs/ARCHITECTURE.md §10).
+  * ``khop_csr_{backend}_k{K}``      — the CSR fast path: per step, gather
+    only the live frontier's adjacency slices (O(|F|·d̂) work, not O(m)).
+  * ``khop_perhop_match_{backend}_k{K}`` — the baseline the acceptance
+    criterion names: k repeated single-hop ``match()`` calls, each paying
+    parse→plan→mask materialization→propagation→host sync, with the
+    frontier expanded host-side between them — what composing k-hop out
+    of the pre-frontier-engine pieces costs.  ``speedup_csr`` on the CSR
+    row is perhop/csr at the same k.
+  * ``components_{backend}``         — ``PropGraph.components`` over the
+    ``follows`` subgraph (property-aware CC).
+  * ``khop_mesh_d{P}``               — the shard_map frontier path on a
+    P-device sub-mesh (virtual devices; like bench_shard, this validates
+    the distribution machinery and measures its overhead — true scaling
+    needs one chip per shard; ``method`` records it).
+
+Every timed row is verified bitwise against its siblings first.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede first jax init to take effect
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+
+METHOD = "host-virtual-devices"
+PATTERN = "(a)-[:follows]->(b)"
+N_SEEDS = 16
+KS = (2, 4, 8)
+
+
+def _build(backend: str, m: int, mesh=None, seed: int = 0):
+    from repro.core import PropGraph
+    from repro.graph import random_uniform_graph
+
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    labels = rng.choice(["l0", "l1", "l2"], size=len(nodes))
+    pg.add_node_labels(nodes, labels)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es), p=[0.3, 0.7])
+    pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    return pg
+
+
+def _perhop_match(pg, seeds, k: int) -> np.ndarray:
+    """k-hop composed from k separate single-hop ``match()`` calls — the
+    pre-engine workflow: every hop re-derives the typed edge mask through
+    the full declarative pipeline, then expands the frontier host-side."""
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    sid = pg._vertex_internal(seeds)
+    mask = np.zeros(pg.n_vertices, bool)
+    mask[sid[sid >= 0]] = True
+    for _ in range(k):
+        em = np.asarray(pg.match(PATTERN).edge_mask)
+        nm = mask.copy()
+        np.logical_or.at(nm, ed[mask[es] & em], True)
+        if (nm == mask).all():
+            break
+        mask = nm
+    return mask
+
+
+def run(m: int = 100_000, json_path: Optional[str] = None,
+        device_counts=(1, 2, 4, 8)) -> None:
+    import jax
+
+    from repro.launch.mesh import make_entity_mesh
+
+    for backend in ("arr", "list"):
+        pg = _build(backend, m)
+        nodes = np.asarray(pg.graph.node_map)
+        seeds = nodes[:N_SEEDS]
+        for k in KS:
+            ref = _perhop_match(pg, seeds, k)
+            fr = np.asarray(pg.khop(seeds, k, pattern=PATTERN))
+            cs = np.asarray(pg.khop(seeds, k, pattern=PATTERN, impl="csr"))
+            assert (fr == ref).all() and (cs == ref).all(), (backend, k)
+
+            t_per = time_call(lambda: _perhop_match(pg, seeds, k))
+            emit_json(f"khop_perhop_match_{backend}_k{k}_m{m}", t_per,
+                      path=json_path, backend=backend, m=m, k=k,
+                      seeds=N_SEEDS)
+            t_fr = time_call(lambda: pg.khop(seeds, k, pattern=PATTERN))
+            emit_json(f"khop_frontier_{backend}_k{k}_m{m}", t_fr,
+                      path=json_path, backend=backend, m=m, k=k,
+                      seeds=N_SEEDS,
+                      speedup_vs_perhop=round(t_per / t_fr, 2))
+            t_cs = time_call(
+                lambda: pg.khop(seeds, k, pattern=PATTERN, impl="csr"))
+            emit_json(f"khop_csr_{backend}_k{k}_m{m}", t_cs,
+                      path=json_path, backend=backend, m=m, k=k,
+                      seeds=N_SEEDS,
+                      speedup_vs_perhop=round(t_per / t_cs, 2))
+
+        t = time_call(lambda: pg.components(PATTERN))
+        emit_json(f"components_{backend}_m{m}", t, path=json_path,
+                  backend=backend, m=m)
+
+    avail = len(jax.devices())
+    counts = [c for c in device_counts if c <= avail]
+    if counts != list(device_counts):
+        print(f"# bench_traverse: only {avail} device(s) visible — sweeping "
+              f"{counts} (run standalone or set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    pg0 = _build("arr", m)
+    nodes = np.asarray(pg0.graph.node_map)
+    seeds = nodes[:N_SEEDS]
+    base = np.asarray(pg0.khop(seeds, 4, pattern=PATTERN))
+    for p in counts:
+        mesh = make_entity_mesh(p)
+        pg = _build("arr", m, mesh=mesh)
+        got = np.asarray(pg.khop(seeds, 4, pattern=PATTERN))
+        assert (got == base).all(), p  # bench rows are verified
+        t = time_call(lambda: pg.khop(seeds, 4, pattern=PATTERN))
+        emit_json(f"khop_mesh_d{p}_m{m}", t, path=json_path, m=m, k=4,
+                  devices=p, method=METHOD)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=100_000)
+    a = ap.parse_args()
+    run(m=a.m, json_path=os.environ.get("BENCH_JSON_PATH"))

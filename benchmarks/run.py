@@ -11,6 +11,11 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
   shard        — sharded-store locale sweep 1→8 virtual devices (JSON lines;
                  run ``python -m benchmarks.bench_shard`` standalone to get
                  8 virtual devices — in-process it sweeps what's visible)
+  traverse     — frontier engine: k-hop CSR vs edge-centric vs k repeated
+                 single-hop match() calls, property-aware components,
+                 mesh sweep (JSON lines; ALWAYS appended to
+                 ``BENCH_traverse.json`` — override with
+                 ``BENCH_JSON_PATH``; see bench_traverse.py)
   serve        — service layer: coalesced concurrent serving vs sequential
                  per-request baseline, concurrency 1/2/4/8, adaptive- vs
                  fixed-window, plus cross-process TCP rows (JSON lines;
@@ -52,6 +57,12 @@ def main() -> None:
     print("# shard (sharded DIP stores: locale sweep over virtual devices)")
     from benchmarks import bench_shard
     bench_shard.run(m=20_000 if small else 100_000)
+
+    print("# traverse (frontier engine: khop csr/frontier/per-hop-match, components)")
+    from benchmarks import bench_traverse
+    bench_traverse.run(m=20_000 if small else 100_000,
+                       json_path=os.environ.get("BENCH_JSON_PATH",
+                                                "BENCH_traverse.json"))
 
     print("# serve (service layer: coalesced vs sequential, concurrency sweep,")
     print("#        adaptive vs fixed window, cross-process TCP)")

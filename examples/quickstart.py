@@ -85,6 +85,25 @@ hand = induce_edge_mask_directed(
 assert bool((res.edge_mask == hand).all())
 print("match == hand-composed pipeline ✓")
 
+# -- 5b. reachability: variable-length patterns + frontier analytics ----------
+# '-[:rel*1..k]->' matches walks of 1..k typed edges (the cybersecurity
+# "within k flows-hops" shape); '*' runs to a fixed point.  The same
+# frontier engine (docs/ARCHITECTURE.md §10) powers k-hop and connected
+# components that RESPECT the property layer — no subgraph materialized.
+vres = pg.match('(a:label1)-[:rel7*1..3]->(b:label2)')
+print(f"variable-length match (*1..3): {vres.n_vertices():,} vertices, "
+      f"{vres.n_edges():,} edges on matched walks")
+
+halo3 = pg.khop(nodes[:8], 3, pattern='(a)-[:rel7|rel8]->(b)', impl='csr')
+assert bool((pg.khop(nodes[:8], 3, pattern='(a)-[:rel7|rel8]->(b)') == halo3).all())
+print(f"k-hop: {int(halo3.sum()):,} vertices within 3 typed hops of 8 seeds "
+      f"(impl='csr' gathers only the frontier's adjacency ≡ frontier path)")
+
+comp = np.asarray(pg.components('(a)-[:rel7]->(b)'))
+sizes = np.bincount(comp[comp >= 0])
+print(f"components of the rel7 subgraph: {int((sizes > 0).sum()):,} "
+      f"components, largest = {int(sizes.max()):,} vertices")
+
 # -- 6. persistence: ingest once, reload in seconds ---------------------------
 # save_propgraph stores the DI arrays + raw attribute pairs (backend- and
 # placement-independent), so the expensive §V ingestion never reruns.

@@ -42,7 +42,7 @@ __all__ = [
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["src", "dst", "seg", "node_map"],
-    meta_fields=["n", "m"],
+    meta_fields=["n", "m", "max_deg"],
 )
 @dataclasses.dataclass(frozen=True)
 class DIGraph:
@@ -53,6 +53,14 @@ class DIGraph:
       * ``seg[0] == 0``, ``seg[n] == m``, ``seg`` non-decreasing.
       * ``seg[u+1] - seg[u] == out_degree(u)``.
       * ``node_map`` is strictly increasing (sorted unique original ids).
+
+    ``max_deg`` caches the widest adjacency window (max out-degree),
+    computed once at build time from the same sort that produced SEG.  It
+    is metadata (participates in jit specialization like ``n``/``m``):
+    ``edge_lookup`` sizes its binary search to ⌈log₂ max_deg⌉ trips instead
+    of ⌈log₂ m⌉, and the traverse CSR fast path reads its lane width off
+    it.  ``-1`` = unknown (hand-built graphs); consumers fall back to the
+    conservative bound.
     """
 
     src: jax.Array  # (m,) int32
@@ -61,6 +69,7 @@ class DIGraph:
     node_map: jax.Array  # (n,) original vertex ids
     n: int
     m: int
+    max_deg: int = -1
 
     # -- convenience -------------------------------------------------------
     def out_degree(self, u) -> jax.Array:
@@ -135,7 +144,9 @@ def build_di(
     # (3) SEG: counts → exclusive prefix sum, seg[0]=0, seg[n]=m.
     counts = jnp.bincount(src_s, length=n)
     seg = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
-    return DIGraph(src=src_s, dst=dst_s, seg=seg, node_map=node_map, n=n, m=m)
+    max_deg = int(np.max(np.asarray(counts), initial=0)) if n else 0
+    return DIGraph(src=src_s, dst=dst_s, seg=seg, node_map=node_map, n=n, m=m,
+                   max_deg=max_deg)
 
 
 def build_reverse_di(g: DIGraph) -> DIGraph:
@@ -146,7 +157,9 @@ def build_reverse_di(g: DIGraph) -> DIGraph:
     rdst = g.src[order]
     counts = jnp.bincount(rsrc, length=g.n)
     seg = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
-    return DIGraph(src=rsrc, dst=rdst, seg=seg, node_map=g.node_map, n=g.n, m=g.m)
+    max_deg = int(np.max(np.asarray(counts), initial=0)) if g.n else 0
+    return DIGraph(src=rsrc, dst=rdst, seg=seg, node_map=g.node_map, n=g.n, m=g.m,
+                   max_deg=max_deg)
 
 
 def degrees(g: DIGraph) -> Tuple[jax.Array, jax.Array]:
@@ -190,6 +203,13 @@ def edge_lookup(g: DIGraph, eu: jax.Array, ev: jax.Array) -> jax.Array:
     ingestion locates the internal edge index for each (src, dst, relationship)
     row (§V step 2).  Returns -1 where the edge does not exist.  No fused
     (src*n+dst) key ⇒ safe for any n, m < 2**31.
+
+    The trip count is sized to the graph's cached ``max_deg`` (the sort-once
+    statistic ``build_di`` stores): every search window is an adjacency
+    slice, so ⌈log₂ max_deg⌉+1 rounds of the gather already pin the answer —
+    on skewed real graphs that is a fraction of the ⌈log₂ m⌉ bound the
+    conservative fallback (``max_deg`` unknown) uses.  Pinned bitwise-equal
+    to an O(m·q) full scan in tests/test_core_di.py.
     """
     if g.m == 0:
         return jnp.full(eu.shape, -1, jnp.int32)
@@ -204,7 +224,8 @@ def edge_lookup(g: DIGraph, eu: jax.Array, ev: jax.Array) -> jax.Array:
         go_right = (g.dst[jnp.clip(mid, 0, g.m - 1)] < ev) & (lo < hi)
         return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
 
-    trips = max(1, int(np.ceil(np.log2(max(g.m, 2)))) + 1)
+    window = g.max_deg if g.max_deg >= 0 else g.m
+    trips = max(1, int(np.ceil(np.log2(max(window, 2)))) + 1)
     lo, hi = jax.lax.fori_loop(0, trips, step, (lo, hi))
     pos = jnp.clip(lo, 0, g.m - 1)
     found = (lo < g.seg[eu + 1]) & (g.dst[pos] == ev) & (g.src[pos] == eu)

@@ -111,10 +111,12 @@ def load_propgraph(
         data = {k: z[k] for k in z.files}
 
     pg = PropGraph(backend=backend or man["backend"], mesh=mesh)
+    seg_np = data["seg"]
     g = DIGraph(
         src=jnp.asarray(data["src"]), dst=jnp.asarray(data["dst"]),
-        seg=jnp.asarray(data["seg"]), node_map=jnp.asarray(data["node_map"]),
+        seg=jnp.asarray(seg_np), node_map=jnp.asarray(data["node_map"]),
         n=int(man["n"]), m=int(man["m"]),
+        max_deg=int(np.max(seg_np[1:] - seg_np[:-1], initial=0)),
     )
     if mesh is not None:
         from repro.core import dip_shard

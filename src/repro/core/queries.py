@@ -75,6 +75,7 @@ def extract_subgraph(g: DIGraph, edge_mask) -> Tuple[DIGraph, np.ndarray]:
         node_map=jnp.asarray(parent_map[np.asarray(sub.node_map)]),
         n=sub.n,
         m=sub.m,
+        max_deg=sub.max_deg,
     )
     return sub, keep
 

@@ -18,28 +18,17 @@ from repro.core.di import DIGraph
 __all__ = ["connected_components", "pagerank", "triangle_count", "degree_histogram"]
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
 def connected_components(g: DIGraph, *, max_iters: int = 128) -> jax.Array:
     """Label propagation (Shiloach-Vishkin style min-hook): (n,) component ids.
-    Treats edges as undirected.  Converges in O(diameter) rounds."""
-    labels0 = jnp.arange(g.n, dtype=jnp.int32)
+    Treats edges as undirected.  Converges in O(diameter) rounds.
 
-    def body(state):
-        labels, _, it = state
-        lsrc, ldst = labels[g.src], labels[g.dst]
-        m1 = jnp.minimum(lsrc, ldst)
-        new = labels.at[g.src].min(m1)
-        new = new.at[g.dst].min(m1)
-        # pointer jumping for fast convergence
-        new = new[new]
-        return new, jnp.any(new != labels), it + 1
+    Thin alias for the frontier engine's masked implementation with no
+    masks (``repro.traverse.components_masked`` — the property-aware form
+    ``PropGraph.components`` exposes); kept here so the §I kernel suite
+    stays importable from one place."""
+    from repro.traverse import components_masked
 
-    def cond(state):
-        _, changed, it = state
-        return changed & (it < max_iters)
-
-    labels, _, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
-    return labels
+    return components_masked(g, max_iters=max_iters)
 
 
 @partial(jax.jit, static_argnames=("iters",))

@@ -6,7 +6,6 @@ on the typed subgraph WITHOUT materializing it (mask-composed, all jittable).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -21,14 +20,14 @@ from repro.graph.algorithms import pagerank
 __all__ = ["khop_typed", "label_histogram", "typed_components", "attribute_assortativity"]
 
 
-@partial(jax.jit, static_argnames=("k",))
 def khop_typed(g: DIGraph, seeds: jax.Array, edge_allowed: jax.Array, *, k: int) -> jax.Array:
-    """Vertices within k typed hops of the seeds: (n,) bool."""
+    """Vertices within k typed hops of the seeds: (n,) bool.  Runs through
+    the frontier engine (``repro.traverse.khop_mask`` — one jitted
+    ``while_loop`` with early exit instead of k unrolled relaxations)."""
+    from repro.traverse import khop_mask
+
     mask = jnp.zeros((g.n,), jnp.bool_).at[seeds].set(True)
-    for _ in range(k):
-        relax = mask[g.src] & edge_allowed
-        mask = mask | jnp.zeros_like(mask).at[g.dst].max(relax)
-    return mask
+    return khop_mask(g, mask, edge_allowed, k=k)
 
 
 def label_histogram(pg: PropGraph) -> Tuple[np.ndarray, list]:
@@ -41,29 +40,15 @@ def label_histogram(pg: PropGraph) -> Tuple[np.ndarray, list]:
 def typed_components(pg: PropGraph, relationships: Sequence[str],
                      *, max_iters: int = 64) -> jax.Array:
     """Connected components of the subgraph induced by the given relationship
-    types (mask-composed label propagation; no subgraph materialization)."""
+    types (mask-composed label propagation; no subgraph materialization).
+    Frontier-engine client: every vertex participates (singletons where the
+    typed edges don't reach); ``PropGraph.components(pattern=...)`` is the
+    richer form with label/predicate filters and -1 outside the filter."""
+    from repro.traverse import components_masked
+
     g = pg._require_graph()
     e_ok = pg.query_relationships(relationships)
-    labels0 = jnp.arange(g.n, dtype=jnp.int32)
-
-    def body(state):
-        labels, _, it = state
-        m1 = jnp.minimum(labels[g.src], labels[g.dst])
-        big = jnp.int32(2 ** 30)
-        upd_dst = jnp.where(e_ok, m1, big)
-        upd_src = jnp.where(e_ok, m1, big)
-        new = labels.at[g.dst].min(upd_dst)
-        new = new.at[g.src].min(upd_src)
-        new = new[new]
-        return new, jnp.any(new != labels), it + 1
-
-    def cond(state):
-        _, changed, it = state
-        return changed & (it < max_iters)
-
-    labels, _, _ = jax.lax.while_loop(
-        cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
-    return labels
+    return components_masked(g, None, e_ok, max_iters=max_iters)
 
 
 def attribute_assortativity(pg: PropGraph, labels: Sequence[str]) -> float:

@@ -354,8 +354,9 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
     three backends; a client in THIS process verifies every pool pattern
     bitwise against an in-process ``PropGraph.match`` reference (the
     tenant build is seeded, so both processes construct identical graphs),
-    then exercises pipelining, wire mutation + invalidation, the
-    save→``load_graph`` path (cross-backend), error isolation, and
+    then exercises pipelining, a variable-length traversal query (plus the
+    plan-time string-predicate rejection), wire mutation + invalidation,
+    the save→``load_graph`` path (cross-backend), error isolation, and
     graceful drain/shutdown.  Prints ``PGSERVE NET SMOKE OK``."""
     import tempfile
 
@@ -387,6 +388,23 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
                                             ("pipelined", pattern))
             # explain crosses the wire as text
             assert "plan" in c.explain("arr", pool[0]).lower()
+            # variable-length traversal over the wire: frontier-engine
+            # propagation server-side, masks bitwise vs in-process match
+            vpat = "(a:l1)-[:follows*1..4]->(b:l2)"
+            for b in backends:
+                _assert_wire_result_matches(
+                    c.query(b, vpat), refs[b].match(vpat), ("varlen", b))
+            assert "traverse" in c.explain("arr", vpat)
+            print("pgserve net smoke: variable-length query ≡ in-process OK",
+                  flush=True)
+            # plan-time rejection reaches the client BEFORE any execution:
+            # a string predicate fails with TypeError naming the column
+            try:
+                c.query("arr", '(a {age == "old"})-[:follows]->(b)')
+            except TypeError as e:
+                assert "age" in str(e)
+            else:
+                raise AssertionError("string predicate should raise TypeError")
             # mutation over the wire: version bump + cache invalidation,
             # mirrored locally on the reference graph
             nodes = np.asarray(refs["arr"].graph.node_map)
@@ -467,6 +485,13 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
             wl = synthetic_workload(["g"], pool, requests, seed=seed)
             run_workload(svc, wl, concurrency)
             _verify_bitwise(svc, {"g": pg}, pool)
+            # variable-length traversal through the service (per-request
+            # fallback in the coalescer, result cache still serves it)
+            vpat = "(a:l1)-[:follows*1..3]->(b:l2)"
+            got = svc.query("g", vpat)
+            ref = pg.match(vpat)
+            assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all(), backend
+            assert svc.stats().get("traversal_fallback_requests", 0) > 0, backend
             # mutation → version bump → cached results die
             before = svc.query("g", pool[0])
             nodes = np.asarray(pg.graph.node_map)

@@ -62,21 +62,49 @@ class EdgePattern:
 
     ``direction`` is relative to the pattern's left-to-right reading:
     +1 means the DI edge points left→right, -1 right→left.
+
+    ``lo``/``hi`` are the variable-length bounds (``-[:r*lo..hi]->``):
+    the hop matches a walk of L ∈ [lo, hi] edges, every one holding the
+    relationship/predicate constraints; intermediate vertices are
+    unconstrained.  ``hi=None`` means unbounded (``*`` — executed to a
+    fixed point).  The default (1, 1) is a plain fixed hop.
     """
 
     var: Optional[str] = None
     rels: Tuple[str, ...] = ()
     predicates: Tuple[Predicate, ...] = ()
     direction: int = 1
+    lo: int = 1
+    hi: Optional[int] = 1
 
     def __post_init__(self):
         if self.direction not in (1, -1):
             raise ValueError(f"direction must be ±1, got {self.direction}")
+        if self.lo < 0:
+            raise ValueError(f"traversal bounds must be ≥ 0, got lo={self.lo}")
+        if self.hi is not None and self.hi < self.lo:
+            raise ValueError(
+                f"traversal upper bound below lower: *{self.lo}..{self.hi}")
+
+    @property
+    def is_fixed(self) -> bool:
+        """True for a plain single hop (no ``*`` traversal)."""
+        return self.lo == 1 and self.hi == 1
+
+    def _star_text(self) -> str:
+        if self.is_fixed:
+            return ""
+        if self.hi is None:
+            return "*" if self.lo == 1 else f"*{self.lo}.."
+        if self.lo == self.hi:
+            return f"*{self.lo}"
+        return f"*{self.lo}..{self.hi}"
 
     def to_text(self) -> str:
         parts = [self.var or ""]
         if self.rels:
             parts.append(":" + "|".join(self.rels))
+        parts.append(self._star_text())
         if self.predicates:
             parts.append(" {" + ", ".join(p.to_text() for p in self.predicates) + "}")
         body = "[" + "".join(parts) + "]"

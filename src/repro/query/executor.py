@@ -10,11 +10,27 @@ Execution in three stages:
 2. **Local consistency**: per hop, an edge survives iff its own mask is set
    and both endpoint candidate masks are set (the §VI mask-intersection
    contract, directional — ``induce_edge_mask`` generalized per endpoint).
-3. **Chain propagation** (single jit, static hop count): a forward pass
+3. **Chain propagation** (single jit, static hop structure): a forward pass
    computes per-position reachable sets, a backward pass prunes to vertices
    /edges that participate in at least one COMPLETE match of the pattern —
-   the khop-style frontier expansion of ``graph.typed_algorithms`` run once
-   in each direction instead of k times in one.
+   the ``repro.traverse`` frontier step run once in each direction instead
+   of k times in one.  Variable-length hops (``-[:r*lo..hi]->``, ``*``)
+   expand through the same step: bounded hops unroll ``hi`` exact-length
+   frontier layers in each direction and combine them (walk-length algebra
+   below); unbounded hops run the frontier to a fixed point
+   (``while_loop``, ≤ n rounds).  For a var hop between slots i and i+1
+   with forward layers ``u_s`` (s steps from the forward-complete slot-i
+   set) and backward layers ``w_t`` (t reverse steps from the
+   backward-complete slot-i+1 set):
+
+     slot-i survivors   = fwd_i ∧ ∪_{L∈[lo,hi]} w_L
+     hop edges (alive)  = allowed ∧ ∪_{s+t∈[lo-1,hi-1]} u_s[tail] ∧ w_t[head]
+     interior vertices  = ∪_{s,t≥1, lo≤s+t≤hi} u_s ∧ w_t
+
+   Interior vertices are unconstrained by the slot masks (Cypher-style);
+   every traversed edge must satisfy the hop's relationship/predicate
+   masks.  Matches are WALKS: a traversal may revisit vertices and edges
+   (see query/README.md "Variable-length hops").
 
 The result is exact (not an estimate): ``vertex_mask``/``edge_mask`` are
 the unions of all full-pattern assignments.
@@ -41,6 +57,7 @@ import numpy as np
 from repro.core.di import DIGraph
 from repro.core.queries import extract_subgraph, induce_edge_mask_directed
 from repro.query.plan import Plan
+from repro.traverse.engine import frontier_step, reach_closure
 
 __all__ = ["MatchResult", "execute_plan", "execute_plan_with_masks"]
 
@@ -56,9 +73,12 @@ class MatchResult:
 
     ``node_masks[i]`` / ``edge_masks[i]`` are per-slot masks in the PLAN's
     chain order (use ``bindings()`` for name-keyed access — variable names
-    travel with their slots through any planner reorientation).  Registered
-    as a pytree (masks = leaves) so ``jax.block_until_ready`` / ``jit``
-    compose with results directly.
+    travel with their slots through any planner reorientation).  For a
+    variable-length hop, ``edge_masks[i]`` covers every edge on some
+    matched walk of that hop, and interior walk vertices appear in
+    ``vertex_mask`` but in no ``node_masks`` slot (they bind no variable).
+    Registered as a pytree (masks = leaves) so ``jax.block_until_ready`` /
+    ``jit`` compose with results directly.
     """
 
     vertex_mask: jax.Array  # (n,) bool — vertices in ≥1 full match
@@ -100,51 +120,125 @@ class MatchResult:
         return khop_typed(g, seeds, allowed, k=k)
 
 
-@partial(jax.jit, static_argnames=("dirs",))
+@partial(jax.jit, static_argnames=("hops",))
 def _propagate(
     g: DIGraph,
     cands: Tuple[jax.Array, ...],
     emasks: Tuple[jax.Array, ...],
-    dirs: Tuple[int, ...],
+    hops: Tuple[Tuple[int, int, int], ...],
 ):
-    """Forward/backward chain propagation (static hop count ⇒ fully unrolled,
-    one XLA program for the whole pattern).
+    """Forward/backward chain propagation (static hop structure ⇒ fully
+    unrolled, one XLA program for the whole pattern).  ``hops`` carries one
+    ``(direction, lo, hi)`` per hop; ``hi == -1`` means unbounded.
 
-    forward:  f_0 = c_0;  f_i = heads(A_i ∧ f_{i-1}[tail])
-    backward: b_h = f_h;  alive_i = A_i ∧ f_{i-1}[tail] ∧ b_i[head];
-              b_{i-1} = tails(alive_i)
+    Fixed hops ((d, 1, 1) — the original math):
+      forward:  f_0 = c_0;  f_i = heads(A_i ∧ f_{i-1}[tail])
+      backward: b_h = f_h;  alive_i = A_i ∧ f_{i-1}[tail] ∧ b_i[head];
+                b_{i-1} = tails(alive_i)
     where A_i is the locally-consistent edge set of hop i and tail/head
     follow each hop's direction.  b_i = position-i vertices on a full match;
     alive_i = hop-i edges on a full match.
-    """
-    h = len(dirs)
-    ends = [
-        (g.src, g.dst) if dirs[i] == 1 else (g.dst, g.src) for i in range(h)
-    ]
 
-    local = [
-        induce_edge_mask_directed(g, cands[i], cands[i + 1], emasks[i], dirs[i])
-        for i in range(h)
-    ]
+    Variable-length hops run the module-docstring walk algebra through
+    ``repro.traverse.frontier_step``: bounded hops keep exact-step frontier
+    layers in both directions; unbounded hops keep the two fixed-point
+    closures.  Interior walk vertices are returned separately (they belong
+    to no slot) and union into the vertex mask only.
+    """
+    h = len(hops)
+    ends = [(g.src, g.dst) if d == 1 else (g.dst, g.src) for d, _, _ in hops]
 
     fwd = [cands[0]]
-    for i in range(h):
+    local = [None] * h  # fixed hops: locally-consistent edge sets
+    flayers = [None] * h  # bounded var hops: forward exact-step layers
+    fclosure = [None] * h  # unbounded var hops: forward closure
+    for i, (d, lo, hi) in enumerate(hops):
         tail, head = ends[i]
-        a = local[i] & fwd[i][tail]
-        fwd.append(jnp.zeros_like(cands[i + 1]).at[head].max(a))
+        if (lo, hi) == (1, 1):
+            local[i] = induce_edge_mask_directed(
+                g, cands[i], cands[i + 1], emasks[i], d)
+            a = local[i] & fwd[i][tail]
+            fwd.append(jnp.zeros_like(cands[i + 1]).at[head].max(a))
+        elif hi == -1:
+            U = reach_closure(g, fwd[i], emasks[i], direction=d)
+            fclosure[i] = U
+            reach = U if lo == 0 else frontier_step(g, U, emasks[i], direction=d)
+            fwd.append(cands[i + 1] & reach)
+        else:
+            layers = [fwd[i]]
+            for _ in range(hi):
+                layers.append(frontier_step(g, layers[-1], emasks[i], direction=d))
+            flayers[i] = layers
+            reach = layers[lo]
+            for L in range(lo + 1, hi + 1):
+                reach = reach | layers[L]
+            fwd.append(cands[i + 1] & reach)
 
     back = [None] * (h + 1)
     back[h] = fwd[h]
     alive = [None] * h
+    interiors = []  # var-hop walk vertices that belong to no slot
     for i in range(h - 1, -1, -1):
+        d, lo, hi = hops[i]
         tail, head = ends[i]
-        al = local[i] & fwd[i][tail] & back[i + 1][head]
-        alive[i] = al
-        back[i] = jnp.zeros_like(fwd[i]).at[tail].max(al)
+        if (lo, hi) == (1, 1):
+            al = local[i] & fwd[i][tail] & back[i + 1][head]
+            alive[i] = al
+            back[i] = jnp.zeros_like(fwd[i]).at[tail].max(al)
+        elif hi == -1:
+            U = fclosure[i]
+            W = reach_closure(g, back[i + 1], emasks[i], direction=-d)
+            alive[i] = emasks[i] & U[tail] & W[head]
+            back[i] = fwd[i] & (
+                W if lo == 0 else frontier_step(g, W, emasks[i], direction=-d))
+            interiors.append(
+                frontier_step(g, U, emasks[i], direction=d)
+                & frontier_step(g, W, emasks[i], direction=-d)
+            )
+        else:
+            u = flayers[i]
+            w = [back[i + 1]]
+            for _ in range(hi):
+                w.append(frontier_step(g, w[-1], emasks[i], direction=-d))
+            # prefix unions keep the per-s window unions O(1) whenever the
+            # window reaches down to its base (always true for lo ≤ 1, the
+            # common patterns) — without them this pass is O(hi²) masks,
+            # the program-size blowup MAX_VARLEN exists to bound
+            pre0 = [w[0]]  # pre0[j] = w[0] | … | w[j]
+            for t in range(1, hi + 1):
+                pre0.append(pre0[-1] | w[t])
+            pre1 = [None, w[1]] if hi >= 1 else [None]  # pre1[j] = w[1] | … | w[j]
+            for t in range(2, hi + 1):
+                pre1.append(pre1[-1] | w[t])
+
+            def w_union(a, b):  # ∪ w[a..b], 0 ≤ a ≤ b ≤ hi
+                if a == 0:
+                    return pre0[b]
+                if a == 1:
+                    return pre1[b]
+                out = w[a]
+                for t in range(a + 1, b + 1):
+                    out = out | w[t]
+                return out
+
+            back[i] = fwd[i] & w_union(lo, hi)
+            acc = jnp.zeros((g.m,), jnp.bool_)
+            for s in range(hi):
+                hu = w_union(max(0, lo - 1 - s), hi - 1 - s)
+                acc = acc | (u[s][tail] & hu[head])
+            alive[i] = emasks[i] & acc
+            inter = jnp.zeros((g.n,), jnp.bool_)
+            for s in range(1, hi):
+                a, b = max(1, lo - s), hi - s
+                if a <= b:
+                    inter = inter | (u[s] & w_union(a, b))
+            interiors.append(inter)
 
     vmask = back[0]
     for b in back[1:]:
         vmask = vmask | b
+    for x in interiors:
+        vmask = vmask | x
     if h:
         emask = alive[0]
         for a in alive[1:]:
@@ -236,8 +330,12 @@ def execute_plan_with_masks(
         cands = _gather_masks(cands, mesh)
         emasks = _gather_masks(emasks, mesh)
 
-    dirs = tuple(e.direction for e in plan.pattern.edges)
-    vmask, emask, node_masks, alive = _propagate(g, tuple(cands), emasks=tuple(emasks), dirs=dirs)
+    hops = tuple(
+        (e.direction, e.lo, -1 if e.hi is None else e.hi)
+        for e in plan.pattern.edges
+    )
+    vmask, emask, node_masks, alive = _propagate(
+        g, tuple(cands), emasks=tuple(emasks), hops=hops)
     return MatchResult(
         vertex_mask=vmask,
         edge_mask=emask,

@@ -5,7 +5,8 @@ Grammar (see README.md in this package for the prose version)::
     pattern := node (edge node)*
     node    := '(' [ident] [':' alts] [props] ')'
     edge    := '-' '[' body ']' '->'  |  '<-' '[' body ']' '-'
-    body    := [ident] [':' alts] [props]
+    body    := [ident] [':' alts] ['*' [bounds]] [props]
+    bounds  := int | int '..' | int '..' int | '..' int
     alts    := value ('|' value)*
     props   := '{' pred (',' pred)* '}'
     pred    := ident op literal        ;  op ∈ {=, ==, !=, <, <=, >, >=}
@@ -14,7 +15,12 @@ Grammar (see README.md in this package for the prose version)::
 Hand-rolled recursive descent over a regex token stream — no parser
 dependency, exact source positions in errors.  ``=`` normalizes to ``==``;
 numeric literals become int/float so predicate masks compare natively
-against the typed property columns.
+against the typed property columns.  ``*`` bounds mark variable-length
+hops: ``*`` = 1..∞, ``*k`` = exactly k, ``*lo..hi``/``*lo..``/``*..hi``
+with the missing end defaulting to 1 / ∞ (see README "Variable-length
+hops").  Variable names must be unique across the whole pattern: a
+repeated variable would read as an equality join, which the engine does
+not implement — it is rejected here rather than silently mis-meaning.
 """
 from __future__ import annotations
 
@@ -38,10 +44,11 @@ _TOKEN_RE = re.compile(
     r"""\s*(?:
         (?P<arrow_in>\<\-)        # <-
       | (?P<arrow_out>\-\>)       # ->
+      | (?P<dotdot>\.\.)          # range in '*lo..hi' (before number)
       | (?P<op>==|!=|<=|>=|=|<|>)
       | (?P<string>"[^"]*"|'[^']*')
-      | (?P<number>[+-]?\d+\.\d*(?:[eE][+-]?\d+)?|[+-]?\.?\d+(?:[eE][+-]?\d+)?)
-      | (?P<punct>[()\[\]{}:,|\-])
+      | (?P<number>[+-]?\d+\.(?!\.)\d*(?:[eE][+-]?\d+)?|[+-]?\.?\d+(?:[eE][+-]?\d+)?)
+      | (?P<punct>[()\[\]{}:,|\-*])
       | (?P<ident>[A-Za-z_][A-Za-z0-9_.]*)
     )""",
     re.VERBOSE,
@@ -134,8 +141,10 @@ def _props(cur: _Cursor) -> Tuple[Predicate, ...]:
         cur.expect(",")
 
 
-def _entity_body(cur: _Cursor) -> Tuple[Optional[str], Tuple[str, ...], Tuple[Predicate, ...]]:
-    """Shared interior of node ``(...)`` and edge ``[...]``."""
+def _entity_body(cur: _Cursor) -> Tuple[Optional[str], Tuple[str, ...]]:
+    """Shared leading interior of node ``(...)`` and edge ``[...]``:
+    optional variable, optional ``:alts``.  Props (and, for edges, the
+    ``*`` bounds that precede them) are parsed by the callers."""
     var = None
     tok = cur.peek()
     if tok is not None and tok[0] == "ident":
@@ -143,12 +152,47 @@ def _entity_body(cur: _Cursor) -> Tuple[Optional[str], Tuple[str, ...], Tuple[Pr
     labels: Tuple[str, ...] = ()
     if cur.accept(":"):
         labels = _alts(cur)
-    return var, labels, _props(cur)
+    return var, labels
+
+
+def _bound_int(cur: _Cursor) -> int:
+    kind, val, pos = cur.next()
+    if kind != "number" or not val.isdigit():
+        raise ParseError(
+            f"traversal bounds must be non-negative integers, found {val!r} "
+            f"at position {pos} in {cur.text!r}"
+        )
+    return int(val)
+
+
+def _star_bounds(cur: _Cursor) -> Tuple[int, Optional[int]]:
+    """``*`` [bounds] after an edge's alts: (lo, hi), hi=None = unbounded."""
+    if not cur.accept("*"):
+        return 1, 1
+    tok = cur.peek()
+    if tok is not None and tok[0] == "number":
+        lo = _bound_int(cur)
+        if cur.accept(".."):
+            tok = cur.peek()
+            hi = _bound_int(cur) if tok is not None and tok[0] == "number" else None
+        else:
+            hi = lo  # '*k' — exactly k hops
+    elif tok is not None and tok[0] == "dotdot":
+        cur.next()
+        lo, hi = 1, _bound_int(cur)  # '*..hi'
+    else:
+        lo, hi = 1, None  # bare '*'
+    if hi is not None and hi < lo:
+        raise ParseError(
+            f"traversal upper bound below lower (*{lo}..{hi}) in {cur.text!r}"
+        )
+    return lo, hi
 
 
 def _node(cur: _Cursor) -> NodePattern:
     cur.expect("(")
-    var, labels, preds = _entity_body(cur)
+    var, labels = _entity_body(cur)
+    preds = _props(cur)
     cur.expect(")")
     return NodePattern(var=var, labels=labels, predicates=preds)
 
@@ -160,7 +204,9 @@ def _edge(cur: _Cursor) -> EdgePattern:
     if not incoming and val != "-":
         raise ParseError(f"expected edge, found {val!r} at position {pos} in {cur.text!r}")
     cur.expect("[")
-    var, rels, preds = _entity_body(cur)
+    var, rels = _entity_body(cur)
+    lo, hi = _star_bounds(cur)
+    preds = _props(cur)
     cur.expect("]")
     if incoming:
         cur.expect("-")
@@ -171,15 +217,31 @@ def _edge(cur: _Cursor) -> EdgePattern:
                 f"expected '->' closing an edge, found {val!r} at position {pos} "
                 f"in {cur.text!r}"
             )
-    return EdgePattern(var=var, rels=rels, predicates=preds, direction=-1 if incoming else 1)
+    return EdgePattern(var=var, rels=rels, predicates=preds,
+                       direction=-1 if incoming else 1, lo=lo, hi=hi)
 
 
 def parse(text: str) -> Pattern:
-    """Parse a pattern string into a :class:`Pattern` AST."""
+    """Parse a pattern string into a :class:`Pattern` AST.
+
+    Raises ``ParseError`` on a repeated variable name: the engine does not
+    implement equality joins, so ``(a)-[:r]->(a)`` would silently mean
+    something different from what it reads as (see README).
+    """
     cur = _Cursor(text)
     nodes = [_node(cur)]
     edges = []
     while cur.peek() is not None:
         edges.append(_edge(cur))
         nodes.append(_node(cur))
+    seen = set()
+    for ent in (*nodes, *edges):
+        if ent.var is not None:
+            if ent.var in seen:
+                raise ParseError(
+                    f"variable {ent.var!r} is bound more than once in {text!r}: "
+                    "repeated variables would read as an equality join, which "
+                    "this engine does not implement — use distinct names"
+                )
+            seen.add(ent.var)
     return Pattern(nodes=tuple(nodes), edges=tuple(edges))

@@ -74,6 +74,14 @@ class Plan:
     def hops(self) -> int:
         return self.pattern.hops
 
+    @property
+    def has_traversal(self) -> bool:
+        """True when any hop is variable-length (``*`` bounds).  The
+        service's coalescer checks this: traversal plans run per-request
+        (their propagation is a per-plan ``while_loop``/layer unroll, not
+        a shareable batched mask launch)."""
+        return any(not e.is_fixed for e in self.pattern.edges)
+
     def describe(self) -> str:
         lines = [
             f"Plan[{self.backend}] {self.pattern.to_text()}",
@@ -89,6 +97,16 @@ class Plan:
                 f"  fusion: label masks for node slots {list(self.fused_node_slots)} "
                 "batched into one bitmap_query kernel launch"
             )
+        for slot, edge in enumerate(self.pattern.edges):
+            if not edge.is_fixed:
+                mode = (
+                    "fixed-point frontier closure"
+                    if edge.hi is None
+                    else f"unrolled frontier layers (≤{edge.hi} steps)"
+                )
+                lines.append(
+                    f"  edge[{slot}] traverse {edge._star_text()} → {mode}"
+                )
         for s in self.mask_steps:
             lines.append("  " + s.describe())
         for s in self.predicate_steps:

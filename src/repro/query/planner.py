@@ -27,11 +27,61 @@ from typing import Optional, Tuple
 from repro.query.ast import Pattern
 from repro.query.plan import MaskStep, Plan, PredicateStep
 
-__all__ = ["plan_pattern", "SCAN_MAX_K", "BUDGET_SEL_CUTOFF", "FUSE_MIN_MASKS"]
+__all__ = [
+    "plan_pattern",
+    "validate_pattern",
+    "SCAN_MAX_K",
+    "BUDGET_SEL_CUTOFF",
+    "FUSE_MIN_MASKS",
+    "MAX_VARLEN",
+]
 
 SCAN_MAX_K = 8  # arr: below this attribute-universe size the VPU row scan wins
 BUDGET_SEL_CUTOFF = 0.25  # listd: budget gather only pays off for selective queries
 FUSE_MIN_MASKS = 2  # arr: batch node-label masks into one kernel launch from here
+MAX_VARLEN = 32  # bounded '*lo..hi' hops unroll hi layers; cap the program size
+
+
+def validate_pattern(pattern: Pattern) -> None:
+    """Plan-time pattern checks — everything that can only fail later but
+    is knowable NOW, so clients (including remote ``PGClient`` users) get
+    the error before paying for execution or a round-trip:
+
+    * string predicate literals: property columns are numeric typed
+      columns, so ``{name == "alice"}`` can never compare element-wise —
+      rejected here naming the column (it used to parse and only fail at
+      execution).
+    * traversal bounds the executor cannot run: bounded hops unroll, so
+      ``hi`` is capped at ``MAX_VARLEN``; unbounded hops run to a fixed
+      point, which supports ``lo ≤ 1`` only (an exact "walks of length
+      ≥ lo" test for lo ≥ 2 needs a bounded upper end — any walk shortens
+      to ≤ n-1 edges, so ``*lo..{2n}`` is an exact substitute).
+    """
+    ents = [("vertex", nd) for nd in pattern.nodes]
+    ents += [("edge", e) for e in pattern.edges]
+    for kind, ent in ents:
+        for p in ent.predicates:
+            if isinstance(p.value, str):
+                raise TypeError(
+                    f"{kind} predicate {p.name!r} {p.op} {p.value!r}: string "
+                    "comparisons are not supported on typed property columns "
+                    "— model string-valued attributes as "
+                    "labels/relationships instead"
+                )
+    for edge in pattern.edges:
+        if edge.hi is None and edge.lo > 1:
+            raise ValueError(
+                f"unbounded traversal {edge._star_text()!r} supports a lower "
+                f"bound of at most 1; give an explicit upper bound "
+                f"(*{edge.lo}..k) — any walk shortens to < n edges, so "
+                "*lo..2n is exact"
+            )
+        if edge.hi is not None and edge.hi > MAX_VARLEN:
+            raise ValueError(
+                f"traversal upper bound {edge.hi} exceeds MAX_VARLEN="
+                f"{MAX_VARLEN} (bounded hops unroll); use an unbounded "
+                "'*' hop for fixed-point reachability"
+            )
 
 
 def _estimate(store, values: Tuple[str, ...], universe: int) -> Tuple[int, float]:
@@ -74,6 +124,7 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
     """
     g = pg._require_graph()
     vstore, estore = pg._vstore, pg._estore
+    validate_pattern(pattern)
 
     # -- 1. chain orientation: start from the more selective end ------------
     reversed_chain = False

@@ -13,7 +13,10 @@ Two pieces, both policy-free about caches (the ``Service`` owns those):
   unchanged).  Each request then runs its own constraint propagation via
   ``execute_plan_with_masks``.  ``list``/``listd`` stores have no batched
   kernel; they fall back to per-request ``execute_plan`` behind the same
-  signature, so callers never branch on backend.
+  signature, so callers never branch on backend.  Variable-length
+  traversal plans (``*`` hops) also run per-request — their propagation
+  is a per-plan frontier loop, not a shareable mask launch — while the
+  result cache still serves them (keys are the extended canonical text).
 
   Q varies with load, and the batched entries specialize on it, so mask
   batches are padded to ``bucketed_q(Q)`` with empty queries (all-False
@@ -67,25 +70,42 @@ def execute_coalesced(pg, plans: Sequence, *, impl: Optional[str] = None,
     ``stats`` (optional mutable dict) is incremented in place:
     ``coalesced_launches`` (batched store calls made), ``coalesced_masks``
     (mask steps that went through them), ``fallback_requests`` (plans that
-    ran the sequential path because the backend has no batched kernel).
+    ran the sequential path because the backend has no batched kernel),
+    ``traversal_fallback_requests`` (variable-length plans, which always
+    run per-request: their propagation is a per-plan ``while_loop``/layer
+    unroll, not a shareable batched mask launch — see plan.has_traversal).
     """
-    n_masks = sum(len(p.mask_steps) for p in plans)
+    out: List = [None] * len(plans)
+    trav = [i for i, p in enumerate(plans) if p.has_traversal]
+    if trav:
+        if stats is not None:
+            stats["traversal_fallback_requests"] = (
+                stats.get("traversal_fallback_requests", 0) + len(trav))
+        for i in trav:
+            out[i] = execute_plan(pg, plans[i])
+    fixed = [i for i, p in enumerate(plans) if not p.has_traversal]
+    if not fixed:
+        return out
+
+    n_masks = sum(len(plans[i].mask_steps) for i in fixed)
     if pg.backend != "arr" or n_masks < 2:
         # list/listd: per-request execution behind the same API (their
         # query_any_batched is a host loop — batching buys nothing); tiny
         # arr groups: a fused launch would fuse one mask, skip the ceremony
         if stats is not None and pg.backend != "arr":
-            stats["fallback_requests"] = stats.get("fallback_requests", 0) + len(plans)
-        return [execute_plan(pg, p) for p in plans]
+            stats["fallback_requests"] = stats.get("fallback_requests", 0) + len(fixed)
+        for i in fixed:
+            out[i] = execute_plan(pg, plans[i])
+        return out
 
     node_jobs = []  # (plan index, slot, values)
     edge_jobs = []
-    for i, p in enumerate(plans):
-        for s in p.mask_steps:
+    for i in fixed:
+        for s in plans[i].mask_steps:
             (node_jobs if s.kind == "node" else edge_jobs).append((i, s.slot, s.values))
 
-    label_masks: List[Dict[int, object]] = [{} for _ in plans]
-    rel_masks: List[Dict[int, object]] = [{} for _ in plans]
+    label_masks: Dict[int, Dict[int, object]] = {i: {} for i in fixed}
+    rel_masks: Dict[int, Dict[int, object]] = {i: {} for i in fixed}
     launches = 0
     if node_jobs:
         rows = _batched_rows(pg._vstore, [j[2] for j in node_jobs], impl)
@@ -101,10 +121,9 @@ def execute_coalesced(pg, plans: Sequence, *, impl: Optional[str] = None,
         stats["coalesced_launches"] = stats.get("coalesced_launches", 0) + launches
         stats["coalesced_masks"] = stats.get("coalesced_masks", 0) + n_masks
 
-    return [
-        execute_plan_with_masks(pg, p, label_masks[i], rel_masks[i])
-        for i, p in enumerate(plans)
-    ]
+    for i in fixed:
+        out[i] = execute_plan_with_masks(pg, plans[i], label_masks[i], rel_masks[i])
+    return out
 
 
 class MicroBatcher:

@@ -1,0 +1,28 @@
+"""repro.traverse — the frontier engine (docs/ARCHITECTURE.md §10).
+
+One jitted, masked frontier-expansion primitive that both the pattern
+matcher's variable-length hops (``-[:rel*1..k]->``, ``*``) and the
+property-aware analytics (``PropGraph.khop`` / ``PropGraph.components``)
+execute through: edge-centric bitmap steps, a CSR small-frontier fast
+path, and a shard_map path that all-reduces the frontier bitmask per step.
+"""
+from repro.traverse.analytics import components_masked, single_hop_filters
+from repro.traverse.engine import (
+    frontier_step,
+    khop_csr,
+    khop_mask,
+    khop_mask_sharded,
+    reach_closure,
+    reach_closure_sharded,
+)
+
+__all__ = [
+    "frontier_step",
+    "khop_mask",
+    "khop_csr",
+    "khop_mask_sharded",
+    "reach_closure",
+    "reach_closure_sharded",
+    "components_masked",
+    "single_hop_filters",
+]

@@ -1,0 +1,126 @@
+"""Property-aware analytics over the frontier engine.
+
+The paper's §I workloads (cybersecurity flows, brain networks) are
+reachability-shaped: "which hosts are within k ``flows``-hops of a flagged
+host", "components of the ``follows`` subgraph".  These run here as
+frontier-engine clients that RESPECT the property layer: every function
+takes (or derives from a single-hop pattern) vertex/edge masks, so labels,
+relationship types and typed-property predicates all filter the traversal
+— no subgraph is ever materialized.
+
+``components_masked`` is the min-label generalization of the Boolean
+frontier step: the same edge-centric relax, over the (min, ≤) semiring
+instead of (OR, AND), iterated with pointer jumping to a fixed point.
+
+``single_hop_filters`` is the shared pattern→masks front door for
+``PropGraph.khop`` / ``PropGraph.components``: a node-only or single-hop
+pattern (``"(a:host)-[:flows {bytes > 0}]->(b)"``) becomes
+(tail mask, head mask, edge mask, direction), the same §VI masks the
+query engine composes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.di import DIGraph
+
+__all__ = ["components_masked", "single_hop_filters"]
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def components_masked(
+    g: DIGraph,
+    vertex_allowed: Optional[jax.Array] = None,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    max_iters: int = 128,
+) -> jax.Array:
+    """Connected components of the masked subgraph: (n,) int32 labels
+    (component id = smallest member vertex id), -1 for vertices outside
+    ``vertex_allowed``.  Edges are treated as undirected; an edge
+    participates iff its own mask AND both endpoint masks are set.
+    Min-hook label propagation + pointer jumping: O(log n) rounds."""
+    n = g.n
+    v_ok = jnp.ones((n,), jnp.bool_) if vertex_allowed is None else vertex_allowed
+    e_ok = jnp.ones((g.m,), jnp.bool_) if edge_allowed is None else edge_allowed
+    e_act = e_ok & v_ok[g.src] & v_ok[g.dst]
+    big = jnp.int32(n)  # sentinel: excluded vertices never hook anything
+    labels0 = jnp.where(v_ok, jnp.arange(n, dtype=jnp.int32), big)
+
+    def body(state):
+        labels, _, it = state
+        m1 = jnp.minimum(labels[g.src], labels[g.dst])
+        upd = jnp.where(e_act, m1, big)
+        new = labels.at[g.src].min(upd)
+        new = new.at[g.dst].min(upd)
+        # pointer jumping — only real labels (< n) chase; the sentinel
+        # would index out of range
+        jumped = new[jnp.clip(new, 0, max(n - 1, 0))]
+        new = jnp.where(new < n, jumped, new)
+        return new, jnp.any(new != labels), it + 1
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    labels, _, _ = jax.lax.while_loop(
+        cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
+    return jnp.where(v_ok, labels, jnp.int32(-1))
+
+
+def single_hop_filters(
+    pg, pattern
+) -> Tuple[Optional[jax.Array], Optional[jax.Array], Optional[jax.Array], int]:
+    """Derive traversal filters from a node-only or single-hop pattern.
+
+    Returns ``(tail_mask, head_mask, edge_mask, direction)`` — each mask
+    ``None`` when unconstrained.  For ``(a:x {p})-[:r {q}]->(b:y)``: an
+    edge is traversable iff it holds ``r`` and satisfies ``q``, its tail
+    (in traversal order — ``<-[...]-`` flips it) matches ``a`` and its
+    head matches ``b``.  A node-only pattern constrains BOTH endpoints
+    (traversal confined to matching vertices).  Multi-hop and
+    variable-length patterns are rejected: k-hop/components take their
+    step structure from ``k``/the fixed point, not from the pattern.
+    """
+    from repro.query import parse
+    from repro.query.planner import validate_pattern
+
+    if pattern is None:
+        return None, None, None, 1
+    pat = parse(pattern) if isinstance(pattern, str) else pattern
+    if pat.hops > 1:
+        raise ValueError(
+            f"khop/components take a node-only or single-hop filter pattern, "
+            f"got {pat.hops} hops in {pat.to_text()!r}")
+    validate_pattern(pat)  # plan-time contract: string predicates etc.
+
+    def node_mask(node):
+        mask = None
+        if node.labels:
+            mask = pg.query_labels(list(node.labels))
+        for p in node.predicates:
+            pm = pg.vertex_predicate_mask(p.name, p.op, p.value)
+            mask = pm if mask is None else mask & pm
+        return mask
+
+    if pat.hops == 0:
+        vm = node_mask(pat.nodes[0])
+        return vm, vm, None, 1
+
+    edge = pat.edges[0]
+    if not edge.is_fixed:
+        raise ValueError(
+            f"variable-length hop {edge.to_text()!r} in a khop/components "
+            "filter: the traversal depth comes from k / the fixed point, "
+            "use a plain single-hop filter")
+    em = None
+    if edge.rels:
+        em = pg.query_relationships(list(edge.rels))
+    for p in edge.predicates:
+        pm = pg.edge_predicate_mask(p.name, p.op, p.value)
+        em = pm if em is None else em & pm
+    return node_mask(pat.nodes[0]), node_mask(pat.nodes[1]), em, edge.direction

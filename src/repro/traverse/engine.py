@@ -1,0 +1,269 @@
+"""Frontier engine — masked frontier expansion over DI (docs/ARCHITECTURE.md §10).
+
+One primitive unifies the query executor's chain propagation and the
+reachability-style analytics (k-hop, connected components): a Boolean
+frontier over the n vertices crossed with a relationship/property-masked
+edge set yields the next frontier.  Everything here is a client of
+:func:`frontier_step`:
+
+  * ``khop_mask``      — union of ≤k expansions (``while_loop`` with
+    early exit; one XLA program for the whole traversal).
+  * ``reach_closure``  — expansion to a fixed point (the ``*`` unbounded
+    pattern hop and reachability closures; bounded by ``n`` rounds).
+  * ``khop_csr``       — the CSR fast path: instead of relaxing all m
+    edges per step (the edge-centric bitmap step), gather only the
+    frontier vertices' adjacency slices off ``seg``/``dst`` — O(|F|·d̂)
+    per step, which beats O(m) while the frontier is small (§10 cost
+    model).  Host-orchestrated BFS levels, bucketed frontier capacity to
+    bound compiles; bitwise-equal to ``khop_mask``.
+  * ``*_sharded``      — the multi-device path: each device relaxes its
+    own block of the edge list under ``shard_map`` and the per-step
+    frontier bitmask is OR-combined with ONE ``pmax`` all-reduce
+    (1 byte/entity/step — the same replication argument as the DIP mask
+    combination, docs/ARCHITECTURE.md §7).
+
+All functions are exact (Boolean algebra, no estimates): sharded, CSR and
+edge-centric paths produce bitwise-identical masks (tests/test_traverse.py).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.di import DIGraph
+
+__all__ = [
+    "frontier_step",
+    "khop_mask",
+    "reach_closure",
+    "khop_csr",
+    "khop_mask_sharded",
+    "reach_closure_sharded",
+]
+
+
+def _ends(g: DIGraph, direction: int):
+    """(tail, head) endpoint arrays for a traversal direction: +1 follows
+    DI edges src→dst, -1 walks them dst→src."""
+    return (g.src, g.dst) if direction == 1 else (g.dst, g.src)
+
+
+def _all_edges(g: DIGraph, edge_allowed) -> jax.Array:
+    return jnp.ones((g.m,), jnp.bool_) if edge_allowed is None else edge_allowed
+
+
+def frontier_step(
+    g: DIGraph,
+    frontier: jax.Array,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """ONE masked expansion: heads of allowed edges whose tail is in the
+    frontier.  (n,) bool × (m,) bool → (n,) bool; exactly one step — the
+    result does NOT include the input frontier.  Traceable (not jitted):
+    compose it inside jitted loops; the public entry points here do."""
+    e_ok = _all_edges(g, edge_allowed)
+    tail, head = _ends(g, direction)
+    out = jnp.zeros_like(frontier).at[head].max(frontier[tail] & e_ok)
+    if undirected:
+        out = out | jnp.zeros_like(frontier).at[tail].max(frontier[head] & e_ok)
+    return out
+
+
+@partial(jax.jit, static_argnames=("k", "direction", "undirected"))
+def khop_mask(
+    g: DIGraph,
+    seed_mask: jax.Array,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    k: int,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """Vertices within ≤k allowed hops of the seeds (seeds included), as one
+    jitted ``while_loop`` with early exit when the mask stops growing."""
+    e_ok = _all_edges(g, edge_allowed)
+
+    def body(state):
+        mask, _, it = state
+        new = mask | frontier_step(g, mask, e_ok, direction=direction,
+                                   undirected=undirected)
+        return new, jnp.any(new != mask), it + 1
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < k)
+
+    mask, _, _ = jax.lax.while_loop(
+        cond, body, (seed_mask, jnp.bool_(True), jnp.int32(0)))
+    return mask
+
+
+@partial(jax.jit, static_argnames=("direction", "undirected", "max_iters"))
+def reach_closure(
+    g: DIGraph,
+    seed_mask: jax.Array,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    direction: int = 1,
+    undirected: bool = False,
+    max_iters: Optional[int] = None,
+) -> jax.Array:
+    """Fixed point of frontier expansion: everything reachable from the
+    seeds in ≥0 allowed hops.  The cumulative mask grows monotonically, so
+    n rounds always suffice (``max_iters`` defaults to that bound)."""
+    bound = (g.n + 1) if max_iters is None else max_iters
+    return khop_mask(g, seed_mask, edge_allowed, k=bound,
+                     direction=direction, undirected=undirected)
+
+
+# ------------------------------------------------------------- CSR fast path
+def _bucket(size: int) -> int:
+    """Frontier capacity bucket: next power of two ≥ size (min 16), so the
+    per-(capacity, max_deg) jitted step compiles O(log n) times, not once
+    per frontier size the data produces."""
+    cap = 16
+    while cap < size:
+        cap <<= 1
+    return cap
+
+
+@partial(jax.jit, static_argnames=("cap", "max_deg"))
+def _csr_step(g: DIGraph, reached: jax.Array, frontier_idx: jax.Array,
+              e_ok: jax.Array, *, cap: int, max_deg: int) -> jax.Array:
+    """Gather the padded adjacency of ``frontier_idx`` (pad entries = n,
+    whose SEG window is empty) and scatter the allowed neighbors into the
+    reached mask.  Work is O(cap · max_deg), independent of m."""
+    lane = jnp.arange(max_deg, dtype=jnp.int32)
+    start = g.seg[frontier_idx]
+    deg = g.seg[jnp.minimum(frontier_idx + 1, g.n)] - start
+    eidx = jnp.clip(start[:, None] + lane[None, :], 0, max(g.m - 1, 0))
+    ok = (lane[None, :] < deg[:, None]) & e_ok[eidx]
+    nbr = jnp.where(ok, g.dst[eidx], g.n)  # pad lanes scatter out of range
+    return reached.at[nbr.reshape(-1)].max(True, mode="drop")
+
+
+def khop_csr(
+    g: DIGraph,
+    seed_ids,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    k: int,
+    max_deg: Optional[int] = None,
+) -> jax.Array:
+    """CSR-gather k-hop: BFS levels, each expanding only the NEW frontier's
+    adjacency slices.  Follows DI edges src→dst (the layout CSR indexes);
+    use ``khop_mask(direction=-1)`` / ``build_reverse_di`` for pull-side
+    walks.  Bitwise-equal to ``khop_mask`` — the union of ≤k expansions is
+    the union of the first k BFS levels."""
+    e_ok = _all_edges(g, edge_allowed)
+    if max_deg is None:
+        max_deg = g.max_deg if g.max_deg >= 0 else int(
+            np.max(np.asarray(g.seg[1:] - g.seg[:-1]), initial=0))
+    max_deg = max(max_deg, 1)
+    seed_ids = np.unique(np.asarray(seed_ids, np.int32))
+    reached = jnp.zeros((g.n,), jnp.bool_).at[jnp.asarray(seed_ids)].set(True)
+    frontier = seed_ids
+    for _ in range(k):
+        if frontier.size == 0 or g.m == 0:
+            break
+        cap = _bucket(frontier.size)
+        fidx = np.full((cap,), g.n, np.int32)
+        fidx[: frontier.size] = frontier
+        new = _csr_step(g, reached, jnp.asarray(fidx), e_ok,
+                        cap=cap, max_deg=max_deg)
+        fresh = np.asarray(new & ~reached)
+        reached = new
+        frontier = np.flatnonzero(fresh).astype(np.int32)
+    return reached
+
+
+# ------------------------------------------------------------- sharded path
+@lru_cache(maxsize=None)
+def _sharded_khop_fn(mesh, direction: int, undirected: bool):
+    """Jitted k-hop whose step runs under ``shard_map``: every device
+    relaxes only its own block of the (padded) edge list into a partial
+    (n,) int8 mask, and ONE ``pmax`` all-reduce ORs the partials — the
+    frontier is the only thing that moves between devices, 1 byte/entity
+    per step.  Cached per (mesh, direction, undirected); jit re-specializes
+    on shapes/k as usual."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import pg_entity_axes, pg_entity_shards
+
+    ax = pg_entity_axes(mesh)
+    p = pg_entity_shards(mesh)
+
+    def local(tail_l, head_l, e_l, f):
+        part = jnp.zeros((f.shape[0],), jnp.int8)
+        part = part.at[head_l].max((f[tail_l] & e_l).astype(jnp.int8))
+        if undirected:
+            part = part.at[tail_l].max((f[head_l] & e_l).astype(jnp.int8))
+        return jax.lax.pmax(part, ax) > 0
+
+    step = shard_map(local, mesh=mesh,
+                     in_specs=(P(ax), P(ax), P(ax), P()), out_specs=P())
+
+    @partial(jax.jit, static_argnames=("k",))
+    def fn(g: DIGraph, seed_mask, e_ok, *, k: int):
+        tail, head = _ends(g, direction)
+        m = tail.shape[0]
+        pad = (-(-max(m, 1) // p)) * p - m
+        # pad edges are disabled (e_ok False) and point at vertex 0 — the
+        # relax reads them but they never scatter a True
+        tail = jnp.pad(tail, (0, pad))
+        head = jnp.pad(head, (0, pad))
+        e_ok = jnp.pad(e_ok, (0, pad))
+
+        def body(state):
+            mask, _, it = state
+            new = mask | step(tail, head, e_ok, mask)
+            return new, jnp.any(new != mask), it + 1
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < k)
+
+        mask, _, _ = jax.lax.while_loop(
+            cond, body, (seed_mask, jnp.bool_(True), jnp.int32(0)))
+        return mask
+
+    return fn
+
+
+def khop_mask_sharded(
+    g: DIGraph,
+    seed_mask: jax.Array,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    k: int,
+    mesh,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """``khop_mask`` with the per-step shard_map/all-reduce layout; the
+    result is bitwise-identical to the single-device path."""
+    fn = _sharded_khop_fn(mesh, direction, undirected)
+    return fn(g, seed_mask, _all_edges(g, edge_allowed), k=k)
+
+
+def reach_closure_sharded(
+    g: DIGraph,
+    seed_mask: jax.Array,
+    edge_allowed: Optional[jax.Array] = None,
+    *,
+    mesh,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """Sharded fixed-point expansion (n rounds always suffice)."""
+    return khop_mask_sharded(g, seed_mask, edge_allowed, k=g.n + 1,
+                             mesh=mesh, direction=direction,
+                             undirected=undirected)

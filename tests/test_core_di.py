@@ -64,6 +64,49 @@ def test_edge_lookup_missing():
     assert int(edge_lookup(g, jnp.array([0]), jnp.array([2]))[0]) == -1
 
 
+def _edge_lookup_scan_oracle(g, eu, ev):
+    """The O(m·q) full scan edge_lookup replaces — the regression anchor."""
+    s, d = np.asarray(g.src), np.asarray(g.dst)
+    out = np.full(len(eu), -1, np.int32)
+    for i, (u, v) in enumerate(zip(eu, ev)):
+        hits = np.flatnonzero((s == u) & (d == v))
+        if hits.size:
+            out[i] = hits[0]
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_edge_lookup_equals_full_scan(seed):
+    """Pin the cached-max_deg binary search bitwise to the O(m·q) scan,
+    over present, absent and out-of-window pairs."""
+    src, dst = _random_edges(250, seed, pool=40)
+    g = build_di(src, dst)
+    rng = np.random.default_rng(seed + 99)
+    eu = rng.integers(0, g.n, 400).astype(np.int32)
+    ev = rng.integers(0, g.n, 400).astype(np.int32)
+    got = np.asarray(edge_lookup(g, jnp.asarray(eu), jnp.asarray(ev)))
+    assert (got == _edge_lookup_scan_oracle(g, eu, ev)).all()
+
+
+def test_max_deg_cached_and_propagated():
+    """build_di/build_reverse_di stash the widest adjacency window (the
+    sort-once statistic edge_lookup sizes its binary search with)."""
+    src, dst = _random_edges(200, 5, pool=30)
+    g = build_di(src, dst)
+    seg = np.asarray(g.seg)
+    assert g.max_deg == int(np.max(seg[1:] - seg[:-1]))
+    rg = build_reverse_di(g)
+    rseg = np.asarray(rg.seg)
+    assert rg.max_deg == int(np.max(rseg[1:] - rseg[:-1]))
+    # a hand-built graph without the cache still looks up correctly
+    import dataclasses
+
+    g_unknown = dataclasses.replace(g, max_deg=-1)
+    a = np.asarray(edge_lookup(g, g.src, g.dst))
+    b = np.asarray(edge_lookup(g_unknown, g.src, g.dst))
+    assert (a == b).all() and (a == np.arange(g.m)).all()
+
+
 def test_neighbors_padded():
     g = build_di([0, 0, 0, 1], [1, 2, 3, 2], normalize=False, n=4)
     nbrs, valid = neighbors_padded(g, jnp.array(0), max_deg=5)

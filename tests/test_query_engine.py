@@ -31,11 +31,51 @@ from repro.query.planner import BUDGET_SEL_CUTOFF
         "(a)<-[r:follows|likes]-(b:place {x < -3})",
         "(a:l1)-[:r1]->(b)-[e2:r2 {w != 0.5}]->(c:l2|l3)",
         "(a {score <= 1.5})",
+        "(a:x)-[:r*1..3]->(b)",
+        "(a)-[v:r|s*]->(b:y)",
+        "(a)<-[:r*2..]-(b)",
+        "(a)-[:r*3 {w > 0.5}]->(b)",
+        "(a)-[:r*0..2]->(b)",
     ],
 )
 def test_parse_roundtrip(text):
     pat = parse(text)
     assert parse(pat.to_text()) == pat
+
+
+def test_parse_star_bounds():
+    assert parse("(a)-[:r*]->(b)").edges[0].lo == 1
+    assert parse("(a)-[:r*]->(b)").edges[0].hi is None
+    assert (parse("(a)-[:r*..4]->(b)").edges[0].lo,
+            parse("(a)-[:r*..4]->(b)").edges[0].hi) == (1, 4)
+    assert (parse("(a)-[:r*2]->(b)").edges[0].lo,
+            parse("(a)-[:r*2]->(b)").edges[0].hi) == (2, 2)
+    assert parse("(a)-[:r]->(b)").edges[0].is_fixed
+    assert not parse("(a)-[:r*1..2]->(b)").edges[0].is_fixed
+    # bounds keep float literals intact: '1.' is still a number elsewhere
+    assert parse("(a {x > 1.})").nodes[0].predicates[0].value == 1.0
+
+
+@pytest.mark.parametrize("bad", [
+    "(a)-[:r*3..1]->(b)",      # upper below lower
+    "(a)-[:r*1.5]->(b)",       # non-integer bound
+    "(a)-[:r*-2]->(b)",        # negative bound
+    "(a:x*2)-[:r]->(b)",       # '*' is edge-only syntax
+])
+def test_parse_star_errors(bad):
+    with pytest.raises(ParseError):
+        parse(bad)
+
+
+def test_parse_duplicate_variable_raises():
+    """Repeated variables would read as an equality join, which the engine
+    does not implement — rejected at parse time instead of silently
+    OR-ing the masks (the old documented wart)."""
+    for bad in ["(a)-[:r]->(a)", "(a)-[x:r]->(b)<-[x:s]-(c)",
+                "(v)-[v:r]->(b)"]:
+        with pytest.raises(ParseError, match="bound more than once"):
+            parse(bad)
+    parse("(a)-[:r]->(b)-[:s]->(c)")  # anonymous slots never collide
 
 
 def test_parse_ast_shape():
@@ -270,9 +310,12 @@ def test_match_unknown_property_raises(pg):
 
 def test_match_string_predicate_raises(pg):
     """Strings parse as literals but columns are numeric — ==/!= would
-    silently broadcast to a scalar, so execution must reject them."""
+    silently broadcast to a scalar, so they are rejected at PLAN time
+    (naming the column), before any store work or server round-trip."""
     with pytest.raises(TypeError, match="labels/relationships"):
         pg.match('(a {age != "old"})')
+    with pytest.raises(TypeError, match="age"):
+        pg.explain('(a {age != "old"})')  # explain plans too — no execution
 
 
 def test_match_result_is_pytree(pg):

@@ -29,6 +29,7 @@ PATTERNS = (
     "(a:l1|l2)-[:follows]->(b:l3)",
     "(a:l1|l2 {age > 30})-[:follows]->(b)",
     "(a)<-[:likes]-(b:l0|l4)",
+    "(a:l1)-[:follows*1..3]->(b:l3)",  # var-length: frontier layers on mesh
 )
 
 

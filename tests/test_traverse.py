@@ -1,0 +1,474 @@
+"""Frontier engine + variable-length patterns (src/repro/traverse/,
+docs/ARCHITECTURE.md §10).
+
+The contracts under test:
+
+* ``match('(a:x)-[:r*lo..hi]->(b:y)')`` is bitwise-equal to brute-force
+  WALK enumeration (the documented semantics: traversals may revisit
+  vertices/edges) on all three DIP backends, across bounds, directions,
+  predicates and mixed fixed/var chains — seeded randomized sweep, the
+  property-based check the acceptance criterion names.
+* fixed-point ``*`` equals the iterated bounded form ``*1..2n`` at
+  convergence (any walk shortens to < n edges).
+* the engine's three execution paths — edge-centric ``khop_mask``, the
+  CSR small-frontier fast path ``khop_csr``, and the shard_map all-reduce
+  path — produce identical masks; sharded ≡ single-device is re-proved in
+  a fresh P=8 subprocess (like tests/test_shard_pg.py).
+* ``PropGraph.khop``/``components`` respect label/relationship/property
+  filters (vs. numpy BFS / union-find oracles).
+* the service serves traversal patterns: coalescer falls back per-request
+  (``traversal_fallback_requests``), result cache hits and dies on
+  mutation; the wire path returns bitwise-identical masks and surfaces
+  plan-time errors (string predicates) with the real exception type.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.graph import connected_components
+from repro.query import ParseError, parse
+from repro.query.planner import MAX_VARLEN
+from repro.traverse import (
+    components_masked,
+    frontier_step,
+    khop_csr,
+    khop_mask,
+    reach_closure,
+)
+
+BACKENDS = ("arr", "list", "listd")
+
+
+def _build(backend, *, n=14, m=40, seed=0, rels=("r", "s"),
+           labels=("x", "y", "z"), props=False):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    pg = PropGraph(backend=backend).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    lab = rng.choice(labels, size=len(nodes))
+    pg.add_node_labels(nodes, lab)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rel = rng.choice(rels, size=len(es))
+    pg.add_edge_relationships(nodes[es], nodes[ed], rel)
+    if props:
+        pg.add_node_properties("age", nodes,
+                               rng.integers(0, 60, len(nodes)).astype(np.int32))
+        pg.add_edge_properties("w", nodes[es], nodes[ed],
+                               rng.random(len(es)).astype(np.float32))
+    pg._labels_np, pg._rels_np = lab, rel
+    return pg
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+# -------------------------------------------------------------- engine core
+def test_frontier_step_matches_numpy():
+    pg = _build("arr", seed=3)
+    g = pg.graph
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    rng = np.random.default_rng(0)
+    f = rng.random(g.n) > 0.6
+    e_ok = rng.random(g.m) > 0.3
+    fwd = np.zeros(g.n, bool)
+    np.logical_or.at(fwd, ed[f[es] & e_ok], True)
+    assert _eq(frontier_step(g, f, e_ok), fwd)
+    bwd = np.zeros(g.n, bool)
+    np.logical_or.at(bwd, es[f[ed] & e_ok], True)
+    assert _eq(frontier_step(g, f, e_ok, direction=-1), bwd)
+    und = fwd | bwd
+    assert _eq(frontier_step(g, f, e_ok, undirected=True), und)
+
+
+def _np_khop(es, ed, n, seed_ids, e_ok, k, direction=1, undirected=False):
+    mask = np.zeros(n, bool)
+    mask[seed_ids] = True
+    for _ in range(k):
+        nm = mask.copy()
+        if direction == 1 or undirected:
+            np.logical_or.at(nm, ed[mask[es] & e_ok], True)
+        if direction == -1 or undirected:
+            np.logical_or.at(nm, es[mask[ed] & e_ok], True)
+        if (nm == mask).all():
+            break
+        mask = nm
+    return mask
+
+
+@pytest.mark.parametrize("k", [0, 1, 3, 7])
+def test_khop_mask_equals_csr_equals_numpy(k):
+    pg = _build("arr", n=25, m=90, seed=5)
+    g = pg.graph
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    rng = np.random.default_rng(k)
+    e_ok = rng.random(g.m) > 0.4
+    seeds = rng.integers(0, g.n, 3)
+    ref = _np_khop(es, ed, g.n, seeds, e_ok, k)
+    seed_mask = np.zeros(g.n, bool)
+    seed_mask[seeds] = True
+    assert _eq(khop_mask(g, seed_mask, e_ok, k=k), ref)
+    assert _eq(khop_csr(g, seeds, e_ok, k=k), ref)
+    # closure = khop at n steps
+    if k == 7:
+        assert _eq(reach_closure(g, seed_mask, e_ok),
+                   _np_khop(es, ed, g.n, seeds, e_ok, g.n))
+
+
+def _np_components(es, ed, n, e_ok, v_ok):
+    parent = np.arange(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for i in np.flatnonzero(e_ok & v_ok[es] & v_ok[ed]):
+        a, b = find(es[i]), find(ed[i])
+        if a != b:
+            parent[max(a, b)] = min(a, b)
+    lab = np.array([find(x) for x in range(n)], dtype=np.int64)
+    out = np.full(n, -1, np.int64)
+    for c in np.unique(lab[v_ok]) if v_ok.any() else []:
+        members = np.flatnonzero((lab == c) & v_ok)
+        out[members] = members.min()
+    return out
+
+
+def test_components_masked_equals_union_find():
+    pg = _build("arr", n=30, m=70, seed=9)
+    g = pg.graph
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    rng = np.random.default_rng(2)
+    e_ok = rng.random(g.m) > 0.5
+    v_ok = rng.random(g.n) > 0.3
+    assert _eq(components_masked(g, v_ok, e_ok),
+               _np_components(es, ed, g.n, e_ok, v_ok))
+    # unmasked form == the public structural kernel
+    all_e, all_v = np.ones(g.m, bool), np.ones(g.n, bool)
+    assert _eq(connected_components(g),
+               _np_components(es, ed, g.n, all_e, all_v))
+
+
+# ----------------------------------------------- var-length ≡ brute force
+def _brute_varlen(pg, l_a, rel, l_b, lo, hi, direction=1, edge_pred=None):
+    """Exhaustive WALK enumeration (revisits allowed) — the documented
+    ``*lo..hi`` semantics; exponential, tiny graphs only."""
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    n, m = pg.n_vertices, pg.n_edges
+    ca = np.isin(pg._labels_np, l_a)
+    cb = np.isin(pg._labels_np, l_b)
+    e_ok = np.isin(pg._rels_np, rel)
+    if edge_pred is not None:
+        e_ok = e_ok & edge_pred
+    adj = [[] for _ in range(n)]
+    for i in range(m):
+        t, h = (es[i], ed[i]) if direction == 1 else (ed[i], es[i])
+        if e_ok[i]:
+            adj[t].append((i, h))
+    vexp = np.zeros(n, bool)
+    eexp = np.zeros(m, bool)
+
+    def rec(v, depth, vs, epath):
+        if lo <= depth <= hi and cb[v]:
+            vexp[vs] = True
+            eexp[epath] = True
+        if depth == hi:
+            return
+        for ei, w in adj[v]:
+            rec(w, depth + 1, vs + [w], epath + [ei])
+
+    for v in np.flatnonzero(ca):
+        rec(int(v), 0, [int(v)], [])
+    return vexp, eexp
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_varlen_match_equals_brute_force(backend, seed):
+    """The acceptance-criterion sweep: several bounds × both directions on
+    random graphs, every backend, bitwise (vertex, edge AND bindings)."""
+    pg = _build(backend, seed=seed)
+    for lo, hi in [(1, 2), (1, 3), (2, 4), (0, 2), (3, 3)]:
+        for arrow_l, arrow_r, direction in (("-", "->", 1), ("<-", "-", -1)):
+            star = f"*{lo}..{hi}" if lo != hi else f"*{lo}"
+            pat = f"(a:x){arrow_l}[v:r{star}]{arrow_r}(b:y|z)"
+            res = pg.match(pat)
+            vexp, eexp = _brute_varlen(pg, ["x"], ["r"], ["y", "z"],
+                                       lo, hi, direction)
+            assert _eq(res.vertex_mask, vexp), (pat, seed)
+            assert _eq(res.edge_mask, eexp), (pat, seed)
+            assert _eq(res.bindings()["v"], eexp), (pat, seed)
+
+
+def test_varlen_with_edge_predicate():
+    pg = _build("arr", seed=4, props=True)
+    w = np.asarray(pg.edge_props["w"][0])
+    res = pg.match("(a:x)-[:r*1..3 {w > 0.4}]->(b:y)")
+    vexp, eexp = _brute_varlen(pg, ["x"], ["r"], ["y"], 1, 3,
+                               edge_pred=w > 0.4)
+    assert _eq(res.vertex_mask, vexp)
+    assert _eq(res.edge_mask, eexp)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fixpoint_star_equals_iterated_bounded(backend):
+    """``*`` ≡ ``*1..2n``: any walk shortens to a path of < n edges, and
+    the participation masks need at most two of them stitched."""
+    pg = _build(backend, seed=6)
+    cap = min(2 * pg.n_vertices, MAX_VARLEN)
+    r1 = pg.match("(a:x)-[:r*]->(b:y)")
+    r2 = pg.match(f"(a:x)-[:r*1..{cap}]->(b:y)")
+    assert _eq(r1.vertex_mask, r2.vertex_mask)
+    assert _eq(r1.edge_mask, r2.edge_mask)
+    # and *0.. includes the zero-length (a == b) coincidences
+    r0 = pg.match("(a:x)-[:r*0..]->(b:x)")
+    both = np.asarray(pg.query_labels(["x"]))
+    assert bool((np.asarray(r0.vertex_mask) >= both).all())
+
+
+def test_varlen_in_mixed_chain_equals_brute_force():
+    pg = _build("arr", n=12, m=35, seed=8)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    n, m = pg.n_vertices, pg.n_edges
+    cx = pg._labels_np == "x"
+    cy = pg._labels_np == "y"
+    rm = pg._rels_np == "r"
+    sm = pg._rels_np == "s"
+    adj_r = [[] for _ in range(n)]
+    adj_s = [[] for _ in range(n)]
+    for i in range(m):
+        (adj_r if rm[i] else adj_s)[es[i]].append((i, ed[i]))
+    vexp = np.zeros(n, bool)
+    eexp = np.zeros(m, bool)
+    for a in np.flatnonzero(cx):
+        stack = [(int(a), 0, [int(a)], [])]
+        while stack:
+            v, d, vs, ep = stack.pop()
+            if 1 <= d <= 2:
+                for ei, c in adj_s[v]:
+                    if cy[c]:
+                        vexp[vs + [c]] = True
+                        eexp[ep + [ei]] = True
+            if d < 2:
+                for ei, w in adj_r[v]:
+                    stack.append((w, d + 1, vs + [w], ep + [ei]))
+    res = pg.match("(a:x)-[:r*1..2]->(b)-[:s]->(c:y)")
+    assert _eq(res.vertex_mask, vexp)
+    assert _eq(res.edge_mask, eexp)
+
+
+def test_varlen_planner_reorientation_is_invisible():
+    """A selective right end reverses the chain; the match set must not
+    change (walk patterns reverse cleanly)."""
+    pg = _build("arr", seed=10, labels=("common",))
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes[:2], ["needle", "needle"])
+    pg._labels_np = np.where(np.isin(np.arange(pg.n_vertices), [0, 1]),
+                             "needle", "common")
+    assert "reversed" in pg.explain("(a:common)-[:r*1..3]->(b:needle)")
+    res = pg.match("(a:common)-[:r*1..3]->(b:needle)")
+    vexp, eexp = _brute_varlen(pg, ["common"], ["r"], ["needle"], 1, 3)
+    assert _eq(res.vertex_mask, vexp)
+    assert _eq(res.edge_mask, eexp)
+
+
+def test_varlen_plan_time_rejections():
+    pg = _build("arr")
+    with pytest.raises(ValueError, match="upper bound"):
+        pg.explain("(a)-[:r*2..]->(b)")  # unbounded needs lo ≤ 1
+    with pytest.raises(ValueError, match="MAX_VARLEN"):
+        pg.explain(f"(a)-[:r*1..{MAX_VARLEN + 1}]->(b)")
+    assert "fixed-point" in pg.explain("(a)-[:r*]->(b)")
+    assert "unrolled" in pg.explain("(a)-[:r*1..3]->(b)")
+
+
+# ----------------------------------------------------- PropGraph analytics
+def test_khop_respects_all_filter_layers():
+    pg = _build("arr", n=30, m=120, seed=11, props=True)
+    g = pg.graph
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    nodes = np.asarray(g.node_map)
+    seeds = nodes[:4]
+    sid = pg._vertex_internal(seeds)
+    w = np.asarray(pg.edge_props["w"][0])
+    e_ok = (pg._rels_np == "r") & (w > 0.3)
+    cb = pg._labels_np == "y"
+    ref = _np_khop(es, ed, g.n, sid, e_ok & cb[ed], 3)
+    got = pg.khop(seeds, 3, pattern="(a)-[:r {w > 0.3}]->(b:y)")
+    assert _eq(got, ref)
+    # reverse-hop pattern walks edges dst→src
+    ref_r = _np_khop(es, ed, g.n, sid, (pg._rels_np == "r"), 2, direction=-1)
+    got_r = pg.khop(seeds, 2, pattern="(a)<-[:r]-(b)")
+    assert _eq(got_r, ref_r)
+    # node-only pattern confines traversal to matching vertices
+    vok = pg._labels_np == "x"
+    ref_n = _np_khop(es, ed, g.n, sid, vok[es] & vok[ed], 2)
+    got_n = pg.khop(seeds, 2, pattern="(v:x)")
+    assert _eq(got_n, ref_n)
+    # undirected expansion
+    ref_u = _np_khop(es, ed, g.n, sid, pg._rels_np == "r", 2, undirected=True)
+    got_u = pg.khop(seeds, 2, pattern="(a)-[:r]->(b)", undirected=True)
+    assert _eq(got_u, ref_u)
+    with pytest.raises(ValueError, match="unknown impl"):
+        pg.khop(seeds, 2, impl="bitmap")
+    with pytest.raises(ValueError, match="single-hop"):
+        pg.khop(seeds, 2, pattern="(a)-[:r]->(b)-[:s]->(c)")
+    with pytest.raises(ValueError, match="variable-length"):
+        pg.khop(seeds, 2, pattern="(a)-[:r*1..2]->(b)")
+
+
+def test_khop_csr_impl_bitwise_equal():
+    pg = _build("list", n=40, m=160, seed=12)
+    nodes = np.asarray(pg.graph.node_map)
+    seeds = nodes[:2]
+    for k in (1, 2, 5):
+        a = pg.khop(seeds, k, pattern="(a)-[:r]->(b)")
+        b = pg.khop(seeds, k, pattern="(a)-[:r]->(b)", impl="csr")
+        assert _eq(a, b), k
+
+
+def test_components_pattern_filters():
+    pg = _build("arr", n=30, m=80, seed=13)
+    g = pg.graph
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    e_ok = pg._rels_np == "r"
+    v_all = np.ones(g.n, bool)
+    assert _eq(pg.components("(a)-[:r]->(b)"),
+               _np_components(es, ed, g.n, e_ok, v_all))
+    vok = np.isin(pg._labels_np, ["x", "y"])
+    got = pg.components("(a:x|y)-[:r]->(b:x|y)")
+    assert _eq(got, _np_components(es, ed, g.n, e_ok, vok))
+    assert bool((np.asarray(got)[~vok] == -1).all())
+    # match() composes with components: the flagged-subgraph CC story
+    labels = np.asarray(pg.components(None))
+    assert _eq(labels, _np_components(es, ed, g.n, np.ones(g.m, bool), v_all))
+
+
+# ------------------------------------------------------- sharded subprocess
+_SUBPROCESS_SCRIPT = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 8, len(jax.devices())
+import sys
+sys.path.insert(0, {src!r})
+from repro.core import PropGraph
+from repro.launch.mesh import make_entity_mesh
+
+rng = np.random.default_rng(7)
+src = rng.integers(0, 60, 300)
+dst = rng.integers(0, 60, 300)
+mesh = make_entity_mesh()
+assert mesh.devices.size == 8
+for be in ("arr", "list", "listd"):
+    pg1 = PropGraph(backend=be).add_edges_from(src, dst)
+    pg2 = PropGraph(backend=be, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg1.graph.node_map)
+    labels = rng.choice(["x", "y", "z"], size=len(nodes))
+    es, ed = np.asarray(pg1.graph.src), np.asarray(pg1.graph.dst)
+    rels = rng.choice(["r", "s"], size=len(es))
+    for pg in (pg1, pg2):
+        pg.add_node_labels(nodes, labels)
+        pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    for pat in ("(a:x)-[:r*1..3]->(b:y)", "(a:x)-[v:r*]->(b:y|z)"):
+        r1, r2 = pg1.match(pat), pg2.match(pat)
+        assert (np.asarray(r1.vertex_mask) == np.asarray(r2.vertex_mask)).all(), (be, pat)
+        assert (np.asarray(r1.edge_mask) == np.asarray(r2.edge_mask)).all(), (be, pat)
+    seeds = nodes[:3]
+    a = np.asarray(pg1.khop(seeds, 3, pattern="(a)-[:r]->(b)"))
+    b = np.asarray(pg2.khop(seeds, 3, pattern="(a)-[:r]->(b)"))
+    assert (a == b).all(), be
+    c1 = np.asarray(pg1.components("(a)-[:r]->(b)"))
+    c2 = np.asarray(pg2.components("(a)-[:r]->(b)"))
+    assert (c1 == c2).all(), be
+print("TRAVERSE SHARD8 OK")
+"""
+
+
+def test_sharded_traversal_eight_devices_subprocess():
+    """P=8 sharded ≡ single-device for var-length match, khop and
+    components — the frontier all-reduce path, guaranteed multi-device
+    via a fresh interpreter (same harness as test_shard_pg)."""
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_SCRIPT.format(src=os.path.abspath(src_dir))],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "TRAVERSE SHARD8 OK" in proc.stdout
+
+
+# ------------------------------------------------------------- service/wire
+def test_service_traversal_fallback_cache_and_invalidation():
+    from repro.service import Service
+
+    pg = _build("arr", n=30, m=120, seed=14)
+    nodes = np.asarray(pg.graph.node_map)
+    pat = "(a:x)-[:r*1..3]->(b:y)"
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        ref = pg.match(pat)
+        got = svc.query("g", pat)
+        assert _eq(got.edge_mask, ref.edge_mask)
+        svc.query("g", pat)  # second hit comes from the result cache
+        st = svc.stats()
+        assert st.get("result_hits", 0) >= 1, st
+        assert st.get("traversal_fallback_requests", 0) >= 1, st
+        # mixed batch: fixed plans still coalesce around the traversal
+        outs = svc.query_batch("g", [pat, "(a:x)-[:r]->(b:y)",
+                                     "(a:y)-[:s]->(b)"])
+        assert _eq(outs[1].edge_mask, pg.match("(a:x)-[:r]->(b:y)").edge_mask)
+        assert svc.stats().get("coalesced_launches", 0) >= 1
+        # mutation kills the cached traversal result
+        pg.add_node_labels(nodes[:5], ["y"] * 5)
+        got2 = svc.query("g", pat)
+        assert _eq(got2.edge_mask, pg.match(pat).edge_mask)
+        assert svc.stats().get("invalidated_results", 0) > 0
+
+
+def test_wire_traversal_and_plan_time_errors():
+    """PGClient round-trip: var-length masks bitwise, and the plan-time
+    string-predicate TypeError (naming the column) arrives BEFORE any
+    execution — the satellite's over-the-wire contract."""
+    from repro.service import PGClient, PGServer, Service
+
+    pg = _build("arr", n=30, m=120, seed=15, props=True)
+    svc = Service()
+    svc.add_graph("g", pg)
+    server = PGServer(svc, port=0).start()
+    try:
+        with PGClient(port=server.port) as c:
+            pat = "(a:x)-[:r*1..4]->(b:y)"
+            ref = pg.match(pat)
+            got = c.query("g", pat)
+            assert _eq(got.vertex_mask, ref.vertex_mask)
+            assert _eq(got.edge_mask, ref.edge_mask)
+            gb, rb = got.bindings(), ref.bindings()
+            assert sorted(gb) == sorted(rb)
+            for k in rb:
+                assert _eq(gb[k], rb[k]), k
+            with pytest.raises(TypeError, match="labels/relationships"):
+                c.query("g", '(a {age == "old"})-[:r]->(b)')
+            with pytest.raises(TypeError, match="age"):
+                c.explain("g", '(a {age == "old"})')
+            # duplicate variables are a parse error, also pre-execution
+            try:
+                c.query("g", "(a)-[:r]->(a)")
+            except Exception as e:  # noqa: BLE001 — ParseError crosses as
+                assert "bound more than once" in str(e)  # its message
+            else:
+                raise AssertionError("duplicate variable should fail")
+            assert c.ping()  # session survived all failed requests
+    finally:
+        server.close()
+        svc.close()
