@@ -1,0 +1,209 @@
+"""Streaming-ingest benchmark: the overlay delta write path vs the rebuild
+path it replaces (docs/ARCHITECTURE.md §11).
+
+The pre-overlay repro (and Arachne itself, PAPER.md §V) absorbs a late-
+arriving edge batch by re-running the whole ingest pipeline: re-sort the DI
+arrays, rebuild both DIP stores, re-intern every attribute.  The overlay
+subsystem appends the batch to an ``EdgeDelta`` / ``AttrDelta`` instead and
+lets queries union ``base | delta`` masks.  This benchmark streams the same
+edge batches down both paths and times each batch.
+
+Rows (JSON via ``benchmarks.common.emit_json``; run.py pins
+``BENCH_ingest.json``):
+
+  * ``ingest_delta_batch_{backend}``   — median per-batch wall time of
+    ``insert_edges`` + ``add_edge_relationships`` on a sealed graph (the
+    delta path), measured over the late batches (index ≥ 8) where the
+    rebuild path's cost has fully compounded; ``speedup`` = rebuild/delta.
+  * ``ingest_rebuild_batch_{backend}`` — the same batches absorbed by
+    ``add_edges_from`` of everything-so-far + full re-attribution.
+  * ``read_under_writes_{backend}``    — warm ``match()`` latency right
+    after a delta batch landed (the combined base++delta view), and
+  * ``read_baseline_{backend}``        — the same query on the static
+    pre-stream graph, so the overlay's read-side tax is a visible row.
+
+Before any timing, the full stream is verified: after ``compact()`` the
+delta-path graph's ``match`` / ``khop`` / ``components`` answers are
+bitwise-identical to a from-scratch build of the complete edge list on all
+three backends — compaction is a pure layout change.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede first jax init to take effect
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+
+BACKENDS = ("arr", "list", "listd")
+PATTERN = "(a:l1)-[:follows]->(b:l2)"
+RELS = ("follows", "likes")
+N_BATCHES = 12
+TAIL_FROM = 8  # acceptance window: per-batch medians over batches ≥ this
+
+
+def _build(backend: str, m: int, seed: int = 0):
+    from repro.core import PropGraph
+    from repro.graph import random_uniform_graph
+
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes, rng.choice(["l0", "l1", "l2"], size=len(nodes)))
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.add_edge_relationships(nodes[es], nodes[ed],
+                              rng.choice(RELS, size=len(es)))
+    return pg
+
+
+def _make_batches(nodes: np.ndarray, batch: int, seed: int):
+    """Edge batches over the EXISTING vertex universe (the delta path's
+    contract; growing the universe is add_edges_from's bulk rebuild)."""
+    rng = np.random.default_rng(seed + 1)
+    out = []
+    for _ in range(N_BATCHES):
+        bs = rng.choice(nodes, size=batch)
+        bd = rng.choice(nodes, size=batch)
+        out.append((bs, bd, rng.choice(RELS, size=batch)))
+    return out
+
+
+def _attribute_all(pg, labels, base_rels, batches, upto: int) -> None:
+    """Re-apply every attribute after a rebuild: base labels/relationships
+    (addressed by endpoint pair, exactly as the delta path received them)
+    plus the relationships of all batches streamed so far."""
+    pg.add_node_labels(np.asarray(pg.graph.node_map), labels)
+    pg.add_edge_relationships(*base_rels)
+    for bs, bd, br in batches[:upto]:
+        pg.add_edge_relationships(bs, bd, br)
+
+
+def _verify_compaction(backend: str, m: int, batch: int, seed: int) -> None:
+    """Stream → compact ≡ from-scratch build, bitwise, on every surface."""
+    import jax
+
+    pg = _build(backend, m, seed=seed)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    # replay _build's rng stream so the reference gets identical attributes
+    rng = np.random.default_rng(seed)
+    labels = rng.choice(["l0", "l1", "l2"], size=len(nodes))
+    base_rel_vals = rng.choice(RELS, size=len(es))
+    batches = _make_batches(nodes, batch, seed)
+
+    jax.block_until_ready(pg.match(PATTERN).edge_mask)  # seal the stores
+    for bs, bd, br in batches:
+        pg.insert_edges(bs, bd)
+        pg.add_edge_relationships(bs, bd, br)
+    pg.compact()
+    assert not pg.has_overlay()
+
+    from repro.core import PropGraph
+
+    all_src = np.concatenate([np.asarray(nodes[es])]
+                             + [b[0] for b in batches])
+    all_dst = np.concatenate([np.asarray(nodes[ed])]
+                             + [b[1] for b in batches])
+    ref = PropGraph(backend=backend).add_edges_from(all_src, all_dst)
+    ref.add_node_labels(nodes, labels)  # batches reuse the same universe
+    ref.add_edge_relationships(nodes[es], nodes[ed], base_rel_vals)
+    for bs, bd, br in batches:
+        ref.add_edge_relationships(bs, bd, br)
+
+    got, want = pg.match(PATTERN), ref.match(PATTERN)
+    assert (np.asarray(got.vertex_mask) == np.asarray(want.vertex_mask)).all(), backend
+    assert (np.asarray(got.edge_mask) == np.asarray(want.edge_mask)).all(), backend
+    seeds = nodes[:16]
+    assert (np.asarray(pg.khop(seeds, 3)) == np.asarray(ref.khop(seeds, 3))).all(), backend
+    assert (np.asarray(pg.components("(a)-[:follows]->(b)"))
+            == np.asarray(ref.components("(a)-[:follows]->(b)"))).all(), backend
+    print(f"# compaction ≡ from-scratch verified ({backend})")
+
+
+def run(m: int = 20_000, batch: int = 256, seed: int = 0,
+        json_path: Optional[str] = None) -> None:
+    import jax
+
+    for backend in BACKENDS:
+        _verify_compaction(backend, min(m, 5_000), batch, seed)
+
+    for backend in BACKENDS:
+        base = _build(backend, m, seed=seed)
+        nodes = np.asarray(base.graph.node_map)
+        es, ed = np.asarray(base.graph.src), np.asarray(base.graph.dst)
+        rng = np.random.default_rng(seed)  # _build's stream, replayed
+        labels = rng.choice(["l0", "l1", "l2"], size=len(nodes))
+        base_rels = (nodes[es], nodes[ed], rng.choice(RELS, size=len(es)))
+        batches = _make_batches(nodes, batch, seed)
+
+        # ---- read baseline on the static graph (sealed stores, no delta)
+        base_read = time_call(lambda: base.match(PATTERN).edge_mask)
+        emit_json(f"read_baseline_{backend}", base_read, path=json_path,
+                  m=m, method="warm match, no overlay")
+
+        # ---- delta path: sealed graph absorbs batches as appends
+        pg = _build(backend, m, seed=seed)
+        jax.block_until_ready(pg.match(PATTERN).edge_mask)  # seal
+        delta_times, read_times = [], []
+        for bs, bd, br in batches:
+            t0 = time.perf_counter()
+            pg.insert_edges(bs, bd)
+            pg.add_edge_relationships(bs, bd, br)
+            delta_times.append(time.perf_counter() - t0)
+            # warm read latency against the combined base++delta view
+            read_times.append(time_call(
+                lambda: pg.match(PATTERN).edge_mask, warmup=1, iters=3))
+        delta_med = float(np.median(delta_times[TAIL_FROM:]))
+
+        # ---- rebuild path: every batch re-runs the whole ingest pipeline
+        pg2 = _build(backend, m, seed=seed)
+        jax.block_until_ready(pg2.match(PATTERN).edge_mask)
+        acc_src = [nodes[es]]
+        acc_dst = [nodes[ed]]
+        rebuild_times = []
+        for i, (bs, bd, br) in enumerate(batches):
+            acc_src.append(bs)
+            acc_dst.append(bd)
+            t0 = time.perf_counter()
+            pg2.add_edges_from(np.concatenate(acc_src),
+                               np.concatenate(acc_dst))
+            _attribute_all(pg2, labels, base_rels, batches, i + 1)
+            rebuild_times.append(time.perf_counter() - t0)
+        rebuild_med = float(np.median(rebuild_times[TAIL_FROM:]))
+
+        speedup = rebuild_med / max(delta_med, 1e-12)
+        emit_json(f"ingest_delta_batch_{backend}", delta_med, path=json_path,
+                  m=m, batch=batch, batches=N_BATCHES, tail_from=TAIL_FROM,
+                  speedup=round(speedup, 1),
+                  method="insert_edges + add_edge_relationships (delta)")
+        emit_json(f"ingest_rebuild_batch_{backend}", rebuild_med,
+                  path=json_path, m=m, batch=batch, batches=N_BATCHES,
+                  tail_from=TAIL_FROM,
+                  method="add_edges_from of all-so-far + re-attribution")
+        emit_json(f"read_under_writes_{backend}",
+                  float(np.median(read_times)), path=json_path, m=m,
+                  batch=batch, overlay_edges=int(pg.delta_stats()["delta_edges"]),
+                  method="warm match between delta batches")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--m", type=int, default=20_000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=os.environ.get("BENCH_JSON_PATH",
+                                                     "BENCH_ingest.json"))
+    args = ap.parse_args()
+    run(m=args.m, batch=args.batch, seed=args.seed, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
                  ALWAYS appended to ``BENCH_serve.json`` — override with
                  ``BENCH_JSON_PATH`` — so the perf trajectory records;
                  see bench_serve.py)
+  ingest       — overlay subsystem: streamed-batch ingest on the delta
+                 write path vs full-rebuild path, read latency under write
+                 load, compaction ≡ from-scratch verification (JSON lines;
+                 ALWAYS appended to ``BENCH_ingest.json`` — override with
+                 ``BENCH_JSON_PATH``; see bench_ingest.py)
 Roofline rows come from the dry-run: ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
@@ -71,6 +76,12 @@ def main() -> None:
                     requests=32 if small else 64,
                     json_path=os.environ.get("BENCH_JSON_PATH",
                                              "BENCH_serve.json"))
+
+    print("# ingest (overlay delta write path vs rebuild, reads under writes)")
+    from benchmarks import bench_ingest
+    bench_ingest.run(m=5_000 if small else 20_000,
+                     json_path=os.environ.get("BENCH_JSON_PATH",
+                                              "BENCH_ingest.json"))
 
 
 if __name__ == "__main__":

@@ -161,4 +161,37 @@ with Service() as svc:
     s = svc.stats()
     print(f"service: {s['completed']} served, {s['result_hits']} cache hits, "
           f"{s.get('coalesced_launches', 0)} coalesced launches ✓")
+
+# -- 9. streaming ingest: LSM overlay, snapshots, what-if forks ---------------
+# The first query sealed the DIP stores; from here on, mutations append to
+# an overlay delta instead of re-running the §V ingest pipeline
+# (docs/ARCHITECTURE.md §11, src/repro/overlay/README.md).  snapshot()
+# pins an immutable version for readers; fork() branches a writable
+# copy-on-write view; compact() folds the overlay back into sorted base
+# stores (bitwise-identical to a from-scratch build).
+snap = pg.snapshot()                   # zero-copy: shares the sealed stores
+pinned = np.asarray(snap.query_labels(["label1"]))
+
+bs, bd = nodes[:512], nodes[512:1024]  # a late-arriving edge batch
+pg.insert_edges(bs, bd)                # O(batch): no re-sort, no rebuild
+pg.add_edge_relationships(bs, bd, ["rel7"] * 512)
+assert bool((np.asarray(snap.query_labels(["label1"])) == pinned).all())
+print(f"streamed {pg.delta_stats()['delta_edges']:,} delta edges; "
+      f"snapshot still answers from the pinned version ✓")
+
+what_if = pg.fork()                    # private overlay over the shared base
+top_rel7 = np.argsort(np.asarray(pr))[-4:]
+what_if.delete_vertices(nodes[top_rel7])   # tombstones; parent untouched
+c_now = np.asarray(pg.components("(a)-[:rel7]->(b)"))
+c_wo = np.asarray(what_if.components("(a)-[:rel7]->(b)"))
+print(f"what-if fork: rel7 subgraph has {int((np.bincount(c_wo[c_wo >= 0]) > 0).sum()):,} "
+      f"components without the top-PageRank vertices "
+      f"(vs {int((np.bincount(c_now[c_now >= 0]) > 0).sum()):,} live) — "
+      f"parent version {pg.version}, fork version {what_if.version}")
+
+before = np.asarray(pg.match(pattern).vertex_mask)
+pg.compact()                           # merge: overlay → fresh base stores
+assert not pg.has_overlay()
+assert bool((np.asarray(pg.match(pattern).vertex_mask) == before).all())
+print("compaction folded the overlay in; answers unchanged ✓")
 print("OK")

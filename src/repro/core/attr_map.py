@@ -73,8 +73,10 @@ class AttributeMap:
 
     def mask(self, values: Union[str, Sequence[str]], k: int) -> np.ndarray:
         """Boolean (k,) query mask over the attribute set — the device-side
-        query format (unknown values are simply absent from the mask)."""
+        query format.  Unknown values are simply absent from the mask, and so
+        are ids ≥ k: a store sealed at ``k`` attributes can be queried for
+        values interned later (the overlay's delta buffers answer those)."""
         ids = np.atleast_1d(self.lookup(values))
         mask = np.zeros(k, dtype=bool)
-        mask[ids[ids >= 0]] = True
+        mask[ids[(ids >= 0) & (ids < k)]] = True
         return mask

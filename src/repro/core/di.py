@@ -42,7 +42,7 @@ __all__ = [
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["src", "dst", "seg", "node_map"],
-    meta_fields=["n", "m", "max_deg"],
+    meta_fields=["n", "m", "max_deg", "unsorted"],
 )
 @dataclasses.dataclass(frozen=True)
 class DIGraph:
@@ -70,6 +70,12 @@ class DIGraph:
     n: int
     m: int
     max_deg: int = -1
+    # True for an overlay's combined (base ++ delta) edge view: the sort/SEG
+    # invariants above hold only for the base prefix.  Edge-centric consumers
+    # (frontier_step, components, induce/extract) never read SEG and stay
+    # correct; SEG-dependent fast paths (khop_csr, neighbors_padded,
+    # edge_lookup) must refuse or route around such graphs.
+    unsorted: bool = False
 
     # -- convenience -------------------------------------------------------
     def out_degree(self, u) -> jax.Array:

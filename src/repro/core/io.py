@@ -42,7 +42,15 @@ def save_propgraph(path: str, pg: PropGraph) -> str:
     the old one is moved aside first (``os.rename`` onto a non-empty
     directory raises).  A reader never observes a half-written graph at
     ``path``; a crash mid-swap can at worst leave the previous version
-    parked in a ``<name>.old.*`` sibling, never a torn one."""
+    parked in a ``<name>.old.*`` sibling, never a torn one.
+
+    A graph with a live overlay (delta edges / delta attribute pairs /
+    tombstones) is flattened first — compact-on-save on a private fork, so
+    the caller's overlay is untouched — because the on-disk format stores
+    only base state; ``load_propgraph`` then round-trips bitwise."""
+    if getattr(pg, "has_overlay", None) is not None and pg.has_overlay():
+        pg = pg.fork()
+        pg.compact()
     g = pg._require_graph()
     path = path.rstrip(os.sep)
     parent = os.path.dirname(os.path.abspath(path)) or os.sep

@@ -40,6 +40,7 @@ from repro.core import dip_arr, dip_list, dip_listd, dip_shard
 from repro.core.attr_map import AttributeMap
 from repro.core.di import DIGraph, build_di, edge_lookup
 from repro.core.queries import extract_subgraph, filtered_bfs, induce_edge_mask
+from repro.overlay.delta import AttrDelta, EdgeDelta, MutationEvent, pair_keys
 
 __all__ = ["PropGraph", "BACKENDS"]
 
@@ -52,6 +53,17 @@ class _AttrStore:
     With ``mesh`` set, ``finalize_sharded()`` additionally maintains a padded,
     device-placed copy of the store (``core.dip_shard``) and the query paths
     run under ``shard_map``; both caches invalidate together on ``insert``.
+
+    LSM write path (docs/ARCHITECTURE.md §11): the first query *seals* the
+    base (dense device store or sharded placement, built at ``_k_base``
+    attribute rows).  Later inserts land in ``_delta`` — a small append-only
+    host buffer — in O(batch) instead of invalidating and rebuilding the
+    O(N·K) dense form.  Queries answer ``base_mask | delta_mask``, exact
+    stats come from ``attr_counts`` (base counts + delta counts deduped
+    against ``base_keys``), and the overlay compactor folds the delta back
+    into the pair lists before a fresh seal.  ``out_n`` is the query result
+    length: it tracks the EFFECTIVE entity universe (base + delta edges for
+    the edge store) while ``n`` stays the sealed base's row count.
     """
 
     def __init__(self, backend: str, n_entities: int, mesh=None):
@@ -59,6 +71,7 @@ class _AttrStore:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self.backend = backend
         self.n = n_entities
+        self.out_n = n_entities
         self.mesh = mesh
         self.amap = AttributeMap()
         self._pairs_e: List[np.ndarray] = []  # entity ids, insertion order
@@ -68,18 +81,38 @@ class _AttrStore:
         self._host = None  # host-built dense form awaiting upload/placement
         self._counts: Optional[np.ndarray] = None
         self._dirty = True
+        self._delta = AttrDelta()  # pairs landed after the base was sealed
+        self._k_base: Optional[int] = None  # attribute rows in the sealed base
+        self._base_keys: Optional[np.ndarray] = None  # sorted base pair keys
+
+    @property
+    def sealed(self) -> bool:
+        """A device/sharded base exists — inserts must not invalidate it."""
+        return self._store is not None or self._sharded is not None
 
     def insert(self, entity_ids: np.ndarray, values: Sequence[str]) -> None:
         attr_ids = self.amap.encode(values)
         attr_ids = np.broadcast_to(np.atleast_1d(attr_ids), np.shape(entity_ids)).ravel()
         entity_ids = np.asarray(entity_ids, np.int32).ravel()
         ok = entity_ids >= 0  # unmatched edge rows (edge_lookup -1) are dropped
-        self._pairs_e.append(entity_ids[ok])
-        self._pairs_a.append(attr_ids[ok].astype(np.int32))
+        ent, att = entity_ids[ok], attr_ids[ok].astype(np.int32)
+        if self.sealed:
+            # LSM path: the sealed base is immutable — O(batch) delta append,
+            # no store invalidation, no rebuild
+            self._delta.append(ent, att)
+            return
+        # pre-seal: entities beyond the base universe (delta edges) can never
+        # enter the n-row dense build — they live in the delta regardless
+        hi = ent >= self.n
+        if hi.any():
+            self._delta.append(ent[hi], att[hi])
+            ent, att = ent[~hi], att[~hi]
+        self._pairs_e.append(ent)
+        self._pairs_a.append(att)
         self._counts = None
-        self._sharded = None
         self._host = None
         self._dirty = True
+        self._base_keys = None
 
     @property
     def k(self) -> int:
@@ -110,6 +143,7 @@ class _AttrStore:
             host = dip_listd.build_dip_listd_host(ent, att, k=self.k, n=self.n)
             self._counts = np.asarray(host.a_off[1:] - host.a_off[:-1])
         self._host = host
+        self._k_base = self.k  # the row count this base answers queries at
         return host
 
     def finalize(self):
@@ -138,17 +172,46 @@ class _AttrStore:
         ids = np.atleast_1d(self.amap.lookup(list(values)))
         return ids[ids >= 0].astype(np.int32)
 
+    def base_keys(self) -> np.ndarray:
+        """Sorted unique packed (entity, attribute) keys of the BASE pairs —
+        the dedup reference ``attr_counts`` uses so re-inserting a pair that
+        already sits in the sealed base never double-counts."""
+        if self._base_keys is None:
+            ent = np.concatenate(self._pairs_e) if self._pairs_e else np.zeros(0, np.int32)
+            att = np.concatenate(self._pairs_a) if self._pairs_a else np.zeros(0, np.int32)
+            self._base_keys = np.unique(pair_keys(ent, att))
+        return self._base_keys
+
+    def all_pairs(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Full (entity, attribute) pair history, base ++ delta, insertion
+        order preserved — what the compactor folds into a fresh base."""
+        de, da = self._delta.cat()
+        ent = self._pairs_e + ([de] if de.size else [])
+        att = self._pairs_a + ([da] if da.size else [])
+        if not ent:
+            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+        return np.concatenate(ent), np.concatenate(att)
+
     def attr_counts(self) -> np.ndarray:
         """(k,) per-attribute entity counts — the DIP selectivity statistics
         the planner orders joins with (bitmap row sums / CSR segment
         lengths; each store carries them for free).  Derived host-side
         during ``_build_host`` — reading them never uploads a store — and
-        invalidated with the store (``insert`` clears them); the planner
-        reads these on every ``match()``."""
+        invalidated with the store (``insert`` clears them).  With a live
+        delta, the sealed base's counts are padded to the current attribute
+        set and the delta's (base-deduped) counts add in — still exact, so
+        the planner never orders joins with stale or estimated stats."""
         if self._counts is None:
             self._build_host()  # sets _counts; build stays stashed for the
             # next finalize, so stats-then-query builds once
-        return self._counts
+        counts = self._counts
+        k = self.k
+        if len(counts) < k:
+            counts = np.concatenate(
+                [counts, np.zeros(k - len(counts), counts.dtype)])
+        if self._delta.size:
+            counts = counts + self._delta.counts(k, self.base_keys())
+        return counts
 
     @property
     def nnz(self) -> int:
@@ -156,46 +219,110 @@ class _AttrStore:
         backend dedupes) — Σ attr_counts, so reading it needs no store."""
         return int(np.sum(self.attr_counts()))
 
-    def query_any(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
-        if len(values) == 0 or self.known_ids(values).size == 0:
-            # degenerate query (empty list / all-unknown values): the answer
-            # is definitionally empty — skip the store entirely
-            return jnp.zeros((self.n,), jnp.bool_)
+    def _pad_to_out(self, mask: jax.Array) -> jax.Array:
+        """Extend a (n,)-row base result to the effective universe: entities
+        past the sealed base (delta edges) hold no base attributes."""
+        if self.out_n > int(mask.shape[0]):
+            mask = jnp.concatenate(
+                [mask, jnp.zeros((self.out_n - int(mask.shape[0]),), mask.dtype)])
+        return mask
+
+    def _query_base(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
+        """(n,) bool over the sealed base only.  The query mask is built at
+        ``_k_base`` — values interned after the seal are invisible here (the
+        delta union answers them)."""
         if self.mesh is not None:
-            mask = jnp.asarray(self.amap.mask(values, self.k))
+            sharded = self.finalize_sharded()
+            mask = jnp.asarray(self.amap.mask(values, self._k_base))
             return dip_shard.query_any_sharded(
-                self.backend, self.finalize_sharded(), mask, impl=impl
+                self.backend, sharded, mask, impl=impl
             )
         store = self.finalize()
-        mask = jnp.asarray(self.amap.mask(values, self.k))
+        mask = jnp.asarray(self.amap.mask(values, self._k_base))
         if self.backend == "arr":
             return dip_arr.query_any(store, mask, impl=impl or "matvec")
         if self.backend == "list":
             return dip_list.query_any(store, mask)
         if impl == "budget":
             ids = self.known_ids(values)
+            ids = ids[ids < self._k_base]  # delta-only values have no chain
+            if ids.size == 0:
+                return jnp.zeros((self.n,), jnp.bool_)
             a_off = np.asarray(store.a_off)
             budget = int((a_off[ids + 1] - a_off[ids]).sum())
             budget = max(-(-budget // 128) * 128, 128)  # lane-aligned, ≥1 tile
             return dip_listd.query_any_budget(store, jnp.asarray(ids), budget=budget)
         return dip_listd.query_any(store, mask, impl=impl or "inverted")
 
+    def query_any(self, values: Sequence[str], *, impl: Optional[str] = None) -> jax.Array:
+        ids = self.known_ids(values) if len(values) else np.zeros(0, np.int32)
+        if ids.size == 0:
+            # degenerate query (empty list / all-unknown values): the answer
+            # is definitionally empty — skip the store entirely
+            return jnp.zeros((self.out_n,), jnp.bool_)
+        out = self._pad_to_out(self._query_base(values, impl=impl))
+        if self._delta.size:
+            # LSM read union, composed BEFORE any propagation consumes it
+            dmask = self._delta.mask(ids, self.out_n)
+            if dmask.any():
+                out = out | jnp.asarray(dmask)
+        return out
+
     def query_any_batched(
         self, values_list: Sequence[Sequence[str]], *, impl: Optional[str] = None
     ) -> jax.Array:
-        """(Q, n) bool — Q OR-queries in one shot.  On the ``arr`` backend all
-        Q masks go through ONE matvec / Pallas-kernel launch (the planner's
-        fusion path); other backends fall back to a per-query loop."""
+        """(Q, out_n) bool — Q OR-queries in one shot.  On the ``arr`` backend
+        all Q masks go through ONE matvec / Pallas-kernel launch (the
+        planner's fusion path) and any delta rows OR in as a second stacked
+        host mask; other backends fall back to a per-query loop."""
         if self.backend == "arr":
-            masks = jnp.asarray(
-                np.stack([self.amap.mask(v, self.k) for v in values_list])
-            )
             if self.mesh is not None:
-                return dip_shard.query_any_batched_sharded(
-                    self.finalize_sharded(), masks, impl=impl
+                sharded = self.finalize_sharded()
+                masks = jnp.asarray(
+                    np.stack([self.amap.mask(v, self._k_base) for v in values_list])
                 )
-            return dip_arr.query_any_batched(self.finalize(), masks, impl=impl or "matvec")
+                rows = dip_shard.query_any_batched_sharded(sharded, masks, impl=impl)
+            else:
+                store = self.finalize()
+                masks = jnp.asarray(
+                    np.stack([self.amap.mask(v, self._k_base) for v in values_list])
+                )
+                rows = dip_arr.query_any_batched(store, masks, impl=impl or "matvec")
+            if self.out_n > int(rows.shape[1]):
+                rows = jnp.concatenate(
+                    [rows, jnp.zeros((rows.shape[0], self.out_n - int(rows.shape[1])),
+                                     rows.dtype)], axis=1)
+            if self._delta.size:
+                drows = np.stack(
+                    [self._delta.mask(self.known_ids(v), self.out_n)
+                     for v in values_list])
+                if drows.any():
+                    rows = rows | jnp.asarray(drows)
+            return rows
         return jnp.stack([self.query_any(v, impl=impl) for v in values_list])
+
+    def clone(self) -> "_AttrStore":
+        """Structurally-shared copy for snapshots/views: the sealed base,
+        stash, stats and pair CHUNKS are shared (all append-only or
+        immutable); the chunk lists, delta chain and attribute map are
+        private so parent and clone diverge without copying the base."""
+        c = _AttrStore.__new__(_AttrStore)
+        c.backend = self.backend
+        c.n = self.n
+        c.out_n = self.out_n
+        c.mesh = self.mesh
+        c.amap = AttributeMap(self.amap.values)
+        c._pairs_e = list(self._pairs_e)
+        c._pairs_a = list(self._pairs_a)
+        c._store = self._store
+        c._sharded = self._sharded
+        c._host = self._host
+        c._counts = self._counts
+        c._dirty = self._dirty
+        c._delta = self._delta.frozen_copy()
+        c._k_base = self._k_base
+        c._base_keys = self._base_keys
+        return c
 
 
 class PropGraph:
@@ -218,10 +345,19 @@ class PropGraph:
         self.vertex_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
         self.edge_props: Dict[str, Tuple[jax.Array, jax.Array]] = {}
         # monotone mutation counter + observers — the service layer's cache
-        # invalidation contract (a result cached at version v is dead the
-        # moment any mutator runs; see src/repro/service/README.md)
+        # invalidation contract.  ``last_mutation`` carries the matching
+        # MutationEvent so observers can invalidate by OVERLAP (a cached
+        # result survives writes that cannot touch its masks) instead of
+        # purging everything on every version bump (docs/ARCHITECTURE.md §11).
         self.version: int = 0
+        self.last_mutation: Optional[MutationEvent] = None
         self._mutation_hooks: List = []
+        # ---- overlay state (docs/ARCHITECTURE.md §11) -------------------
+        self._delta_edges: Optional[EdgeDelta] = None  # structural inserts
+        self._dead_v: Optional[np.ndarray] = None  # (n,) bool tombstones
+        self._dead_e: Optional[np.ndarray] = None  # sorted global edge ids
+        self._eff_cache: Optional[Tuple[int, DIGraph]] = None
+        self._frozen = False  # snapshots refuse mutation
 
     # ----------------------------------------------------------- mutation API
     def on_mutation(self, hook) -> "PropGraph":
@@ -236,24 +372,141 @@ class PropGraph:
         for hook in list(self._mutation_hooks):
             hook(self)
 
+    def _check_writable(self) -> None:
+        if self._frozen:
+            raise RuntimeError(
+                "this PropGraph is a frozen snapshot; fork() it for a "
+                "writable view")
+
     # ------------------------------------------------------------- structure
     def add_edges_from(self, src, dst) -> "PropGraph":
         """Bulk edge ingestion → DI build (sort + normalize + SEG).
 
         Rebuilding the structure drops all previously attached attributes
-        (fresh stores) — and, like every mutator, bumps ``version``."""
-        self.graph = build_di(np.asarray(src), np.asarray(dst))
+        (fresh stores) AND the whole overlay — and, like every mutator,
+        bumps ``version``.  For incremental structural growth that keeps
+        attributes and costs O(batch), use ``insert_edges``."""
+        self._check_writable()
+        src = np.asarray(src)
+        if src.size == 0 and self.graph is not None:
+            return self  # no-op: nothing to rebuild from, keep caches live
+        self.graph = build_di(src, np.asarray(dst))
         if self.mesh is not None:
             self.graph = dip_shard.place_graph(self.graph, self.mesh)
         self._vstore = _AttrStore(self.backend, self.graph.n, mesh=self.mesh)
         self._estore = _AttrStore(self.backend, max(self.graph.m, 1), mesh=self.mesh)
+        self._delta_edges = None
+        self._dead_v = None
+        self._dead_e = None
+        self._eff_cache = None
+        self.last_mutation = MutationEvent.structural_event("add_edges_from")
         self._bump_version()
         return self
+
+    def insert_edges(self, src, dst) -> "PropGraph":
+        """O(batch) structural ingestion: append (src, dst) pairs to the edge
+        delta instead of re-sorting the whole DI structure.  Endpoints must
+        already exist in the vertex universe (growing it means a new
+        normalization — that is ``add_edges_from``'s bulk path).  Delta
+        edges get global ids ``m_base + i``; queries and analytics see them
+        through the combined edge view until ``compact()`` folds them in.
+        Pairs already present (base or delta) are dropped, matching the DI
+        one-structural-edge-per-(u,v) invariant."""
+        self._check_writable()
+        if self.graph is None:
+            return self.add_edges_from(src, dst)
+        src = np.asarray(src).ravel()
+        dst = np.asarray(dst).ravel()
+        if src.size == 0:
+            return self  # no-op
+        u = self._vertex_internal(src)
+        v = self._vertex_internal(dst)
+        if (u < 0).any() or (v < 0).any():
+            unknown = np.unique(np.concatenate([src[u < 0], dst[v < 0]]))
+            raise ValueError(
+                f"insert_edges endpoints must already exist; unknown vertices "
+                f"{unknown[:10].tolist()} — use add_edges_from (bulk rebuild) "
+                f"to grow the vertex universe")
+        if self._delta_edges is None:
+            self._delta_edges = EdgeDelta(self.graph.m)
+        base_idx = np.asarray(edge_lookup(self.graph, jnp.asarray(u), jnp.asarray(v)))
+        fresh = base_idx < 0
+        added = self._delta_edges.append(u[fresh], v[fresh]) if fresh.any() else 0
+        if added == 0:
+            return self  # every pair already present: caches stay live
+        self._estore.out_n = max(self.graph.m + self._delta_edges.size, 1)
+        self._eff_cache = None
+        self.last_mutation = MutationEvent.structural_event("insert_edges")
+        self._bump_version()
+        return self
+
+    def delete_vertices(self, nodes) -> "PropGraph":
+        """Tombstone vertices (and implicitly every incident edge) in the
+        overlay — the base structure is untouched, so snapshots taken before
+        the delete still see the vertices.  ``compact()`` makes it physical."""
+        self._check_writable()
+        self._require_graph()
+        idx = self._vertex_internal(np.asarray(nodes).ravel())
+        idx = idx[idx >= 0]
+        if idx.size == 0:
+            return self  # no-op
+        dead = (np.zeros(self.graph.n, bool) if self._dead_v is None
+                else self._dead_v.copy())  # copy-on-write: snapshots share ours
+        before = int(dead.sum())
+        dead[idx] = True
+        if int(dead.sum()) == before:
+            return self  # all already dead
+        self._dead_v = dead
+        self._eff_cache = None
+        self.last_mutation = MutationEvent.structural_event("delete_vertices")
+        self._bump_version()
+        return self
+
+    def delete_edges(self, src, dst) -> "PropGraph":
+        """Tombstone individual edges (base or delta) by endpoint pair."""
+        self._check_writable()
+        self._require_graph()
+        idx = self._edge_internal(src, dst)
+        idx = idx[idx >= 0].astype(np.int32)
+        if idx.size == 0:
+            return self  # no-op
+        cur = self._dead_e if self._dead_e is not None else np.zeros(0, np.int32)
+        merged = np.unique(np.concatenate([cur, idx]))
+        if merged.size == cur.size:
+            return self  # all already dead
+        self._dead_e = merged
+        self._eff_cache = None
+        self.last_mutation = MutationEvent.structural_event("delete_edges")
+        self._bump_version()
+        return self
+
+    def _effective_graph(self) -> DIGraph:
+        """Base DI structure ++ delta edges, as one edge-centric view.
+
+        The combined graph keeps the base's SEG (valid for the sorted base
+        prefix only) and is flagged ``unsorted`` so SEG-dependent fast paths
+        route around it; everything the executor and frontier engine run is
+        edge-centric and consumes it unchanged.  Cached per delta size —
+        repeated queries between writes pay the concat once."""
+        base = self.graph
+        de = self._delta_edges
+        if de is None or de.size == 0:
+            return base
+        if self._eff_cache is not None and self._eff_cache[0] == de.size:
+            return self._eff_cache[1]
+        ds, dd = de.cat()
+        g = DIGraph(
+            src=jnp.concatenate([base.src, jnp.asarray(ds)]),
+            dst=jnp.concatenate([base.dst, jnp.asarray(dd)]),
+            seg=base.seg, node_map=base.node_map,
+            n=base.n, m=base.m + de.size, max_deg=-1, unsorted=True)
+        self._eff_cache = (de.size, g)
+        return g
 
     def _require_graph(self) -> DIGraph:
         if self.graph is None:
             raise RuntimeError("call add_edges_from(...) first")
-        return self.graph
+        return self._effective_graph()
 
     def _vertex_internal(self, nodes) -> np.ndarray:
         """Original vertex ids → internal [0, n) ids (−1 if absent)."""
@@ -266,29 +519,48 @@ class PropGraph:
         return np.where(ok, pos, -1).astype(np.int32)
 
     def _edge_internal(self, src, dst) -> np.ndarray:
-        g = self._require_graph()
+        self._require_graph()
+        g = self.graph  # edge_lookup needs the SORTED base (SEG windows)
         u = self._vertex_internal(src)
         v = self._vertex_internal(dst)
         u_c = jnp.asarray(np.maximum(u, 0))
         v_c = jnp.asarray(np.maximum(v, 0))
         idx = np.asarray(edge_lookup(g, u_c, v_c))
-        return np.where((u >= 0) & (v >= 0), idx, -1).astype(np.int32)
+        idx = np.where((u >= 0) & (v >= 0), idx, -1).astype(np.int32)
+        if self._delta_edges is not None and self._delta_edges.size:
+            miss = idx < 0
+            if miss.any():
+                # base misses may still be delta edges (global ids ≥ m_base)
+                didx = self._delta_edges.lookup(u[miss], v[miss])
+                idx[miss] = np.where((u[miss] >= 0) & (v[miss] >= 0), didx, -1)
+        return idx
 
     # ------------------------------------------------------------ attributes
     def add_node_labels(self, nodes, labels) -> "PropGraph":
+        self._check_writable()
         self._require_graph()
+        if np.asarray(nodes).size == 0:
+            return self  # no-op: nothing changes, caches stay live
         self._vstore.insert(self._vertex_internal(nodes), labels)
+        self.last_mutation = MutationEvent.labels_event(labels)
         self._bump_version()
         return self
 
     def add_edge_relationships(self, src, dst, relationships) -> "PropGraph":
+        self._check_writable()
         self._require_graph()
+        if np.asarray(src).size == 0:
+            return self  # no-op
         self._estore.insert(self._edge_internal(src, dst), relationships)
+        self.last_mutation = MutationEvent.rels_event(relationships)
         self._bump_version()
         return self
 
     def add_node_properties(self, name: str, nodes, values, fill=0) -> "PropGraph":
+        self._check_writable()
         g = self._require_graph()
+        if np.asarray(nodes).size == 0:
+            return self  # no-op
         idx = self._vertex_internal(nodes)
         vals = np.asarray(values)
         col = np.full((g.n,), fill, dtype=vals.dtype)
@@ -297,11 +569,15 @@ class PropGraph:
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
         self.vertex_props[name] = self._place_column(col, valid)
+        self.last_mutation = MutationEvent.props_event(name)
         self._bump_version()
         return self
 
     def add_edge_properties(self, name: str, src, dst, values, fill=0) -> "PropGraph":
+        self._check_writable()
         g = self._require_graph()
+        if np.asarray(src).size == 0:
+            return self  # no-op
         idx = self._edge_internal(src, dst)
         vals = np.asarray(values)
         col = np.full((g.m,), fill, dtype=vals.dtype)
@@ -310,6 +586,57 @@ class PropGraph:
         col[idx[ok]] = vals[ok]
         valid[idx[ok]] = True
         self.edge_props[name] = self._place_column(col, valid)
+        self.last_mutation = MutationEvent.props_event(name)
+        self._bump_version()
+        return self
+
+    def update_node_properties(self, name: str, nodes, values) -> "PropGraph":
+        """Point-update an EXISTING typed column: functional scatter onto a
+        fresh array, so snapshots holding the previous column are untouched.
+        Unknown vertices are dropped; an unknown property is an error
+        (``add_node_properties`` defines columns)."""
+        self._check_writable()
+        self._require_graph()
+        if name not in self.vertex_props:
+            raise KeyError(
+                f"unknown vertex property {name!r}; add_node_properties first")
+        idx = self._vertex_internal(np.asarray(nodes).ravel())
+        vals = np.asarray(values).ravel()
+        ok = idx >= 0
+        if not ok.any():
+            return self  # no-op
+        col, valid = self.vertex_props[name]
+        at = jnp.asarray(idx[ok])
+        self.vertex_props[name] = (
+            col.at[at].set(jnp.asarray(vals[ok]).astype(col.dtype)),
+            valid.at[at].set(True))
+        self.last_mutation = MutationEvent.props_event(name)
+        self._bump_version()
+        return self
+
+    def update_edge_properties(self, name: str, src, dst, values) -> "PropGraph":
+        """Point-update an existing edge column; delta edges are addressable
+        too (the column pads to the effective edge count on first touch)."""
+        self._check_writable()
+        g = self._require_graph()
+        if name not in self.edge_props:
+            raise KeyError(
+                f"unknown edge property {name!r}; add_edge_properties first")
+        idx = self._edge_internal(src, dst)
+        vals = np.asarray(values).ravel()
+        ok = idx >= 0
+        if not ok.any():
+            return self  # no-op
+        col, valid = self.edge_props[name]
+        if int(col.shape[0]) < g.m:
+            pad = g.m - int(col.shape[0])
+            col = jnp.concatenate([col, jnp.zeros((pad,), col.dtype)])
+            valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.bool_)])
+        at = jnp.asarray(idx[ok])
+        self.edge_props[name] = (
+            col.at[at].set(jnp.asarray(vals[ok]).astype(col.dtype)),
+            valid.at[at].set(True))
+        self.last_mutation = MutationEvent.props_event(name)
         self._bump_version()
         return self
 
@@ -320,16 +647,46 @@ class PropGraph:
             valid = dip_shard.place_column(valid, self.mesh)
         return col, valid
 
+    # ---------------------------------------------------------- alive masks
+    def _alive_vertex_mask(self) -> Optional[jax.Array]:
+        """(n,) bool (False = tombstoned) or None when nothing is deleted."""
+        if self._dead_v is None:
+            return None
+        return jnp.asarray(~self._dead_v)
+
+    def _alive_edge_mask(self) -> Optional[jax.Array]:
+        """(m_eff,) bool or None — False on tombstoned edges and on edges
+        with a deleted endpoint (deleting a vertex detaches it)."""
+        if self._dead_e is None and self._dead_v is None:
+            return None
+        g = self._require_graph()
+        alive = np.ones(g.m, dtype=bool)
+        if self._dead_e is not None and self._dead_e.size:
+            alive[self._dead_e] = False
+        mask = jnp.asarray(alive)
+        av = self._alive_vertex_mask()
+        if av is not None:
+            mask = mask & av[g.src] & av[g.dst]
+        return mask
+
     # --------------------------------------------------------------- queries
     def query_labels(self, labels, *, impl: Optional[str] = None) -> jax.Array:
-        """(n,) bool — vertices holding ANY of ``labels`` (§VI OR semantics)."""
+        """(n,) bool — vertices holding ANY of ``labels`` (§VI OR semantics).
+        Overlay-aware: delta-held labels OR in, tombstoned vertices AND out."""
         self._require_graph()
-        return self._vstore.query_any(labels, impl=impl)
+        out = self._vstore.query_any(labels, impl=impl)
+        av = self._alive_vertex_mask()
+        return out if av is None else out & av
 
     def query_relationships(self, relationships, *, impl: Optional[str] = None) -> jax.Array:
-        """(m,) bool — edges holding ANY of ``relationships``."""
+        """(m,) bool — edges holding ANY of ``relationships`` (effective
+        edge universe: base ++ delta, minus tombstones)."""
         self._require_graph()
-        return self._estore.query_any(relationships, impl=impl)
+        out = self._estore.query_any(relationships, impl=impl)
+        ae = self._alive_edge_mask()
+        if ae is not None and int(ae.shape[0]) == int(out.shape[0]):
+            out = out & ae
+        return out
 
     # ------------------------------------------------- typed property masks
     _PRED_OPS = {
@@ -366,14 +723,26 @@ class PropGraph:
 
     def vertex_predicate_mask(self, name: str, op: str, value) -> jax.Array:
         """(n,) bool — vertices whose typed property ``name`` compares true
-        (entities without the property never match: the valid mask ANDs in)."""
+        (entities without the property never match: the valid mask ANDs in;
+        tombstoned vertices never match either)."""
         self._require_graph()
-        return self._predicate_mask(self.vertex_props, "vertex", name, op, value)
+        out = self._predicate_mask(self.vertex_props, "vertex", name, op, value)
+        av = self._alive_vertex_mask()
+        return out if av is None else out & av
 
     def edge_predicate_mask(self, name: str, op: str, value) -> jax.Array:
-        """(m,) bool — edges whose typed property ``name`` compares true."""
-        self._require_graph()
-        return self._predicate_mask(self.edge_props, "edge", name, op, value)
+        """(m_eff,) bool — edges whose typed property ``name`` compares true.
+        Columns predating the current delta edges pad with False (a delta
+        edge has no value until ``update_edge_properties`` touches it)."""
+        g = self._require_graph()
+        out = self._predicate_mask(self.edge_props, "edge", name, op, value)
+        if int(out.shape[0]) < g.m:
+            out = jnp.concatenate(
+                [out, jnp.zeros((g.m - int(out.shape[0]),), jnp.bool_)])
+        ae = self._alive_edge_mask()
+        if ae is not None and int(ae.shape[0]) == int(out.shape[0]):
+            out = out & ae
+        return out
 
     # ------------------------------------------------------ pattern matching
     def match(self, pattern, *, impl: Optional[str] = None):
@@ -419,6 +788,12 @@ class PropGraph:
             if relationships is not None
             else jnp.ones((g.m,), jnp.bool_)
         )
+        av = self._alive_vertex_mask()
+        if av is not None:
+            vmask = vmask & av
+        ae = self._alive_edge_mask()
+        if ae is not None and int(ae.shape[0]) == int(emask.shape[0]):
+            emask = emask & ae
         return extract_subgraph(g, induce_edge_mask(g, vmask, emask))
 
     def bfs(
@@ -432,6 +807,12 @@ class PropGraph:
         g = self._require_graph()
         v_ok = self.query_labels(labels) if labels is not None else None
         e_ok = self.query_relationships(relationships) if relationships is not None else None
+        av = self._alive_vertex_mask()
+        if av is not None:
+            v_ok = av if v_ok is None else v_ok & av
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = ae if e_ok is None else e_ok & ae
         srcs = jnp.asarray(np.maximum(self._vertex_internal(sources), 0))
         return filtered_bfs(g, srcs, edge_allowed=e_ok, vertex_allowed=v_ok, max_iters=max_iters)
 
@@ -476,9 +857,17 @@ class PropGraph:
             e_ok = e_ok & v_tail[tail]
         if v_head is not None:
             e_ok = e_ok & v_head[head]
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = e_ok & ae  # overlay tombstones compose pre-propagation
         ids = self._vertex_internal(seeds)
         ids = ids[ids >= 0]
-        if impl == "csr" and self.mesh is None and direction == 1 and not undirected:
+        if self._dead_v is not None and ids.size:
+            ids = ids[~self._dead_v[ids]]  # dead seeds don't traverse
+        if (impl == "csr" and self.mesh is None and direction == 1
+                and not undirected and not g.unsorted):
+            # the CSR gather fast path needs valid SEG windows — a combined
+            # base++delta view has none, so it degrades to the frontier step
             return traverse.khop_csr(g, ids, e_ok, k=k)
         seed_mask = jnp.zeros((g.n,), jnp.bool_).at[jnp.asarray(ids)].set(True)
         if self.mesh is not None:
@@ -514,7 +903,87 @@ class PropGraph:
             vh = jnp.ones((g.n,), jnp.bool_) if v_head is None else v_head
             e_ok = e_ok & vt[tail] & vh[head]
             v_ok = vt | vh
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = e_ok & ae
+        av = self._alive_vertex_mask()
+        if av is not None:
+            v_ok = av if v_ok is None else v_ok & av
         return traverse.components_masked(g, v_ok, e_ok, max_iters=max_iters)
+
+    # ------------------------------------------- snapshots / views / overlay
+    def snapshot(self) -> "PropGraph":
+        """Immutable view pinned at (base store @ version, frozen delta
+        chain).  Zero-copy: the sealed device stores, DI arrays and typed
+        columns are SHARED with the parent — only the small delta chunk
+        lists are shallow-copied.  Writes keep landing on the parent (its
+        delta chain grows past the snapshot's frozen prefix, its columns
+        are replaced functionally), so a long-running ``components()`` or
+        ``match()`` on the snapshot reads a consistent view throughout.
+        Mutators on a snapshot raise; ``fork()`` one to branch."""
+        from repro.overlay.views import clone_propgraph
+
+        return clone_propgraph(self, frozen=True)
+
+    def fork(self) -> "PropGraph":
+        """Writable copy-on-write view: (base graph @ snapshot, private
+        overlay).  Shares the base's device shards with the parent; each
+        side's subsequent writes land in its own delta/tombstones — the
+        what-if primitive (\"delete this hub, what breaks\") and the
+        per-tenant branch the service's ``fork_view`` verb exposes."""
+        from repro.overlay.views import clone_propgraph
+
+        return clone_propgraph(self, frozen=False)
+
+    def compact(self) -> "PropGraph":
+        """Fold the whole overlay (delta edges, delta attribute pairs,
+        tombstones) into fresh sealed base stores — the LSM merge step.
+        Equivalent to rebuilding from scratch with the surviving data;
+        structural for cache purposes (every cached result dies).  No-op
+        when there is no overlay."""
+        self._check_writable()
+        if not self.has_overlay():
+            return self
+        from repro.overlay.compactor import compact_propgraph
+
+        compact_propgraph(self)
+        self.last_mutation = MutationEvent.structural_event("compact")
+        self._bump_version()
+        return self
+
+    def has_overlay(self) -> bool:
+        """Any uncompacted overlay state (delta pairs/edges or tombstones)?"""
+        return self.overlay_size() > 0
+
+    def overlay_size(self) -> int:
+        """Total overlay entries — the compaction-policy signal the
+        background ``Compactor`` thresholds on."""
+        size = 0
+        if self._delta_edges is not None:
+            size += self._delta_edges.size
+        if self._vstore is not None:
+            size += self._vstore._delta.size
+        if self._estore is not None:
+            size += self._estore._delta.size
+        if self._dead_v is not None:
+            size += int(self._dead_v.sum())
+        if self._dead_e is not None:
+            size += int(self._dead_e.size)
+        return size
+
+    def delta_stats(self) -> Dict[str, int]:
+        """Per-component overlay sizes (observability; pgserve surfaces it)."""
+        return {
+            "delta_edges": self._delta_edges.size if self._delta_edges else 0,
+            "delta_vertex_pairs": self._vstore._delta.size if self._vstore else 0,
+            "delta_edge_pairs": self._estore._delta.size if self._estore else 0,
+            "dead_vertices": int(self._dead_v.sum()) if self._dead_v is not None else 0,
+            "dead_edges": int(self._dead_e.size) if self._dead_e is not None else 0,
+        }
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
 
     # ------------------------------------------------------------------ info
     @property

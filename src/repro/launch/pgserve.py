@@ -413,6 +413,43 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
             _assert_wire_result_matches(c.query("arr", pool[0]),
                                         refs["arr"].match(pool[0]),
                                         ("post-mutation", pool[0]))
+            # overlay over the wire: snapshot pins the pre-write state, the
+            # fork branches privately, compact folds the overlay back in —
+            # every step bitwise vs the mirrored in-process graph
+            snap = c.snapshot("arr")
+            snap_ref = {p: refs["arr"].match(p) for p in pool[:2]}
+            v = c.insert_edges("arr", nodes[:12], nodes[-12:])
+            refs["arr"].insert_edges(nodes[:12], nodes[-12:])
+            assert v == refs["arr"].version
+            c.add_node_labels("arr", nodes[:5], ["l2"] * 5)
+            refs["arr"].add_node_labels(nodes[:5], ["l2"] * 5)
+            for p in pool[:2]:
+                _assert_wire_result_matches(c.query(snap, p), snap_ref[p],
+                                            ("snapshot", p))
+                _assert_wire_result_matches(c.query("arr", p),
+                                            refs["arr"].match(p),
+                                            ("overlay-live", p))
+            fork = c.fork_view("arr")
+            c.delete_vertices(fork, nodes[:1])
+            fref = refs["arr"].fork()
+            fref.delete_vertices(nodes[:1])
+            _assert_wire_result_matches(c.query(fork, pool[0]),
+                                        fref.match(pool[0]), "fork")
+            _assert_wire_result_matches(c.query("arr", pool[0]),
+                                        refs["arr"].match(pool[0]),
+                                        "fork-parent")
+            ov = c.compact("arr")
+            assert ov["delta_edges"] > 0, ov
+            refs["arr"].compact()
+            _assert_wire_result_matches(c.query("arr", pool[0]),
+                                        refs["arr"].match(pool[0]),
+                                        "post-compact")
+            c.drop_view(fork)
+            c.drop_view(snap)
+            remaining = c.graphs()
+            assert fork not in remaining and snap not in remaining
+            print("pgserve net smoke: overlay snapshot/fork/compact ≡ "
+                  "in-process OK", flush=True)
             # save here → load_graph there (cross-backend reopen via wire)
             with tempfile.TemporaryDirectory(dir=tmp_dir) as td:
                 path = save_propgraph(os.path.join(td, "pg"), refs["arr"])
@@ -508,6 +545,49 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
         print(f"pgserve smoke: backend={backend} OK "
               f"(coalesced_launches={stats.get('coalesced_launches', 0)}, "
               f"result_hits={stats.get('result_hits', 0)})")
+
+    # overlay: snapshot isolation, fork what-if and compaction through the
+    # service verbs (docs/ARCHITECTURE.md §11)
+    pg = build_tenant_graph("arr", m, seed=seed)
+    ref = build_tenant_graph("arr", m, seed=seed)  # stays at the pinned state
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        snap = svc.snapshot_graph("g")
+        nodes = np.asarray(pg.graph.node_map)
+        pg.insert_edges(nodes[:16], nodes[-16:])  # delta, behind the snapshot
+        pg.add_node_labels(nodes[:8], ["l1"] * 8)
+        assert pg.delta_stats()["delta_edges"] > 0
+        for pattern in pool[:3]:
+            got = svc.query(snap, pattern)  # pinned: pre-write answers
+            refr = ref.match(pattern)
+            assert (np.asarray(got.vertex_mask) == np.asarray(refr.vertex_mask)).all(), pattern
+            assert (np.asarray(got.edge_mask) == np.asarray(refr.edge_mask)).all(), pattern
+            live = svc.query("g", pattern)  # live: overlay applied
+            liver = pg.match(pattern)
+            assert (np.asarray(live.edge_mask) == np.asarray(liver.edge_mask)).all(), pattern
+        # fork: a private delete; the parent keeps serving unchanged
+        fork = svc.fork_graph("g")
+        fpg = svc.registry.get(fork)
+        fpg.delete_vertices(nodes[:1])
+        fgot = svc.query(fork, pool[0])
+        assert (np.asarray(fgot.vertex_mask)
+                == np.asarray(fpg.match(pool[0]).vertex_mask)).all()
+        pgot = svc.query("g", pool[0])
+        assert (np.asarray(pgot.vertex_mask)
+                == np.asarray(pg.match(pool[0]).vertex_mask)).all()
+        # compact folds the overlay in; live answers and the snapshot's
+        # pinned answers both survive it
+        svc.compact_graph("g")
+        assert not pg.has_overlay()
+        post = svc.query("g", pool[1])
+        assert (np.asarray(post.edge_mask)
+                == np.asarray(pg.match(pool[1]).edge_mask)).all()
+        sgot = svc.query(snap, pool[0])
+        assert (np.asarray(sgot.vertex_mask)
+                == np.asarray(ref.match(pool[0]).vertex_mask)).all()
+        svc.drop_graph(fork)
+        svc.drop_graph(snap)
+    print("pgserve smoke: overlay snapshot/fork/compact OK")
 
     if len(jax.devices()) > 1:
         from repro.launch.mesh import make_entity_mesh

@@ -1,0 +1,32 @@
+"""Overlay subsystem: LSM-style delta write path, snapshots, CoW views.
+
+See README.md in this directory and docs/ARCHITECTURE.md §11.
+
+Import layering: ``overlay.delta`` is pure numpy (core imports it);
+``overlay.views`` and ``overlay.compactor`` import core (PropGraph reaches
+them through lazy imports in ``snapshot``/``fork``/``compact``).
+"""
+from repro.overlay.delta import (AttrDelta, EdgeDelta, MutationEvent,
+                                 overlaps, pattern_refs)
+
+__all__ = [
+    "AttrDelta",
+    "EdgeDelta",
+    "MutationEvent",
+    "pattern_refs",
+    "overlaps",
+    "clone_propgraph",
+    "compact_propgraph",
+    "Compactor",
+]
+
+
+def __getattr__(name):
+    # lazy: these pull in core.property_graph (heavier import chain)
+    if name == "clone_propgraph":
+        from repro.overlay.views import clone_propgraph
+        return clone_propgraph
+    if name in ("compact_propgraph", "Compactor"):
+        from repro.overlay import compactor
+        return getattr(compactor, name)
+    raise AttributeError(name)

@@ -1,0 +1,184 @@
+"""Overlay compaction — the LSM merge step (ARCHITECTURE §11).
+
+``compact_propgraph`` folds a graph's whole overlay (delta edges, delta
+attribute pairs, vertex/edge tombstones) into fresh sealed base stores, as
+if the surviving data had been bulk-ingested from scratch: same ``build_di``
+sort, same pair insertion order, same attribute-map ordering — so
+post-compaction ``match()`` / ``khop()`` / ``components()`` are
+bitwise-identical to a from-scratch build.
+
+``Compactor`` is the background policy thread: it sweeps a service
+registry's graphs and compacts any writable graph whose ``overlay_size()``
+crossed the threshold, keeping the read-amplification of the delta union
+bounded while writes stream in.  Snapshots (frozen views) are never
+compacted — their pinned delta chain IS their contract.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dip_shard
+from repro.core.attr_map import AttributeMap
+from repro.core.di import build_di, edge_lookup
+from repro.core.property_graph import PropGraph, _AttrStore
+
+__all__ = ["compact_propgraph", "Compactor"]
+
+
+def compact_propgraph(pg: PropGraph) -> PropGraph:
+    """Merge overlay into base, in place on ``pg`` (caller bumps version).
+
+    Host-side throughout: gather the full effective state FIRST (so nothing
+    is lost when stores are swapped), rebuild the DI structure from the
+    surviving original-id edge list, then remap attribute pairs and typed
+    columns through the old→new internal-id maps.
+    """
+    g_eff = pg._require_graph()
+    base = pg.graph
+    nm_old = np.asarray(base.node_map)
+    src = np.asarray(g_eff.src)
+    dst = np.asarray(g_eff.dst)
+    m_eff = len(src)
+
+    alive_e = np.ones(m_eff, dtype=bool)
+    if pg._dead_e is not None and pg._dead_e.size:
+        alive_e[pg._dead_e] = False
+    if pg._dead_v is not None:
+        av = ~pg._dead_v
+        alive_e &= av[src] & av[dst]
+
+    # ---- gather the complete effective state before any swap -------------
+    v_ent, v_att = pg._vstore.all_pairs()
+    v_values = pg._vstore.amap.values
+    e_ent, e_att = pg._estore.all_pairs()
+    e_values = pg._estore.amap.values
+    vprops = {k: (np.asarray(c), np.asarray(m))
+              for k, (c, m) in pg.vertex_props.items()}
+    eprops = {k: (np.asarray(c), np.asarray(m))
+              for k, (c, m) in pg.edge_props.items()}
+
+    # ---- rebuild structure from surviving original-id edges --------------
+    new_g = build_di(nm_old[src[alive_e]], nm_old[dst[alive_e]])
+    if pg.mesh is not None:
+        new_g = dip_shard.place_graph(new_g, pg.mesh)
+    nm_new = np.asarray(new_g.node_map)
+
+    # old internal id → new internal id (−1 = dropped).  The new universe is
+    # the surviving edges' endpoint set — dead and detached vertices vanish,
+    # exactly as a from-scratch build of the surviving edge list would have it.
+    if nm_new.size:
+        pos = np.searchsorted(nm_new, nm_old)
+        pos_c = np.clip(pos, 0, nm_new.size - 1)
+        vmap = np.where(nm_new[pos_c] == nm_old, pos_c, -1).astype(np.int32)
+    else:
+        vmap = np.full(nm_old.size, -1, np.int32)
+    if pg._dead_v is not None:
+        vmap[pg._dead_v] = -1
+
+    # old global edge id → new edge id, via endpoints through the new SEG
+    new_eid_all = np.full(m_eff, -1, np.int32)
+    eu, ev = vmap[src], vmap[dst]
+    ok_e = alive_e & (eu >= 0) & (ev >= 0)
+    if ok_e.any() and new_g.m > 0:
+        new_eid_all[ok_e] = np.asarray(
+            edge_lookup(new_g, jnp.asarray(eu[ok_e]), jnp.asarray(ev[ok_e])))
+
+    # ---- attribute stores: replay the pair history remapped --------------
+    vs = _AttrStore(pg.backend, new_g.n, mesh=pg.mesh)
+    vs.amap = AttributeMap(v_values)  # id order preserved → same masks
+    if v_ent.size:
+        ne = vmap[v_ent]
+        keep = ne >= 0
+        if keep.any():
+            vs._pairs_e.append(ne[keep].astype(np.int32))
+            vs._pairs_a.append(v_att[keep].astype(np.int32))
+
+    es = _AttrStore(pg.backend, max(new_g.m, 1), mesh=pg.mesh)
+    es.amap = AttributeMap(e_values)
+    if e_ent.size:
+        ne = new_eid_all[e_ent]
+        keep = ne >= 0
+        if keep.any():
+            es._pairs_e.append(ne[keep].astype(np.int32))
+            es._pairs_a.append(e_att[keep].astype(np.int32))
+
+    # ---- typed columns ---------------------------------------------------
+    new_vprops = {}
+    if vprops:
+        inv = np.searchsorted(nm_old, nm_new)  # nm_new ⊆ nm_old: exact hits
+        for name, (col, msk) in vprops.items():
+            new_vprops[name] = pg._place_column(col[inv], msk[inv])
+    new_eprops = {}
+    for name, (col, msk) in eprops.items():
+        c = np.zeros(m_eff, col.dtype)
+        c[:len(col)] = col  # columns may predate the delta edges
+        mm = np.zeros(m_eff, dtype=bool)
+        mm[:len(msk)] = msk
+        nc = np.zeros(new_g.m, col.dtype)
+        nmk = np.zeros(new_g.m, dtype=bool)
+        okc = new_eid_all >= 0
+        nc[new_eid_all[okc]] = c[okc]
+        nmk[new_eid_all[okc]] = mm[okc]
+        new_eprops[name] = pg._place_column(nc, nmk)
+
+    # ---- swap (caller sets last_mutation + bumps version) ----------------
+    pg.graph = new_g
+    pg._vstore = vs
+    pg._estore = es
+    pg.vertex_props = new_vprops
+    pg.edge_props = new_eprops
+    pg._delta_edges = None
+    pg._dead_v = None
+    pg._dead_e = None
+    pg._eff_cache = None
+    return pg
+
+
+class Compactor(threading.Thread):
+    """Background merge policy: sweep a registry, compact writable graphs
+    whose overlay crossed ``threshold`` entries.
+
+    The service's ``_serve_group`` already retries executions whose graph
+    version moved underneath them, so a compaction landing mid-query is
+    indistinguishable from any other concurrent write.  ``sweep()`` is
+    callable directly for deterministic tests.
+    """
+
+    def __init__(self, registry, threshold: int, interval: float = 0.05):
+        super().__init__(daemon=True, name="overlay-compactor")
+        self._registry = registry
+        self.threshold = threshold
+        self.interval = interval
+        self.compactions = 0
+        self._stop_evt = threading.Event()
+
+    def sweep(self) -> int:
+        done = 0
+        for name in self._registry.names():
+            try:
+                pg = self._registry.get(name)
+            except KeyError:
+                continue  # dropped between names() and get()
+            if pg is None or getattr(pg, "_frozen", False):
+                continue
+            if pg.overlay_size() >= self.threshold:
+                pg.compact()
+                done += 1
+        self.compactions += done
+        return done
+
+    def run(self) -> None:
+        while not self._stop_evt.wait(self.interval):
+            try:
+                self.sweep()
+            except Exception:  # noqa: BLE001 — a torn sweep must not kill the thread
+                pass
+
+    def stop(self, timeout: Optional[float] = 2.0) -> None:
+        self._stop_evt.set()
+        if self.is_alive():
+            self.join(timeout=timeout)

@@ -1,0 +1,51 @@
+"""Snapshots and copy-on-write views over a PropGraph (ARCHITECTURE §11).
+
+Both are the same structural-sharing clone; the only difference is the
+``frozen`` bit:
+
+* ``pg.snapshot()``  → frozen clone.  Pins (base store @ version, frozen
+  delta chain); every mutator raises.  Long-running analytics read it while
+  writes keep landing on the parent.
+* ``pg.fork()``      → writable clone.  A View = (base graph @ snapshot,
+  private overlay): what-if mutations land in the clone's own delta buffers
+  and tombstones, sharing the parent's device-resident base shards.
+
+Sharing is safe because every heavyweight piece is immutable or replaced
+functionally by the mutators, never mutated in place:
+
+  shared by reference   base DIGraph (+ placed shards), sealed DIP stores,
+                        ``_host`` stash, ``_counts``, ``_base_keys``, typed
+                        property columns (jax arrays; updates build new
+                        arrays), tombstone arrays (copy-on-write reassign),
+                        pair/delta CHUNK arrays
+  private per clone     chunk LISTS (appends diverge), delta index dicts,
+                        AttributeMap (interning mutates), props dicts,
+                        mutation hooks, effective-graph cache
+"""
+from __future__ import annotations
+
+from repro.core.attr_map import AttributeMap  # noqa: F401  (re-export site)
+from repro.core.property_graph import PropGraph
+
+__all__ = ["clone_propgraph"]
+
+
+def clone_propgraph(pg: PropGraph, *, frozen: bool) -> PropGraph:
+    c = PropGraph.__new__(PropGraph)
+    c.backend = pg.backend
+    c.mesh = pg.mesh
+    c.graph = pg.graph
+    c._vstore = pg._vstore.clone() if pg._vstore is not None else None
+    c._estore = pg._estore.clone() if pg._estore is not None else None
+    c.vertex_props = dict(pg.vertex_props)
+    c.edge_props = dict(pg.edge_props)
+    c.version = pg.version
+    c.last_mutation = None
+    c._mutation_hooks = []  # observers watch the parent, not its views
+    c._delta_edges = (pg._delta_edges.frozen_copy()
+                      if pg._delta_edges is not None else None)
+    c._dead_v = pg._dead_v  # copy-on-write: mutators reassign, never edit
+    c._dead_e = pg._dead_e
+    c._eff_cache = None
+    c._frozen = frozen
+    return c

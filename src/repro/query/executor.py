@@ -325,6 +325,16 @@ def execute_plan_with_masks(
                 )
         emasks.append(e)
 
+    # overlay tombstones (docs/ARCHITECTURE.md §11): deleted vertices/edges
+    # drop out of EVERY slot — including unconstrained ones, whose all-ones
+    # default would otherwise resurrect them — before propagation runs
+    av = pg._alive_vertex_mask() if hasattr(pg, "_alive_vertex_mask") else None
+    if av is not None:
+        cands = [c & av for c in cands]
+    ae = pg._alive_edge_mask() if hasattr(pg, "_alive_edge_mask") else None
+    if ae is not None:
+        emasks = [e & ae for e in emasks]
+
     mesh = getattr(pg, "mesh", None)
     if mesh is not None:
         cands = _gather_masks(cands, mesh)

@@ -8,12 +8,16 @@ Two instances per ``Service`` (src/repro/service/README.md "Cache keys"):
   the match set), so the key deliberately excludes the graph version —
   a plan survives mutations; only its selectivity estimates go stale,
   which costs performance, never correctness.
-* **result cache** — key ``(graph name, version, canonical pattern, impl)``
-  → ``MatchResult``.  The version component makes stale reads structurally
-  impossible: every ``PropGraph`` mutator bumps ``version``, so a cached
-  result is unreachable the moment its graph changes.  ``purge`` drops the
-  dead entries eagerly when the registry reports a mutation (they would
-  otherwise linger until LRU eviction).
+* **result cache** — key ``(graph name, canonical pattern, impl)`` →
+  ``(version, pattern refs, MatchResult)``.  Freshness is maintained by
+  OVERLAP-BASED purging instead of a version key component: when the
+  registry reports a mutation, the service drops only entries whose
+  pattern footprint (labels/relationships/properties, carried in the
+  value) the mutation's ``MutationEvent`` touches — a result cached at
+  snapshot S keeps serving hits across writes that only grew the delta
+  chain past S with unrelated attributes (docs/ARCHITECTURE.md §11).
+  Structural events (edge inserts/deletes, rebuilds, compaction) purge
+  every entry for the graph.
 
 ``maxsize=0`` disables a cache (every ``get`` misses, ``put`` is a no-op) —
 the benchmark's "coalescing only" configuration.
@@ -70,11 +74,13 @@ class LRUCache:
                 self._data.popitem(last=False)
                 self.evictions += 1
 
-    def purge(self, predicate: Callable[[Hashable], bool]) -> int:
-        """Drop every entry whose KEY satisfies ``predicate``; returns the
-        number dropped (the service's invalidation counter feed)."""
+    def purge(self, predicate: Callable[[Hashable, Any], bool]) -> int:
+        """Drop every entry where ``predicate(key, value)`` holds; returns
+        the number dropped (the service's invalidation counter feed).  The
+        value participates so the result cache can purge by OVERLAP — its
+        entries carry the pattern's attribute footprint (§11)."""
         with self._lock:
-            dead = [k for k in self._data if predicate(k)]
+            dead = [k for k, v in self._data.items() if predicate(k, v)]
             for k in dead:
                 del self._data[k]
             return len(dead)

@@ -209,6 +209,50 @@ class PGClient:
             graph=graph, action="add_edge_properties", name=name, fill=fill,
         )["version"]
 
+    def insert_edges(self, graph: str, src, dst) -> int:
+        """Delta-path edge append (known endpoints, no rebuild)."""
+        return self._call("mutate", [np.asarray(src), np.asarray(dst)],
+                          graph=graph, action="insert_edges")["version"]
+
+    def delete_vertices(self, graph: str, nodes) -> int:
+        return self._call("mutate", [np.asarray(nodes)], graph=graph,
+                          action="delete_vertices")["version"]
+
+    def delete_edges(self, graph: str, src, dst) -> int:
+        return self._call("mutate", [np.asarray(src), np.asarray(dst)],
+                          graph=graph, action="delete_edges")["version"]
+
+    def update_node_properties(self, graph: str, name: str, nodes,
+                               values) -> int:
+        return self._call("mutate", [np.asarray(nodes), np.asarray(values)],
+                          graph=graph, action="update_node_properties",
+                          name=name)["version"]
+
+    def update_edge_properties(self, graph: str, name: str, src, dst,
+                               values) -> int:
+        return self._call(
+            "mutate", [np.asarray(src), np.asarray(dst), np.asarray(values)],
+            graph=graph, action="update_edge_properties", name=name,
+        )["version"]
+
+    # ------------------------------------------------------ snapshots / views
+    def snapshot(self, graph: str, name: Optional[str] = None) -> str:
+        """Pin a frozen snapshot of ``graph`` server-side; queries against
+        the returned name are isolated from later writes to ``graph``."""
+        return self._call("snapshot", graph=graph, name=name)["name"]
+
+    def fork_view(self, graph: str, name: Optional[str] = None) -> str:
+        """Register a writable copy-on-write fork of ``graph``."""
+        return self._call("fork_view", graph=graph, name=name)["name"]
+
+    def drop_view(self, name: str) -> None:
+        self._call("drop_view", name=name)
+
+    def compact(self, graph: str) -> Dict:
+        """Merge ``graph``'s overlay into its base stores; returns the
+        pre-compaction overlay stats."""
+        return self._call("compact", graph=graph)["overlay"]
+
     # ---------------------------------------------------------------- admin
     def ping(self) -> bool:
         return bool(self.server_info()["pong"])

@@ -58,8 +58,22 @@ class GraphRegistry:
         if key not in marks:
             marks.add(key)
             pg.on_mutation(lambda g, _name=name: self._dispatch(_name, g))
+        # registration is structural as far as observers go: anything cached
+        # under this name belongs to whatever was served before, so the
+        # notify must purge ALL of it — not just what the graph's last
+        # (possibly attribute-scoped) mutation event would overlap
+        from repro.overlay.delta import MutationEvent
+
+        pg.last_mutation = MutationEvent.structural_event("register")
         self._notify(name, pg)
         return pg
+
+    def unregister(self, name: str) -> None:
+        """Drop ``name`` (no-op if absent).  The graph's installed hook goes
+        silent via the ``_dispatch`` currency check; no notification fires —
+        observers drop their own state via ``Service.drop_graph``."""
+        with self._lock:
+            self._graphs.pop(name, None)
 
     def _dispatch(self, name: str, pg: PropGraph) -> None:
         with self._lock:

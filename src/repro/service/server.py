@@ -21,7 +21,14 @@ Request ops (header ``{"op": ..., "id": ...}`` + optional array blobs):
     explain {graph, pattern, impl}   planner report (text)
     mutate {graph, action, ...}      add_edges_from / add_node_labels /
                                        add_edge_relationships /
-                                       add_{node,edge}_properties
+                                       add_{node,edge}_properties /
+                                       insert_edges / delete_vertices /
+                                       delete_edges /
+                                       update_{node,edge}_properties
+    snapshot {graph, name?}          pin a frozen snapshot, register it
+    fork_view {graph, name?}         writable copy-on-write view
+    drop_view {name}                 unregister a snapshot/fork
+    compact {graph}                  merge the overlay into base stores
     drain                            stop accepting connections, wait for
                                        every in-flight request
     shutdown                         drain + release the server
@@ -50,6 +57,11 @@ _MUTATORS = (
     "add_edge_relationships",
     "add_node_properties",
     "add_edge_properties",
+    "insert_edges",
+    "delete_vertices",
+    "delete_edges",
+    "update_node_properties",
+    "update_edge_properties",
 )
 
 
@@ -373,11 +385,46 @@ class PGServer:
             nodes, values = arrays
             pg.add_node_properties(header["name"], nodes, values,
                                    fill=header.get("fill", 0))
-        else:  # add_edge_properties
+        elif action == "add_edge_properties":
             src, dst, values = arrays
             pg.add_edge_properties(header["name"], src, dst, values,
                                    fill=header.get("fill", 0))
+        elif action == "insert_edges":
+            src, dst = arrays
+            pg.insert_edges(src, dst)
+        elif action == "delete_vertices":
+            pg.delete_vertices(arrays[0])
+        elif action == "delete_edges":
+            src, dst = arrays
+            pg.delete_edges(src, dst)
+        elif action == "update_node_properties":
+            nodes, values = arrays
+            pg.update_node_properties(header["name"], nodes, values)
+        else:  # update_edge_properties
+            src, dst, values = arrays
+            pg.update_edge_properties(header["name"], src, dst, values)
         return {"version": pg.version}, ()
+
+    # overlay verbs: snapshot isolation over the wire --------------------------
+    def _op_snapshot(self, header, arrays):
+        name = self.service.snapshot_graph(header["graph"],
+                                           name=header.get("name"))
+        pg = self.service.registry.get(name)
+        return {"name": name, "version": pg.version}, ()
+
+    def _op_fork_view(self, header, arrays):
+        name = self.service.fork_graph(header["graph"],
+                                       name=header.get("name"))
+        pg = self.service.registry.get(name)
+        return {"name": name, "version": pg.version}, ()
+
+    def _op_drop_view(self, header, arrays):
+        self.service.drop_graph(header["name"])
+        return {"dropped": header["name"]}, ()
+
+    def _op_compact(self, header, arrays):
+        stats = self.service.compact_graph(header["graph"])
+        return {"compacted": header["graph"], "overlay": stats}, ()
 
     def _op_drain(self, header, arrays):
         self.drain()

@@ -6,7 +6,10 @@ request lifecycle):
     registry (named, versioned graphs)
       └─ scheduler (micro-batches compatible requests, coalesces masks)
            ├─ plan cache    (canonical pattern, backend, impl) → Plan
-           └─ result cache  (graph, version, canonical, impl) → MatchResult
+           └─ result cache  (graph, canonical, impl)
+                              → (version, pattern refs, MatchResult)
+                            invalidated by mutation-event OVERLAP, so
+                            entries survive unrelated writes (§11)
 
 ``submit()`` returns a ``concurrent.futures.Future`` immediately;
 ``query()`` blocks on one request; ``query_batch()`` is the synchronous
@@ -23,6 +26,7 @@ import threading
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Union
 
+from repro.overlay.delta import overlaps, pattern_refs
 from repro.query import Pattern, execute_plan, parse, plan_pattern
 from repro.service.cache import LRUCache
 from repro.service.registry import GraphRegistry
@@ -46,6 +50,8 @@ class ServiceConfig:
     coalesce: bool = True  # fuse compatible mask steps into batched launches
     submit_fastpath: bool = True  # resolve result-cache hits at submit(),
     # before the queue — hot patterns skip the batching window entirely
+    auto_compact_threshold: Optional[int] = None  # overlay entries per graph
+    # before the background Compactor folds deltas into the base (None = off)
 
 
 @dataclasses.dataclass
@@ -80,9 +86,18 @@ class Service:
             window_ms=self.config.window_ms,
             adaptive=self.config.adaptive_window,
         )
+        self._compactor = None
+        if self.config.auto_compact_threshold is not None:
+            from repro.overlay.compactor import Compactor
+
+            self._compactor = Compactor(
+                self.registry, self.config.auto_compact_threshold)
+            self._compactor.start()
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
+        if self._compactor is not None:
+            self._compactor.stop()
         self._batcher.close()
         # a shared registry must not keep feeding (and pinning) this
         # service's caches after shutdown
@@ -106,6 +121,51 @@ class Service:
         self.registry.load(name, path, backend=backend, mesh=mesh)
         return self
 
+    def snapshot_graph(self, graph: str, name: Optional[str] = None) -> str:
+        """Pin an immutable snapshot of ``graph`` and serve it under its own
+        name (default ``"<graph>@s<version>"``).  The snapshot shares the
+        parent's device-resident base — zero-copy — and never changes, so
+        results cached under the snapshot name stay valid FOREVER while the
+        parent keeps absorbing writes (docs/ARCHITECTURE.md §11).  Taking
+        the same snapshot name at the same parent version is idempotent."""
+        pg = self.registry.get(graph)
+        name = name if name is not None else f"{graph}@s{pg.version}"
+        try:
+            existing = self.registry.get(name)
+            if existing.frozen and existing.version == pg.version:
+                return name  # same pin — keep it (and its cached results)
+        except KeyError:
+            pass
+        self.registry.register(name, pg.snapshot())
+        self._bump("snapshots")
+        return name
+
+    def fork_graph(self, graph: str, name: Optional[str] = None) -> str:
+        """Register a writable copy-on-write view of ``graph`` (default name
+        ``"<graph>@fork<version>"``) — the per-tenant what-if branch."""
+        pg = self.registry.get(graph)
+        name = name if name is not None else f"{graph}@fork{pg.version}"
+        self.registry.register(name, pg.fork())
+        self._bump("forks")
+        return name
+
+    def drop_graph(self, name: str) -> "Service":
+        """Stop serving ``name`` (snapshot, fork or plain graph) and drop
+        every result cached under it."""
+        self.registry.unregister(name)
+        dropped = self.result_cache.purge(lambda k, v: k[0] == name)
+        if dropped:
+            self._bump("invalidated_results", dropped)
+        return self
+
+    def compact_graph(self, name: str) -> Dict[str, int]:
+        """Foreground compaction of ``name``'s overlay; returns the overlay
+        stats that were folded in (all zero = it was already compact)."""
+        pg = self.registry.get(name)
+        stats = pg.delta_stats()
+        pg.compact()
+        return stats
+
     # --------------------------------------------------------------- clients
     def submit(self, graph: str, pattern: Union[str, Pattern], *,
                impl: Optional[str] = None) -> Future:
@@ -121,17 +181,16 @@ class Service:
         fut: Future = Future()
         self._bump("submitted")
         if self.config.submit_fastpath:
-            try:
-                pg = self.registry.get(graph)
-            except KeyError:
-                pg = None  # unknown graph: uniform error path via the worker
-            if pg is not None:
-                hit = self.result_cache.get((graph, pg.version, canonical, impl))
+            if graph in self.registry:
+                # entry liveness is maintained by overlap purging, not a
+                # version key: a hit here may have been cached several
+                # (non-overlapping) writes ago and is still exact (§11)
+                hit = self.result_cache.get((graph, canonical, impl))
                 if hit is not None:
                     self._bump("result_hits")
                     self._bump("fastpath_hits")
                     self._bump("completed")
-                    fut.set_result(hit)
+                    fut.set_result(hit[2])
                     return fut
         self._batcher.submit(
             _Request(graph=graph, canonical=canonical, ast=ast, impl=impl,
@@ -239,13 +298,12 @@ class Service:
         mid-flight mutation (torn graph/store view) retries the group and
         nothing torn is ever cached or returned as authoritative."""
         outcomes: Dict[str, object] = {}
-        version = pg.version
         todo: Dict[str, Pattern] = {}
         for canonical, ast in canon_asts.items():
-            hit = self.result_cache.get((graph, version, canonical, impl))
+            hit = self.result_cache.get((graph, canonical, impl))
             if hit is not None:
                 self._bump("result_hits")
-                outcomes[canonical] = hit
+                outcomes[canonical] = hit[2]
             else:
                 self._bump("result_misses")
                 todo[canonical] = ast
@@ -283,21 +341,40 @@ class Service:
             if pg.version == version:
                 stable = True
                 break  # consistent snapshot — safe to cache
+        put_keys = []
         for c, res in zip(keys, results):
             if isinstance(res, BaseException):
                 outcomes[c] = res
                 self._bump("errors")
             else:
                 if stable:
-                    self.result_cache.put((graph, version, c, impl), res)
+                    refs = pattern_refs(canon_asts[c])
+                    self.result_cache.put((graph, c, impl), (version, refs, res))
+                    put_keys.append((graph, c, impl))
                 outcomes[c] = res
+        if put_keys and pg.version != version:
+            # a write landed between the stability check and the put: the
+            # overlap purge it triggered may have run BEFORE our put made
+            # the entry visible — without a version in the key that entry
+            # would now serve stale hits forever, so drop our own puts
+            for k in put_keys:
+                self.result_cache.purge(lambda kk, vv, _k=k: kk == _k)
         return outcomes
 
     def _on_mutation(self, name: str, pg) -> None:
-        """Registry subscriber: eagerly drop result-cache entries for the
-        mutated graph.  Versioned keys already make them unreachable; the
-        purge frees the memory and feeds the invalidation counters."""
-        dropped = self.result_cache.purge(lambda key: key[0] == name)
+        """Registry subscriber: drop result-cache entries the mutation can
+        have changed.  Attribute-scoped events (``pg.last_mutation``) purge
+        by OVERLAP with each entry's pattern footprint — a result cached at
+        snapshot S survives writes that only grew the delta chain past S
+        with attributes its pattern never reads.  Structural events (edge
+        inserts/deletes, rebuilds, compaction, registration) and graphs
+        without event info purge everything under the name (§11)."""
+        ev = getattr(pg, "last_mutation", None)
+        if ev is None or ev.structural:
+            dropped = self.result_cache.purge(lambda k, v: k[0] == name)
+        else:
+            dropped = self.result_cache.purge(
+                lambda k, v, _ev=ev: k[0] == name and overlaps(_ev, v[1]))
         self._bump("invalidation_events")
         if dropped:
             self._bump("invalidated_results", dropped)

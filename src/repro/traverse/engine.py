@@ -162,6 +162,14 @@ def khop_csr(
     use ``khop_mask(direction=-1)`` / ``build_reverse_di`` for pull-side
     walks.  Bitwise-equal to ``khop_mask`` — the union of ≤k expansions is
     the union of the first k BFS levels."""
+    if getattr(g, "unsorted", False):
+        # combined base++delta overlay view: SEG covers only the sorted base
+        # prefix, so the adjacency windows this path gathers would silently
+        # miss every delta edge — the caller must use the edge-centric
+        # ``khop_mask`` (PropGraph.khop degrades automatically)
+        raise ValueError(
+            "khop_csr requires a sorted DI graph with valid SEG; got an "
+            "unsorted combined view — use khop_mask instead")
     e_ok = _all_edges(g, edge_allowed)
     if max_deg is None:
         max_deg = g.max_deg if g.max_deg >= 0 else int(

@@ -1,0 +1,565 @@
+"""Overlay subsystem semantics (src/repro/overlay/, docs/ARCHITECTURE.md §11).
+
+The contracts under test:
+
+* sealed-store attribute mutations land in the delta and query results are
+  bitwise what a from-scratch build with the same attributes produces, on
+  all three DIP backends — including attribute VALUES first seen after the
+  base was sealed;
+* ``insert_edges`` (delta edges) / ``delete_vertices`` / ``delete_edges``
+  (tombstones) flow through ``match`` / ``khop`` / ``components`` exactly;
+* ``snapshot()`` pins an immutable view (writes behind it are invisible,
+  its mutators raise); ``fork()`` branches a private writable overlay;
+* ``compact()`` is a pure layout change: answers bitwise-identical to a
+  from-scratch build of the surviving state;
+* the service's overlap-based result-cache invalidation: non-overlapping
+  writes keep cached results live, overlapping or structural writes purge,
+  snapshot-pinned entries survive parent writes;
+* no-op mutations never bump the version (cached results stay live);
+* ``save_propgraph`` flattens an overlay on a private fork (compact-on-
+  save) so reloads round-trip, without touching the caller's overlay.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PropGraph
+from repro.graph import random_uniform_graph
+from repro.launch.pgserve import build_tenant_graph
+from repro.service import GraphRegistry, Service, ServiceConfig
+
+BACKENDS = ("arr", "list", "listd")
+PATTERN = "(a:l1|l2)-[:follows]->(b:l3)"
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+def _edge_pair_set(pg, emask):
+    """Edge mask → set of external (u, v) pairs, so masks over differently
+    ORDERED edge lists (base++delta view vs sorted rebuild) compare."""
+    g = pg._require_graph()
+    em = np.asarray(emask)
+    nm = np.asarray(g.node_map)
+    s, d = np.asarray(g.src)[em], np.asarray(g.dst)[em]
+    return set(zip(nm[s].tolist(), nm[d].tolist()))
+
+
+def _build(backend, m=400, seed=3):
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes, rng.choice(["l1", "l2", "l3"], size=len(nodes)))
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.add_edge_relationships(nodes[es], nodes[ed],
+                              rng.choice(["follows", "likes"], size=len(es)))
+    return pg
+
+
+def _replay(backend, m, seed, extra_labels=(), extra_rels=()):
+    """From-scratch reference: the same base build plus the given attribute
+    batches applied to UNSEALED stores (the pre-overlay rebuild path)."""
+    pg = _build(backend, m, seed)
+    for nodes, labs in extra_labels:
+        pg.add_node_labels(nodes, labs)
+    for s, d, r in extra_rels:
+        pg.add_edge_relationships(s, d, r)
+    return pg
+
+
+# ----------------------------------------------------------- delta queries
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sealed_label_delta_query_parity(backend):
+    pg = _build(backend)
+    nodes = np.asarray(pg.graph.node_map)
+    _ = np.asarray(pg.query_labels(["l1"]))  # builds the store → sealed
+    assert pg._vstore.sealed
+    batches = [(nodes[:50], ["zz"] * 50),       # value unseen at seal time
+               (nodes[50:90], ["l1"] * 40)]     # existing value
+    for n, l in batches:
+        pg.add_node_labels(n, l)
+    assert pg._vstore._delta.size > 0  # really went down the delta path
+    ref = _replay(backend, 400, 3, extra_labels=batches)
+    for q in (["l1"], ["zz"], ["l1", "zz"], ["l2"], [], ["nope"]):
+        assert _eq(pg.query_labels(q), ref.query_labels(q)), q
+    # exact stats too: a delta pair duplicating a base pair counts once
+    # (set semantics — computed independently here because the unsealed
+    # listd base keeps duplicate pairs in its CSR segments)
+    rng = np.random.default_rng(3)
+    base_labels = rng.choice(["l1", "l2", "l3"], size=len(nodes))
+    pairs = set(zip(nodes.tolist(), base_labels.tolist()))
+    for n, l in batches:
+        pairs |= set(zip(n.tolist(), l))
+    want = {}
+    for _, lab in pairs:
+        want[lab] = want.get(lab, 0) + 1
+    assert pg.label_counts() == want
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sealed_relationship_delta_query_parity(backend):
+    pg = _build(backend)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    _ = np.asarray(pg.query_relationships(["follows"]))  # seal
+    assert pg._estore.sealed
+    batch = (nodes[es[:30]], nodes[ed[:30]], ["mentions"] * 30)
+    pg.add_edge_relationships(*batch)
+    assert pg._estore._delta.size > 0
+    ref = _replay(backend, 400, 3, extra_rels=[batch])
+    for q in (["follows"], ["mentions"], ["follows", "mentions"], ["likes"]):
+        assert _eq(pg.query_relationships(q), ref.query_relationships(q)), q
+    assert pg.relationship_counts() == ref.relationship_counts()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sealed_delta_match_parity(backend):
+    """Full declarative matches read the delta through the mask union."""
+    pg = _build(backend)
+    nodes = np.asarray(pg.graph.node_map)
+    ref0 = pg.match(PATTERN)  # seals both stores
+    pg.add_node_labels(nodes[:25], ["l1"] * 25)
+    ref = _replay(backend, 400, 3, extra_labels=[(nodes[:25], ["l1"] * 25)])
+    got, want = pg.match(PATTERN), ref.match(PATTERN)
+    assert _eq(got.vertex_mask, want.vertex_mask)
+    assert _eq(got.edge_mask, want.edge_mask)
+    assert not _eq(got.vertex_mask, ref0.vertex_mask)  # the write is visible
+
+
+# ------------------------------------------------------------- delta edges
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_insert_edges_match_khop_components_parity(backend):
+    pg = _build(backend, m=400, seed=5)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.match(PATTERN)  # seal
+    m_base = pg.n_edges
+    rng = np.random.default_rng(11)
+    bs, bd = rng.choice(nodes, 64), rng.choice(nodes, 64)
+    pg.insert_edges(bs, bd)
+    pg.add_edge_relationships(bs, bd, ["follows"] * 64)
+    assert pg.delta_stats()["delta_edges"] > 0
+    assert pg.n_edges == m_base + pg.delta_stats()["delta_edges"]
+
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    ref = PropGraph(backend=backend).add_edges_from(
+        np.concatenate([nodes[es], bs]), np.concatenate([nodes[ed], bd]))
+    rng2 = np.random.default_rng(5)
+    ref.add_node_labels(nodes, rng2.choice(["l1", "l2", "l3"],
+                                           size=len(nodes)))
+    ref.add_edge_relationships(
+        nodes[es], nodes[ed],
+        rng2.choice(["follows", "likes"], size=len(es)))
+    ref.add_edge_relationships(bs, bd, ["follows"] * 64)
+
+    got, want = pg.match(PATTERN), ref.match(PATTERN)
+    assert _eq(got.vertex_mask, want.vertex_mask)
+    assert _edge_pair_set(pg, got.edge_mask) == _edge_pair_set(ref, want.edge_mask)
+    seeds = nodes[:8]
+    assert _eq(pg.khop(seeds, 3), ref.khop(seeds, 3))
+    assert _eq(pg.components("(a)-[:follows]->(b)"),
+               ref.components("(a)-[:follows]->(b)"))
+
+
+def test_insert_edges_dedup_and_unknown_endpoints():
+    pg = _build("arr")
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.match(PATTERN)
+    v0 = pg.version
+    # re-inserting existing base edges is a no-op (DI: one edge per (u, v))
+    pg.insert_edges(nodes[es[:10]], nodes[ed[:10]])
+    assert pg.version == v0 and not pg.has_overlay()
+    # within-delta duplicates collapse too
+    pg.insert_edges([nodes[0]] * 3, [nodes[-1]] * 3)
+    assert pg.delta_stats()["delta_edges"] <= 1
+    with pytest.raises(ValueError, match="add_edges_from"):
+        pg.insert_edges([10**9], [nodes[0]])
+
+
+# -------------------------------------------------------------- tombstones
+def test_tombstone_vertex_blocks_traversal():
+    pg = PropGraph(backend="arr").add_edges_from([0, 1], [1, 2])
+    assert _eq(pg.khop([0], 2),
+               np.ones(3, bool))  # path 0→1→2, node_map = [0, 1, 2]
+    pg.delete_vertices([1])
+    assert _eq(pg.khop([0], 2), [True, False, False])  # 1 dead, 2 cut off
+    assert _eq(pg.components(), [0, -1, 2])  # singletons; dead = -1
+    lab = np.asarray(pg.query_labels([]))
+    assert not lab.any()
+
+
+def test_tombstone_edge_and_revival_semantics():
+    pg = PropGraph(backend="arr").add_edges_from([0, 1], [1, 2])
+    pg.delete_edges([1], [2])
+    assert _eq(pg.khop([0], 2), [True, True, False])
+    v = pg.version
+    pg.delete_edges([1], [2])  # already dead: no-op
+    assert pg.version == v
+    # delete then re-delete of a missing pair is a no-op too
+    pg.delete_edges([2], [0])
+    assert pg.version == v
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tombstones_vs_numpy_reference(backend):
+    """Masked query surfaces against an explicit numpy model of liveness."""
+    pg = _build(backend, m=300, seed=9)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.match(PATTERN)  # seal
+    dead_nodes = nodes[5:9]
+    pg.delete_vertices(dead_nodes)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.delete_edges(nodes[es[:7]], nodes[ed[:7]])
+
+    alive_v = np.ones(len(nodes), bool)
+    alive_v[5:9] = False
+    alive_e = np.ones(len(es), bool)
+    alive_e[:7] = False
+    alive_e &= alive_v[es] & alive_v[ed]
+
+    ref = _build(backend, m=300, seed=9)
+    lab = np.asarray(ref.query_labels(["l1"]))
+    assert _eq(pg.query_labels(["l1"]), lab & alive_v)
+    rel = np.asarray(ref.query_relationships(["follows"]))
+    assert _eq(pg.query_relationships(["follows"]), rel & alive_e)
+    got = pg.match(PATTERN)
+    assert not np.asarray(got.vertex_mask)[~alive_v].any()
+    assert not np.asarray(got.edge_mask)[~alive_e].any()
+
+
+# -------------------------------------------------------- snapshots / forks
+def test_snapshot_pins_state_and_freezes_mutators():
+    pg = _build("arr")
+    nodes = np.asarray(pg.graph.node_map)
+    before = pg.match(PATTERN)
+    snap = pg.snapshot()
+    assert snap.frozen
+    # parent keeps absorbing every kind of write...
+    pg.add_node_labels(nodes[:20], ["l1"] * 20)
+    pg.insert_edges(nodes[:8], nodes[-8:])
+    pg.delete_vertices(nodes[:1])
+    pg.add_node_properties("age", nodes, np.arange(len(nodes), dtype=np.int32))
+    pg.update_node_properties("age", nodes[:3], [99, 99, 99])
+    # ...and the snapshot still answers from the pinned state
+    got = snap.match(PATTERN)
+    assert _eq(got.vertex_mask, before.vertex_mask)
+    assert _eq(got.edge_mask, before.edge_mask)
+    assert snap.n_edges == len(np.asarray(before.edge_mask))
+    # every mutator on the snapshot raises
+    for call in (
+        lambda: snap.add_edges_from([0], [1]),
+        lambda: snap.insert_edges(nodes[:1], nodes[1:2]),
+        lambda: snap.add_node_labels(nodes[:1], ["x"]),
+        lambda: snap.add_edge_relationships(nodes[:1], nodes[1:2], ["r"]),
+        lambda: snap.add_node_properties("p", nodes[:1], [1]),
+        lambda: snap.delete_vertices(nodes[:1]),
+        lambda: snap.delete_edges(nodes[:1], nodes[1:2]),
+        lambda: snap.compact(),
+    ):
+        with pytest.raises(RuntimeError, match="frozen"):
+            call()
+    # a fork OF the snapshot is writable again
+    branch = snap.fork()
+    branch.add_node_labels(nodes[:2], ["x"] * 2)
+    assert not branch.frozen
+
+
+def test_snapshot_of_graph_with_live_overlay():
+    """The pinned state includes the delta chain as of the snapshot."""
+    pg = _build("arr")
+    nodes = np.asarray(pg.graph.node_map)
+    pg.match(PATTERN)
+    pg.insert_edges(nodes[:6], nodes[-6:])
+    pg.add_node_labels(nodes[:10], ["l1"] * 10)
+    snap = pg.snapshot()
+    want_v = np.asarray(pg.match(PATTERN).vertex_mask)
+    pg.insert_edges(nodes[6:12], nodes[-12:-6])  # grows PAST the snapshot
+    pg.add_node_labels(nodes[10:30], ["l1"] * 20)
+    assert _eq(snap.match(PATTERN).vertex_mask, want_v)
+    assert snap.delta_stats()["delta_edges"] == 6
+
+
+def test_fork_what_if_delete_hub():
+    pg = _build("arr", m=500, seed=7)
+    nodes = np.asarray(pg.graph.node_map)
+    es = np.asarray(pg.graph.src)
+    hub = nodes[np.argmax(np.bincount(es, minlength=len(nodes)))]
+    comps_before = np.asarray(pg.components())
+    v0 = pg.version
+
+    fork = pg.fork()
+    fork.delete_vertices([hub])
+    forked = np.asarray(fork.components())
+    assert not _eq(forked, comps_before)  # the hub held something together
+
+    # the parent never noticed: same answers, same version, no overlay
+    assert _eq(pg.components(), comps_before)
+    assert pg.version == v0 and not pg.has_overlay()
+    # and the fork's own version moved independently
+    assert fork.version == v0 + 1
+
+
+def test_update_properties_are_snapshot_safe():
+    pg = _build("arr")
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_properties("age", nodes, np.full(len(nodes), 10, np.int32))
+    snap = pg.snapshot()
+    pg.update_node_properties("age", nodes[:4], [77] * 4)
+    got = np.asarray(pg.vertex_props["age"][0])
+    assert (got[pg._vertex_internal(nodes[:4])] == 77).all()
+    assert (np.asarray(snap.vertex_props["age"][0]) == 10).all()
+    with pytest.raises(KeyError, match="unknown vertex property"):
+        pg.update_node_properties("nope", nodes[:1], [1])
+    # edge columns pad to the effective edge count when deltas exist
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.add_edge_properties("w", nodes[es], nodes[ed],
+                           np.ones(len(es), np.int32))
+    pg.match(PATTERN)
+    pg.insert_edges(nodes[:5], nodes[-5:])
+    pg.update_edge_properties("w", nodes[:5], nodes[-5:], [3] * 5)
+    col, valid = pg.edge_props["w"]
+    assert int(col.shape[0]) == pg.n_edges
+    assert int(np.asarray(valid).sum()) >= len(es)
+
+
+# -------------------------------------------------------------- compaction
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compact_bitwise_vs_from_scratch(backend):
+    """The acceptance criterion proper: after writes of every kind,
+    ``compact()`` answers exactly like a from-scratch build of the
+    surviving state — match, khop, components."""
+    pg = _build(backend, m=400, seed=13)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.match(PATTERN)  # seal
+    rng = np.random.default_rng(29)
+    bs, bd = rng.choice(nodes, 48), rng.choice(nodes, 48)
+    pg.insert_edges(bs, bd)
+    pg.add_edge_relationships(bs, bd, ["follows"] * 48)
+    pg.add_node_labels(nodes[:30], ["zz"] * 30)
+    pg.delete_vertices(nodes[3:5])
+    pg.delete_edges(nodes[es[:5]], nodes[ed[:5]])
+
+    # surviving external edge list, gathered from the overlay state itself
+    g_eff = pg._require_graph()
+    nm = np.asarray(g_eff.node_map)
+    s_all, d_all = np.asarray(g_eff.src), np.asarray(g_eff.dst)
+    alive = np.ones(len(s_all), bool)
+    if pg._dead_e is not None:
+        alive[pg._dead_e] = False
+    av = ~pg._dead_v
+    alive &= av[s_all] & av[d_all]
+    surv_s, surv_d = nm[s_all[alive]], nm[d_all[alive]]
+
+    pg.compact()
+    assert not pg.has_overlay()
+    assert pg._vstore._pairs_e and not pg._vstore.sealed  # fresh base stores
+
+    ref = PropGraph(backend=backend).add_edges_from(surv_s, surv_d)
+    ref_nodes = np.asarray(ref.graph.node_map)
+    keep = np.isin(nodes, ref_nodes) & av
+    rng2 = np.random.default_rng(13)
+    labels = rng2.choice(["l1", "l2", "l3"], size=len(nodes))
+    rels = rng2.choice(["follows", "likes"], size=len(es))
+    ref.add_node_labels(nodes[keep], labels[keep])
+    ref.add_edge_relationships(nodes[es], nodes[ed], rels)  # dead pairs drop
+    ref.add_edge_relationships(bs, bd, ["follows"] * 48)
+    zkeep = keep[:30]
+    ref.add_node_labels(nodes[:30][zkeep], ["zz"] * int(zkeep.sum()))
+
+    assert pg.n_vertices == ref.n_vertices and pg.n_edges == ref.n_edges
+    got, want = pg.match(PATTERN), ref.match(PATTERN)
+    assert _eq(got.vertex_mask, want.vertex_mask)
+    assert _eq(got.edge_mask, want.edge_mask)
+    seeds = ref_nodes[:8]
+    assert _eq(pg.khop(seeds, 3), ref.khop(seeds, 3))
+    assert _eq(pg.components("(a)-[:follows]->(b)"),
+               ref.components("(a)-[:follows]->(b)"))
+    assert _eq(pg.query_labels(["zz"]), ref.query_labels(["zz"]))
+
+
+def test_compact_is_noop_without_overlay():
+    pg = _build("arr")
+    v0 = pg.version
+    pg.compact()
+    assert pg.version == v0
+
+
+# ------------------------------------------------- service cache contracts
+def test_result_cache_overlap_invalidation():
+    pg = build_tenant_graph("arr", 600, seed=3)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        first = svc.query("g", PATTERN)
+        assert len(svc.result_cache) == 1
+        nodes = np.asarray(pg.graph.node_map)
+
+        # non-overlapping label write: {l9} ∩ {l1,l2,l3} = ∅ → entry lives
+        pg.add_node_labels(nodes[:5], ["l9"] * 5)
+        assert len(svc.result_cache) == 1
+        assert svc.query("g", PATTERN) is first
+
+        # non-overlapping property write: PATTERN references no properties
+        pg.update_node_properties("age", nodes[:3], [1, 2, 3])
+        assert svc.query("g", PATTERN) is first
+
+        # overlapping relationship write → purge + recompute
+        es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+        pg.add_edge_relationships(nodes[es[:6]], nodes[ed[:6]],
+                                  ["follows"] * 6)
+        assert len(svc.result_cache) == 0
+        fresh = svc.query("g", PATTERN)
+        assert fresh is not first
+        assert _eq(fresh.edge_mask, pg.match(PATTERN).edge_mask)
+
+        # structural write (delta edges) → purge everything for the graph
+        svc.query("g", "(a:l9)-[:likes]->(b)")
+        assert len(svc.result_cache) >= 1
+        pg.insert_edges(nodes[:4], nodes[-4:])
+        assert len(svc.result_cache) == 0
+        stats = svc.stats()
+        assert stats["invalidated_results"] >= 2
+
+
+def test_snapshot_results_survive_parent_writes():
+    pg = build_tenant_graph("arr", 600, seed=4)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        snap = svc.snapshot_graph("g")
+        pinned = svc.query(snap, PATTERN)
+        live = svc.query("g", PATTERN)
+        nodes = np.asarray(pg.graph.node_map)
+        # overlapping AND structural writes on the parent
+        pg.add_node_labels(nodes[:9], ["l1"] * 9)
+        pg.insert_edges(nodes[:6], nodes[-6:])
+        # parent entries died, the snapshot's entry is still served
+        assert svc.query(snap, PATTERN) is pinned
+        refreshed = svc.query("g", PATTERN)
+        assert refreshed is not live
+        assert _eq(refreshed.vertex_mask, pg.match(PATTERN).vertex_mask)
+        # snapshot at the same version is idempotent
+        assert svc.snapshot_graph("g") == svc.snapshot_graph("g")
+        # dropping the snapshot clears its cache entries
+        svc.drop_graph(snap)
+        assert snap not in svc.registry
+        assert all(k[0] != snap for k in svc.result_cache._data)
+
+
+def test_noop_mutations_keep_version_and_cache():
+    """Empty batches must not bump the version — a cached result survives
+    all nine mutators fed nothing."""
+    pg = build_tenant_graph("arr", 400, seed=6)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        first = svc.query("g", PATTERN)
+        v0 = pg.version
+        empty = np.zeros(0, np.int64)
+        pg.add_edges_from(empty, empty)
+        pg.add_node_labels(empty, [])
+        pg.add_edge_relationships(empty, empty, [])
+        pg.add_node_properties("p_new", empty, empty)
+        pg.add_edge_properties("q_new", empty, empty, empty)
+        pg.insert_edges(empty, empty)
+        pg.delete_vertices(empty)
+        pg.delete_edges(empty, empty)
+        pg.update_node_properties("age", empty, empty)
+        assert pg.version == v0
+        assert "p_new" not in pg.vertex_props  # no phantom column either
+        assert len(svc.result_cache) == 1
+        assert svc.query("g", PATTERN) is first
+
+
+# -------------------------------------------------------------- compactor
+def test_background_compactor_sweeps_by_threshold():
+    import time
+
+    from repro.overlay.compactor import Compactor
+
+    reg = GraphRegistry()
+    pg = _build("arr", m=300, seed=21)
+    reg.register("g", pg)
+    pg.match(PATTERN)  # seal
+    nodes = np.asarray(pg.graph.node_map)
+    pg.insert_edges(nodes[:20], nodes[-20:])
+    assert pg.has_overlay()
+
+    comp = Compactor(reg, threshold=4, interval=0.01)
+    comp.start()
+    deadline = time.monotonic() + 60
+    while pg.has_overlay() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    comp.stop()
+    assert not pg.has_overlay()
+    assert comp.compactions >= 1
+
+    # frozen snapshots are never compacted; small overlays are left alone
+    pg.insert_edges(nodes[:2], nodes[-2:])
+    snap = pg.snapshot()
+    reg.register("s", snap)
+    small = Compactor(reg, threshold=1000)
+    assert small.sweep() == 0  # under threshold: untouched
+    assert pg.has_overlay()
+    big = Compactor(reg, threshold=1)
+    assert big.sweep() == 1  # pg compacted, snapshot skipped
+    assert not pg.has_overlay() and snap.has_overlay()
+
+
+def test_service_auto_compaction_invalidates_results():
+    """Compaction is structural: when the service's background Compactor
+    folds the overlay in, cached results for the graph die."""
+    import time
+
+    pg = build_tenant_graph("arr", 400, seed=8)
+    cfg = ServiceConfig(auto_compact_threshold=8)
+    with Service(config=cfg) as svc:
+        svc.add_graph("g", pg)
+        svc.query("g", PATTERN)
+        nodes = np.asarray(pg.graph.node_map)
+        pg.insert_edges(nodes[:16], nodes[-16:])  # past the threshold
+        deadline = time.monotonic() + 60
+        while pg.has_overlay() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not pg.has_overlay()
+        assert len(svc.result_cache) == 0
+        got = svc.query("g", PATTERN)
+        assert _eq(got.edge_mask, pg.match(PATTERN).edge_mask)
+
+
+# ------------------------------------------------------------- persistence
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_save_flattens_overlay_and_roundtrips(backend, tmp_path):
+    from repro.core.io import load_propgraph, save_propgraph
+
+    pg = _build(backend, m=300, seed=17)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.match(PATTERN)  # seal
+    pg.insert_edges(nodes[:12], nodes[-12:])
+    pg.add_edge_relationships(nodes[:12], nodes[-12:], ["follows"] * 12)
+    pg.add_node_labels(nodes[:15], ["zz"] * 15)
+    stats_before = pg.delta_stats()
+
+    path = save_propgraph(str(tmp_path / "pg"), pg)
+    # compact-on-save ran on a private fork: the caller's overlay is intact
+    assert pg.delta_stats() == stats_before and pg.has_overlay()
+
+    flat = pg.fork()
+    flat.compact()
+    for b2 in BACKENDS:
+        got = load_propgraph(path, backend=b2)
+        assert got.n_vertices == flat.n_vertices
+        assert got.n_edges == flat.n_edges
+        r1, r2 = got.match(PATTERN), flat.match(PATTERN)
+        assert _eq(r1.vertex_mask, r2.vertex_mask)
+        assert _eq(r1.edge_mask, r2.edge_mask)
+        assert _eq(got.query_labels(["zz"]), flat.query_labels(["zz"]))
+
+    # save → mutate → save again → reload picks up the second overlay too
+    pg.insert_edges(nodes[12:20], nodes[-20:-12])
+    save_propgraph(str(tmp_path / "pg"), pg)
+    flat2 = pg.fork()
+    flat2.compact()
+    got2 = load_propgraph(str(tmp_path / "pg"), backend=backend)
+    assert got2.n_edges == flat2.n_edges
+    assert _eq(got2.match(PATTERN).edge_mask, flat2.match(PATTERN).edge_mask)

@@ -1,0 +1,262 @@
+"""Snapshot isolation under concurrent writes (docs/ARCHITECTURE.md §11).
+
+The overlay's concurrency story: a writer appends to the delta chain
+(host-side chunk lists, reassigned copy-on-write, never edited in place)
+while readers keep answering from a ``snapshot()`` that pinned the chain's
+frozen prefix.  The reader must observe EXACTLY the pinned state — every
+``components()`` / ``match()`` during the write storm bitwise-identical to
+the answer computed before the writer started — with no torn reads and no
+writer blocking.
+
+Two layers, mirroring tests/test_shard_pg.py:
+
+* in-process: writer thread streams ``insert_edges`` batches (the delta
+  write path is pure host work — no device compilation in the writer)
+  while the main thread re-reads the snapshot;
+* ``test_snapshot_isolation_eight_devices_subprocess`` re-runs the race on
+  a P=8 virtual-device mesh in a fresh interpreter, so the sharded query
+  path reads the frozen overlay under write load too.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core import PropGraph
+from repro.graph import random_uniform_graph
+
+PATTERN = "(a:l1|l2)-[:follows]->(b:l3)"
+COMP_PATTERN = "(a)-[:follows]->(b)"
+N_BATCHES = 10
+BATCH = 64
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and bool((a == b).all())
+
+
+def _build(backend="arr", m=800, seed=19):
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    pg.add_node_labels(nodes, rng.choice(["l1", "l2", "l3"], size=len(nodes)))
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    pg.add_edge_relationships(nodes[es], nodes[ed],
+                              rng.choice(["follows", "likes"], size=len(es)))
+    return pg
+
+
+def _batches(nodes, seed=31):
+    rng = np.random.default_rng(seed)
+    return [(rng.choice(nodes, BATCH), rng.choice(nodes, BATCH))
+            for _ in range(N_BATCHES)]
+
+
+def test_snapshot_reads_are_isolated_from_writer_thread():
+    pg = _build()
+    nodes = np.asarray(pg.graph.node_map)
+    np.asarray(pg.match(PATTERN).edge_mask)  # seal → writes go to the delta
+
+    snap = pg.snapshot()
+    # the ground truth, computed BEFORE any write starts — what every read
+    # during the storm must reproduce bitwise
+    want_comp = np.asarray(snap.components(COMP_PATTERN))
+    want_match = np.asarray(snap.match(PATTERN).vertex_mask)
+    want_khop = np.asarray(snap.khop(nodes[:8], 3))
+
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        try:
+            for bs, bd in _batches(nodes):
+                pg.insert_edges(bs, bd)
+                pg.add_edge_relationships(bs, bd, ["follows"] * BATCH)
+                pg.add_node_labels(bs[:8], ["l1"] * 8)
+                time.sleep(0.002)  # interleave with reads
+        except Exception as e:  # surface in the main thread
+            errors.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    reads = 0
+    try:
+        while not stop.is_set() or reads < 5:
+            assert _eq(snap.components(COMP_PATTERN), want_comp)
+            assert _eq(snap.match(PATTERN).vertex_mask, want_match)
+            assert _eq(snap.khop(nodes[:8], 3), want_khop)
+            reads += 1
+            if reads > 500:  # safety valve, never hit in practice
+                break
+    finally:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert reads >= 5
+    assert pg.delta_stats()["delta_edges"] > 0  # the writer really wrote
+
+    # the writer's view converged to a from-scratch build of the final state
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    all_s = np.concatenate([nodes[es]] + [b[0] for b in _batches(nodes)])
+    all_d = np.concatenate([nodes[ed]] + [b[1] for b in _batches(nodes)])
+    ref = PropGraph(backend="arr").add_edges_from(all_s, all_d)
+    rng = np.random.default_rng(19)
+    ref.add_node_labels(nodes, rng.choice(["l1", "l2", "l3"],
+                                          size=len(nodes)))
+    ref.add_edge_relationships(nodes[es], nodes[ed],
+                               rng.choice(["follows", "likes"], size=len(es)))
+    for bs, bd in _batches(nodes):
+        ref.add_edge_relationships(bs, bd, ["follows"] * BATCH)
+        ref.add_node_labels(bs[:8], ["l1"] * 8)
+    assert _eq(pg.components(COMP_PATTERN), ref.components(COMP_PATTERN))
+    assert _eq(pg.khop(nodes[:8], 3), ref.khop(nodes[:8], 3))
+    assert _eq(pg.match(PATTERN).vertex_mask, ref.match(PATTERN).vertex_mask)
+    # ...and the snapshot STILL answers from the pinned state
+    assert _eq(snap.components(COMP_PATTERN), want_comp)
+
+
+def test_service_serves_pinned_snapshot_during_writes():
+    """Same race through the service: the snapshot's cached result keeps
+    serving hits while the parent absorbs a write stream."""
+    from repro.service import Service
+
+    pg = _build(m=600, seed=23)
+    nodes = np.asarray(pg.graph.node_map)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        snap = svc.snapshot_graph("g")
+        pinned = svc.query(snap, PATTERN)
+        want = np.asarray(pinned.vertex_mask)
+
+        stop = threading.Event()
+        errors = []
+
+        def writer():
+            try:
+                for bs, bd in _batches(nodes, seed=37):
+                    pg.insert_edges(bs, bd)
+                    time.sleep(0.002)
+            except Exception as e:
+                errors.append(e)
+            finally:
+                stop.set()
+
+        t = threading.Thread(target=writer)
+        t.start()
+        reads = 0
+        try:
+            while not stop.is_set() or reads < 5:
+                got = svc.query(snap, PATTERN)
+                assert got is pinned  # cache hit: no recompute, no purge
+                assert _eq(got.vertex_mask, want)
+                reads += 1
+                if reads > 500:
+                    break
+        finally:
+            t.join(timeout=60)
+        assert not errors, errors
+        assert reads >= 5
+        # the parent's entries were structurally purged along the way;
+        # a fresh read sees the post-stream graph
+        fresh = np.asarray(svc.query("g", PATTERN).vertex_mask)
+        assert _eq(fresh, pg.match(PATTERN).vertex_mask)
+
+
+_SUBPROCESS_SCRIPT = r"""
+import threading, time
+import numpy as np, jax
+assert len(jax.devices()) == 8, len(jax.devices())
+import sys
+sys.path.insert(0, {src!r})
+from repro.core import PropGraph
+from repro.graph import random_uniform_graph
+from repro.launch.mesh import make_entity_mesh
+
+PATTERN = "(a:l1|l2)-[:follows]->(b:l3)"
+COMP = "(a)-[:follows]->(b)"
+mesh = make_entity_mesh()
+assert mesh.devices.size == 8
+
+rng = np.random.default_rng(19)
+src, dst = random_uniform_graph(800, seed=19)
+pg = PropGraph(backend="arr", mesh=mesh).add_edges_from(src, dst)
+nodes = np.asarray(pg.graph.node_map)
+pg.add_node_labels(nodes, rng.choice(["l1", "l2", "l3"], size=len(nodes)))
+es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+pg.add_edge_relationships(nodes[es], nodes[ed],
+                          rng.choice(["follows", "likes"], size=len(es)))
+np.asarray(pg.match(PATTERN).edge_mask)  # seal the sharded stores
+
+snap = pg.snapshot()
+want_comp = np.asarray(snap.components(COMP))
+want_match = np.asarray(snap.match(PATTERN).vertex_mask)
+
+brng = np.random.default_rng(31)
+batches = [(brng.choice(nodes, 64), brng.choice(nodes, 64))
+           for _ in range(10)]
+stop = threading.Event()
+errors = []
+
+def writer():
+    try:
+        for bs, bd in batches:
+            pg.insert_edges(bs, bd)
+            pg.add_edge_relationships(bs, bd, ["follows"] * 64)
+            time.sleep(0.002)
+    except Exception as e:
+        errors.append(e)
+    finally:
+        stop.set()
+
+t = threading.Thread(target=writer)
+t.start()
+reads = 0
+while not stop.is_set() or reads < 3:
+    assert (np.asarray(snap.components(COMP)) == want_comp).all(), reads
+    assert (np.asarray(snap.match(PATTERN).vertex_mask) == want_match).all(), reads
+    reads += 1
+    if reads > 500:
+        break
+t.join(timeout=60)
+assert not errors, errors
+assert reads >= 3
+assert pg.delta_stats()["delta_edges"] > 0
+
+# the mesh parent converged to the single-device delta-path answer
+ref = PropGraph(backend="arr").add_edges_from(src, dst)
+rng2 = np.random.default_rng(19)
+ref.add_node_labels(nodes, rng2.choice(["l1", "l2", "l3"], size=len(nodes)))
+ref.add_edge_relationships(nodes[es], nodes[ed],
+                           rng2.choice(["follows", "likes"], size=len(es)))
+np.asarray(ref.match(PATTERN).edge_mask)  # seal → same delta path
+for bs, bd in batches:
+    ref.insert_edges(bs, bd)
+    ref.add_edge_relationships(bs, bd, ["follows"] * 64)
+assert (np.asarray(pg.components(COMP)) == np.asarray(ref.components(COMP))).all()
+assert (np.asarray(pg.match(PATTERN).vertex_mask)
+        == np.asarray(ref.match(PATTERN).vertex_mask)).all()
+assert (np.asarray(snap.components(COMP)) == want_comp).all()  # still pinned
+print("OVERLAY8 OK")
+"""
+
+
+def test_snapshot_isolation_eight_devices_subprocess():
+    """The same race on a guaranteed P=8 mesh: sharded snapshot reads stay
+    pinned while the writer streams delta batches."""
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"  # skip accelerator probing in the child
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _SUBPROCESS_SCRIPT.format(src=os.path.abspath(src_dir))],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OVERLAY8 OK" in proc.stdout

@@ -26,6 +26,7 @@ CHECKED_DOCS = [
     "docs/ARCHITECTURE.md",
     "src/repro/query/README.md",
     "src/repro/service/README.md",
+    "src/repro/overlay/README.md",
 ]
 NO_DESIGN_REF_TREES = [
     "src/repro/core",
