@@ -29,7 +29,9 @@ bitwise-identical to the default single-device path.
 """
 from __future__ import annotations
 
+import functools
 import operator
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -45,6 +47,26 @@ from repro.overlay.delta import AttrDelta, EdgeDelta, MutationEvent, pair_keys
 __all__ = ["PropGraph", "BACKENDS"]
 
 BACKENDS = ("arr", "list", "listd")
+
+
+def _write_locked(fn):
+    """Serialize a mutator (or ``compact``) on the per-graph write lock.
+
+    Writes and compaction are mutually exclusive: ``compact_propgraph``
+    gathers the overlay, rebuilds, then swaps the stores — a mutation
+    landing inside that window would be silently discarded by the swap, so
+    every path that changes graph state takes the same re-entrant lock
+    (re-entrant because ``insert_edges`` falls back to ``add_edges_from``
+    and ``compact`` runs nested helpers).  Readers stay lock-free: the
+    service layer re-checks ``version`` around execution and retries torn
+    views, and ``snapshot()`` clones under the lock for a consistent pin."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._write_lock:
+            return fn(self, *args, **kwargs)
+
+    return wrapper
 
 
 class _AttrStore:
@@ -192,7 +214,7 @@ class _AttrStore:
             return np.zeros(0, np.int32), np.zeros(0, np.int32)
         return np.concatenate(ent), np.concatenate(att)
 
-    def attr_counts(self) -> np.ndarray:
+    def attr_counts(self, *, dead_ids: Optional[np.ndarray] = None) -> np.ndarray:
         """(k,) per-attribute entity counts — the DIP selectivity statistics
         the planner orders joins with (bitmap row sums / CSR segment
         lengths; each store carries them for free).  Derived host-side
@@ -200,7 +222,12 @@ class _AttrStore:
         invalidated with the store (``insert`` clears them).  With a live
         delta, the sealed base's counts are padded to the current attribute
         set and the delta's (base-deduped) counts add in — still exact, so
-        the planner never orders joins with stale or estimated stats."""
+        the planner never orders joins with stale or estimated stats.
+
+        ``dead_ids`` (sorted or not) subtracts the contributions of
+        tombstoned entities, so counts agree with what ``query_any`` masked
+        by the alive masks actually returns — ``PropGraph.label_counts`` /
+        ``relationship_counts`` and the planner pass the tombstone set."""
         if self._counts is None:
             self._build_host()  # sets _counts; build stays stashed for the
             # next finalize, so stats-then-query builds once
@@ -211,7 +238,41 @@ class _AttrStore:
                 [counts, np.zeros(k - len(counts), counts.dtype)])
         if self._delta.size:
             counts = counts + self._delta.counts(k, self.base_keys())
+        if dead_ids is not None and np.asarray(dead_ids).size:
+            counts = counts - self._dead_attr_counts(np.asarray(dead_ids))
         return counts
+
+    def _dead_attr_counts(self, dead_ids: np.ndarray) -> np.ndarray:
+        """(k,) per-attribute pair counts held by tombstoned entities.
+
+        Mirrors ``attr_counts``'s accounting exactly — base pairs counted
+        the way the backend stores them (``listd`` keeps duplicate pairs,
+        ``arr``/``list`` dedupe) plus the delta's base-deduped unique pairs
+        — so subtracting it yields the alive-only statistic."""
+        k = self.k
+        out = np.zeros(k, np.int64)
+        ent = np.concatenate(self._pairs_e) if self._pairs_e else np.zeros(0, np.int32)
+        att = np.concatenate(self._pairs_a) if self._pairs_a else np.zeros(0, np.int32)
+        if ent.size:
+            if self.backend != "listd":
+                keys = np.unique(pair_keys(ent, att))
+                ent = (keys >> 31).astype(np.int64)
+                att = (keys & 0x7FFFFFFF).astype(np.int64)
+            sel = np.isin(ent, dead_ids)
+            if sel.any():
+                out += np.bincount(att[sel], minlength=k)[:k]
+        if self._delta.size:
+            de, da = self._delta.cat()
+            keys = np.unique(pair_keys(de, da))
+            bk = self.base_keys()
+            if bk.size:
+                pos = np.clip(np.searchsorted(bk, keys), 0, bk.size - 1)
+                keys = keys[bk[pos] != keys]
+            sel = np.isin((keys >> 31).astype(np.int64), dead_ids)
+            if sel.any():
+                out += np.bincount(
+                    (keys[sel] & 0x7FFFFFFF).astype(np.int64), minlength=k)[:k]
+        return out
 
     @property
     def nnz(self) -> int:
@@ -358,6 +419,9 @@ class PropGraph:
         self._dead_e: Optional[np.ndarray] = None  # sorted global edge ids
         self._eff_cache: Optional[Tuple[int, DIGraph]] = None
         self._frozen = False  # snapshots refuse mutation
+        # serializes mutators + compact() (see _write_locked); re-entrant,
+        # never taken by the read paths
+        self._write_lock = threading.RLock()
 
     # ----------------------------------------------------------- mutation API
     def on_mutation(self, hook) -> "PropGraph":
@@ -379,6 +443,7 @@ class PropGraph:
                 "writable view")
 
     # ------------------------------------------------------------- structure
+    @_write_locked
     def add_edges_from(self, src, dst) -> "PropGraph":
         """Bulk edge ingestion → DI build (sort + normalize + SEG).
 
@@ -403,6 +468,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def insert_edges(self, src, dst) -> "PropGraph":
         """O(batch) structural ingestion: append (src, dst) pairs to the edge
         delta instead of re-sorting the whole DI structure.  Endpoints must
@@ -410,8 +476,16 @@ class PropGraph:
         normalization — that is ``add_edges_from``'s bulk path).  Delta
         edges get global ids ``m_base + i``; queries and analytics see them
         through the combined edge view until ``compact()`` folds them in.
-        Pairs already present (base or delta) are dropped, matching the DI
-        one-structural-edge-per-(u,v) invariant."""
+        Pairs already present ALIVE (base or delta) are dropped, matching
+        the DI one-structural-edge-per-(u,v) invariant.
+
+        Tombstones behave exactly as they do after ``compact()`` made them
+        physical (compaction stays transparent): a pair whose only
+        occurrence is tombstoned (``delete_edges``) is re-inserted as a
+        fresh BARE delta edge — the dead edge's relationships and property
+        values do not carry over, just as a post-compaction re-insert
+        starts clean; an endpoint tombstoned by ``delete_vertices`` raises
+        ``ValueError``, just as the vertex is unknown post-compaction."""
         self._check_writable()
         if self.graph is None:
             return self.add_edges_from(src, dst)
@@ -427,11 +501,25 @@ class PropGraph:
                 f"insert_edges endpoints must already exist; unknown vertices "
                 f"{unknown[:10].tolist()} — use add_edges_from (bulk rebuild) "
                 f"to grow the vertex universe")
+        if self._dead_v is not None:
+            du, dv = self._dead_v[u], self._dead_v[v]
+            if du.any() or dv.any():
+                gone = np.unique(np.concatenate([src[du], dst[dv]]))
+                raise ValueError(
+                    f"insert_edges endpoints {gone[:10].tolist()} are "
+                    f"tombstoned (delete_vertices) — a deleted vertex is "
+                    f"gone before and after compaction; re-add it via "
+                    f"add_edges_from (bulk rebuild)")
         if self._delta_edges is None:
             self._delta_edges = EdgeDelta(self.graph.m)
         base_idx = np.asarray(edge_lookup(self.graph, jnp.asarray(u), jnp.asarray(v)))
-        fresh = base_idx < 0
-        added = self._delta_edges.append(u[fresh], v[fresh]) if fresh.any() else 0
+        alive_in_base = base_idx >= 0
+        if self._dead_e is not None and self._dead_e.size:
+            # a tombstoned base pair no longer exists — it is insertable
+            alive_in_base &= ~np.isin(base_idx, self._dead_e)
+        fresh = ~alive_in_base
+        added = (self._delta_edges.append(u[fresh], v[fresh], dead=self._dead_e)
+                 if fresh.any() else 0)
         if added == 0:
             return self  # every pair already present: caches stay live
         self._estore.out_n = max(self.graph.m + self._delta_edges.size, 1)
@@ -440,6 +528,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def delete_vertices(self, nodes) -> "PropGraph":
         """Tombstone vertices (and implicitly every incident edge) in the
         overlay — the base structure is untouched, so snapshots taken before
@@ -462,6 +551,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def delete_edges(self, src, dst) -> "PropGraph":
         """Tombstone individual edges (base or delta) by endpoint pair."""
         self._check_writable()
@@ -533,9 +623,23 @@ class PropGraph:
                 # base misses may still be delta edges (global ids ≥ m_base)
                 didx = self._delta_edges.lookup(u[miss], v[miss])
                 idx[miss] = np.where((u[miss] >= 0) & (v[miss] >= 0), didx, -1)
+        if self._dead_e is not None and self._dead_e.size:
+            # a tombstoned edge no longer exists at (u, v): resolve to the
+            # revived delta edge (insert_edges after delete_edges) if one
+            # exists, else -1 — so attribute/property writes and deletes
+            # address exactly what a post-compaction graph would hold
+            dead_hit = np.isin(idx, self._dead_e)
+            if dead_hit.any():
+                if self._delta_edges is not None and self._delta_edges.size:
+                    rep = self._delta_edges.lookup(u[dead_hit], v[dead_hit])
+                    rep = np.where(np.isin(rep, self._dead_e), -1, rep)
+                else:
+                    rep = np.full(int(dead_hit.sum()), -1, np.int32)
+                idx[dead_hit] = rep
         return idx
 
     # ------------------------------------------------------------ attributes
+    @_write_locked
     def add_node_labels(self, nodes, labels) -> "PropGraph":
         self._check_writable()
         self._require_graph()
@@ -546,6 +650,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def add_edge_relationships(self, src, dst, relationships) -> "PropGraph":
         self._check_writable()
         self._require_graph()
@@ -556,6 +661,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def add_node_properties(self, name: str, nodes, values, fill=0) -> "PropGraph":
         self._check_writable()
         g = self._require_graph()
@@ -573,6 +679,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def add_edge_properties(self, name: str, src, dst, values, fill=0) -> "PropGraph":
         self._check_writable()
         g = self._require_graph()
@@ -590,6 +697,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def update_node_properties(self, name: str, nodes, values) -> "PropGraph":
         """Point-update an EXISTING typed column: functional scatter onto a
         fresh array, so snapshots holding the previous column are untouched.
@@ -614,6 +722,7 @@ class PropGraph:
         self._bump_version()
         return self
 
+    @_write_locked
     def update_edge_properties(self, name: str, src, dst, values) -> "PropGraph":
         """Point-update an existing edge column; delta edges are addressable
         too (the column pads to the effective edge count on first touch)."""
@@ -668,6 +777,24 @@ class PropGraph:
         if av is not None:
             mask = mask & av[g.src] & av[g.dst]
         return mask
+
+    def _dead_vertex_ids(self) -> Optional[np.ndarray]:
+        """Tombstoned internal vertex ids, or None when nothing is dead —
+        the subtraction set for tombstone-exact attribute stats."""
+        if self._dead_v is None:
+            return None
+        ids = np.flatnonzero(self._dead_v)
+        return ids if ids.size else None
+
+    def _dead_edge_ids(self) -> Optional[np.ndarray]:
+        """Global ids of edges the alive mask excludes (tombstoned edges
+        plus edges detached by a dead endpoint) — same universe as
+        ``_alive_edge_mask``, as ids instead of a mask."""
+        ae = self._alive_edge_mask()
+        if ae is None:
+            return None
+        ids = np.flatnonzero(~np.asarray(ae))
+        return ids if ids.size else None
 
     # --------------------------------------------------------------- queries
     def query_labels(self, labels, *, impl: Optional[str] = None) -> jax.Array:
@@ -935,6 +1062,7 @@ class PropGraph:
 
         return clone_propgraph(self, frozen=False)
 
+    @_write_locked
     def compact(self) -> "PropGraph":
         """Fold the whole overlay (delta edges, delta attribute pairs,
         tombstones) into fresh sealed base stores — the LSM merge step.
@@ -1003,16 +1131,18 @@ class PropGraph:
     def label_counts(self) -> Dict[str, int]:
         """Per-label vertex counts, read off the cached ``attr_counts()``
         stats (host-derived; never a per-value ``query_any`` scan and never
-        a device store upload)."""
+        a device store upload).  Tombstoned vertices are subtracted, so the
+        counts agree with ``query_labels`` (which masks them out)."""
         if self._vstore is None:
             return {}
-        counts = self._vstore.attr_counts()
+        counts = self._vstore.attr_counts(dead_ids=self._dead_vertex_ids())
         return {v: int(counts[i]) for i, v in enumerate(self._vstore.amap.values)}
 
     def relationship_counts(self) -> Dict[str, int]:
         """Per-relationship edge counts, read off the cached
-        ``attr_counts()`` stats (same contract as ``label_counts``)."""
+        ``attr_counts()`` stats (same contract as ``label_counts`` —
+        tombstoned/detached edges subtracted)."""
         if self._estore is None:
             return {}
-        counts = self._estore.attr_counts()
+        counts = self._estore.attr_counts(dead_ids=self._dead_edge_ids())
         return {v: int(counts[i]) for i, v in enumerate(self._estore.amap.values)}

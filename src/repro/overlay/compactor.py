@@ -16,7 +16,7 @@ compacted — their pinned delta chain IS their contract.
 from __future__ import annotations
 
 import threading
-from typing import Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,6 +36,11 @@ def compact_propgraph(pg: PropGraph) -> PropGraph:
     is lost when stores are swapped), rebuild the DI structure from the
     surviving original-id edge list, then remap attribute pairs and typed
     columns through the old→new internal-id maps.
+
+    Runs under the graph's write lock (``PropGraph.compact`` takes it, as
+    does every mutator), so no mutation can land between the gather and the
+    swap and be discarded.  Lock-free readers may observe the swap torn;
+    the version bump that follows makes the service retry them.
     """
     g_eff = pg._require_graph()
     base = pg.graph
@@ -142,11 +147,24 @@ class Compactor(threading.Thread):
     """Background merge policy: sweep a registry, compact writable graphs
     whose overlay crossed ``threshold`` entries.
 
-    The service's ``_serve_group`` already retries executions whose graph
-    version moved underneath them, so a compaction landing mid-query is
-    indistinguishable from any other concurrent write.  ``sweep()`` is
-    callable directly for deterministic tests.
+    Safe against concurrent WRITERS because ``PropGraph.compact()`` and
+    every mutator serialize on the graph's write lock — a client write can
+    never land inside the gather→rebuild→swap window and be discarded by
+    the swap.  Concurrent READERS need no lock: the service's
+    ``_serve_group`` retries executions whose graph version moved
+    underneath them, so a compaction landing mid-query is
+    indistinguishable from any other write.  ``sweep()`` is callable
+    directly for deterministic tests.
+
+    Failures are never silent: a per-graph compaction error is counted
+    (``errors``/``last_error``, surfaced through ``Service.stats()``) and
+    after ``MAX_FAILURES`` consecutive failures the graph is skipped — a
+    deterministically-failing graph cannot pin the thread in a hot retry
+    loop; its counter resets if a later manual ``compact()`` drains the
+    overlay or a sweep succeeds.
     """
+
+    MAX_FAILURES = 3  # consecutive per-graph failures before it is skipped
 
     def __init__(self, registry, threshold: int, interval: float = 0.05):
         super().__init__(daemon=True, name="overlay-compactor")
@@ -154,6 +172,9 @@ class Compactor(threading.Thread):
         self.threshold = threshold
         self.interval = interval
         self.compactions = 0
+        self.errors = 0
+        self.last_error: Optional[str] = None
+        self._failures: Dict[str, int] = {}  # graph name → consecutive failures
         self._stop_evt = threading.Event()
 
     def sweep(self) -> int:
@@ -165,18 +186,45 @@ class Compactor(threading.Thread):
                 continue  # dropped between names() and get()
             if pg is None or getattr(pg, "_frozen", False):
                 continue
-            if pg.overlay_size() >= self.threshold:
+            if pg.overlay_size() < self.threshold:
+                # overlay below threshold — if it previously failed here,
+                # something (a manual compact) drained it: forgive it
+                self._failures.pop(name, None)
+                continue
+            if self._failures.get(name, 0) >= self.MAX_FAILURES:
+                continue  # repeatedly failing graph: stop burning CPU on it
+            try:
                 pg.compact()
-                done += 1
+            except Exception as e:  # noqa: BLE001 — isolate to this graph
+                self.errors += 1
+                self._failures[name] = self._failures.get(name, 0) + 1
+                self.last_error = f"{name}: {type(e).__name__}: {e}"
+                continue
+            self._failures.pop(name, None)
+            done += 1
         self.compactions += done
         return done
 
+    def stats(self) -> Dict[str, object]:
+        """Operator-facing counters (``Service.stats()['compactor']``)."""
+        return {
+            "compactions": self.compactions,
+            "errors": self.errors,
+            "last_error": self.last_error,
+            "failing_graphs": dict(self._failures),
+        }
+
     def run(self) -> None:
-        while not self._stop_evt.wait(self.interval):
+        delay = self.interval
+        while not self._stop_evt.wait(delay):
             try:
                 self.sweep()
-            except Exception:  # noqa: BLE001 — a torn sweep must not kill the thread
-                pass
+                delay = self.interval
+            except Exception as e:  # noqa: BLE001 — registry-level failure:
+                # record it and back off instead of spinning silently
+                self.errors += 1
+                self.last_error = f"sweep: {type(e).__name__}: {e}"
+                delay = min(max(delay * 2, self.interval), 2.0)
 
     def stop(self, timeout: Optional[float] = 2.0) -> None:
         self._stop_evt.set()

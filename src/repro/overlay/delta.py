@@ -124,7 +124,10 @@ class EdgeDelta:
     Delta edges get GLOBAL edge ids ``m_base + position`` — attribute and
     property writes address them uniformly with base edges.  ``append``
     dedupes within the delta (the DI structure keeps one structural edge
-    per (u, v); callers drop base duplicates via ``edge_lookup`` first).
+    per (u, v); callers drop ALIVE base duplicates via ``edge_lookup``
+    first).  ``size`` counts physical appended edges — a revive (see
+    ``append``'s ``dead`` parameter) orphans its tombstoned predecessor in
+    the chunks, so ``size`` can exceed ``len(_index)``.
     """
 
     def __init__(self, m_base: int):
@@ -132,22 +135,33 @@ class EdgeDelta:
         self._src: List[np.ndarray] = []
         self._dst: List[np.ndarray] = []
         self._index: Dict[Tuple[int, int], int] = {}
+        self._n = 0  # physical appended edges == Σ chunk lengths
         self._cat: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
     @property
     def size(self) -> int:
-        return len(self._index)
+        return self._n
 
-    def append(self, src: np.ndarray, dst: np.ndarray) -> int:
-        """Add (src, dst) pairs not yet in the delta; returns how many were new."""
+    def append(self, src: np.ndarray, dst: np.ndarray,
+               dead: Optional[np.ndarray] = None) -> int:
+        """Add (src, dst) pairs not yet LIVE in the delta; returns how many
+        were appended.  ``dead`` (tombstoned global edge ids) marks index
+        entries that no longer exist: a key currently mapped to a dead id
+        is re-mapped to a fresh id — the revive path ``insert_edges`` uses
+        after ``delete_edges``.  The dead physical edge stays in the chunks
+        (its tombstone keeps masking it); ``lookup`` answers with the
+        latest, live id."""
         src = np.asarray(src, np.int32).ravel()
         dst = np.asarray(dst, np.int32).ravel()
+        dead_set = (frozenset(map(int, np.asarray(dead).ravel()))
+                    if dead is not None else frozenset())
         ns, nd = [], []
         idx = self._index
-        gid = self.m_base + len(idx)
+        gid = self.m_base + self._n
         for u, v in zip(src.tolist(), dst.tolist()):
             key = (u, v)
-            if key in idx:
+            cur = idx.get(key)
+            if cur is not None and cur not in dead_set:
                 continue
             idx[key] = gid
             gid += 1
@@ -157,11 +171,13 @@ class EdgeDelta:
             return 0
         self._src.append(np.asarray(ns, np.int32))
         self._dst.append(np.asarray(nd, np.int32))
+        self._n += len(ns)
         self._cat = None
         return len(ns)
 
     def lookup(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
-        """Global edge ids for (src, dst) pairs; -1 where absent."""
+        """Global edge ids for (src, dst) pairs; -1 where absent.  A revived
+        pair answers with its latest (live) id, never the orphaned one."""
         src = np.asarray(src).ravel()
         dst = np.asarray(dst).ravel()
         idx = self._index
@@ -181,6 +197,7 @@ class EdgeDelta:
         c._src = list(self._src)
         c._dst = list(self._dst)
         c._index = dict(self._index)
+        c._n = self._n
         c._cat = self._cat
         return c
 

@@ -24,6 +24,8 @@ functionally by the mutators, never mutated in place:
 """
 from __future__ import annotations
 
+import threading
+
 from repro.core.attr_map import AttributeMap  # noqa: F401  (re-export site)
 from repro.core.property_graph import PropGraph
 
@@ -31,21 +33,27 @@ __all__ = ["clone_propgraph"]
 
 
 def clone_propgraph(pg: PropGraph, *, frozen: bool) -> PropGraph:
-    c = PropGraph.__new__(PropGraph)
-    c.backend = pg.backend
-    c.mesh = pg.mesh
-    c.graph = pg.graph
-    c._vstore = pg._vstore.clone() if pg._vstore is not None else None
-    c._estore = pg._estore.clone() if pg._estore is not None else None
-    c.vertex_props = dict(pg.vertex_props)
-    c.edge_props = dict(pg.edge_props)
-    c.version = pg.version
-    c.last_mutation = None
-    c._mutation_hooks = []  # observers watch the parent, not its views
-    c._delta_edges = (pg._delta_edges.frozen_copy()
-                      if pg._delta_edges is not None else None)
-    c._dead_v = pg._dead_v  # copy-on-write: mutators reassign, never edit
-    c._dead_e = pg._dead_e
-    c._eff_cache = None
-    c._frozen = frozen
-    return c
+    # the parent's write lock keeps the multi-field read consistent — a
+    # concurrent mutator or background compaction cannot hand us a torn
+    # (new graph, old stores) pin; the clone is its own write domain and
+    # gets a fresh lock
+    with pg._write_lock:
+        c = PropGraph.__new__(PropGraph)
+        c.backend = pg.backend
+        c.mesh = pg.mesh
+        c.graph = pg.graph
+        c._vstore = pg._vstore.clone() if pg._vstore is not None else None
+        c._estore = pg._estore.clone() if pg._estore is not None else None
+        c.vertex_props = dict(pg.vertex_props)
+        c.edge_props = dict(pg.edge_props)
+        c.version = pg.version
+        c.last_mutation = None
+        c._mutation_hooks = []  # observers watch the parent, not its views
+        c._delta_edges = (pg._delta_edges.frozen_copy()
+                          if pg._delta_edges is not None else None)
+        c._dead_v = pg._dead_v  # copy-on-write: mutators reassign, never edit
+        c._dead_e = pg._dead_e
+        c._eff_cache = None
+        c._frozen = frozen
+        c._write_lock = threading.RLock()
+        return c

@@ -84,16 +84,20 @@ def validate_pattern(pattern: Pattern) -> None:
             )
 
 
-def _estimate(store, values: Tuple[str, ...], universe: int) -> Tuple[int, float]:
+def _estimate(store, values: Tuple[str, ...], universe: int,
+              counts=None) -> Tuple[int, float]:
     """(estimated hit count, selectivity) for an OR query over ``values``.
 
     Σ of per-attribute counts — exact for disjoint attributes, an upper
     bound under overlap; either way monotone in the true count, which is all
-    the ordering decisions need.
+    the ordering decisions need.  ``counts`` overrides the per-attribute
+    stats (``plan_pattern`` passes the tombstone-adjusted array so the
+    estimates stay exact on graphs with uncompacted deletes).
     """
     if store is None or not values:
         return 0, 0.0
-    counts = store.attr_counts()
+    if counts is None:
+        counts = store.attr_counts()
     ids = store.amap.lookup(list(values))
     ids = ids[ids >= 0]
     est = int(counts[ids].sum()) if ids.size else 0
@@ -126,11 +130,19 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
     vstore, estore = pg._vstore, pg._estore
     validate_pattern(pattern)
 
+    # tombstone-adjusted stats (computed once per plan): dead entities are
+    # masked out of every query result, so they must not inflate the
+    # selectivity estimates either
+    vcounts = (vstore.attr_counts(dead_ids=pg._dead_vertex_ids())
+               if vstore is not None else None)
+    ecounts = (estore.attr_counts(dead_ids=pg._dead_edge_ids())
+               if estore is not None else None)
+
     # -- 1. chain orientation: start from the more selective end ------------
     reversed_chain = False
     if pattern.hops >= 1:
-        first, _ = _estimate(vstore, pattern.nodes[0].labels, g.n)
-        last, _ = _estimate(vstore, pattern.nodes[-1].labels, g.n)
+        first, _ = _estimate(vstore, pattern.nodes[0].labels, g.n, vcounts)
+        last, _ = _estimate(vstore, pattern.nodes[-1].labels, g.n, vcounts)
         first = first if pattern.nodes[0].labels else g.n
         last = last if pattern.nodes[-1].labels else g.n
         if last < first:
@@ -142,7 +154,7 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
     predicate_steps = []
     for slot, node in enumerate(pattern.nodes):
         if node.labels:
-            est, sel = _estimate(vstore, node.labels, g.n)
+            est, sel = _estimate(vstore, node.labels, g.n, vcounts)
             # stats-only read: nnz comes off attr_counts, so planning never
             # materializes a store (mesh mode would otherwise build a dense
             # device copy just to read its size)
@@ -161,7 +173,7 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
             predicate_steps.append(PredicateStep(kind="node", slot=slot, predicate=pred))
     for slot, edge in enumerate(pattern.edges):
         if edge.rels:
-            est, sel = _estimate(estore, edge.rels, g.m)
+            est, sel = _estimate(estore, edge.rels, g.m, ecounts)
             chosen = _choose_impl(pg.backend, est, estore.nnz, estore.k, impl)
             mask_steps.append(
                 MaskStep(

@@ -241,6 +241,10 @@ class Service:
             out: Dict[str, object] = dict(self._stats)
         out["plan_cache"] = self.plan_cache.stats()
         out["result_cache"] = self.result_cache.stats()
+        if self._compactor is not None:
+            # background compactions and their failures must be visible to
+            # operators — a failing graph is skipped, never silently retried
+            out["compactor"] = self._compactor.stats()
         return out
 
     def _bump(self, key: str, n: int = 1) -> None:

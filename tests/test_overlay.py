@@ -506,6 +506,162 @@ def test_background_compactor_sweeps_by_threshold():
     assert not pg.has_overlay() and snap.has_overlay()
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_insert_after_delete_edge_revives_bare(backend):
+    """``delete_edges`` → ``insert_edges`` behaves exactly like the same
+    sequence with ``compact()`` in between (compaction transparency): the
+    pair exists again as a FRESH bare edge — the dead edge's relationships
+    do not carry over — and the re-insert bumps the version so caches
+    invalidate."""
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 0])
+
+    def build():
+        pg = PropGraph(backend=backend).add_edges_from(src, dst)
+        pg.add_edge_relationships([0], [1], ["follows"])
+        pg.add_node_labels([0, 1], ["person", "person"])
+        return pg
+
+    a = build()
+    a.delete_edges([0], [1])
+    v0 = a.version
+    a.insert_edges([0], [1])
+    assert a.version > v0  # the edge universe changed; caches must die
+
+    b = build()
+    b.delete_edges([0], [1])
+    b.compact()
+    b.insert_edges([0], [1])
+
+    for pat in ("(x)-[:follows]->(y)", "(x:person)-[]->(y)"):
+        # pre-compaction: same answers (edge universes differ in order only)
+        assert _eq(a.match(pat).vertex_mask, b.match(pat).vertex_mask), pat
+        assert (_edge_pair_set(a, a.match(pat).edge_mask)
+                == _edge_pair_set(b, b.match(pat).edge_mask)), pat
+    a.compact()
+    b.compact()
+    for pat in ("(x)-[:follows]->(y)", "(x:person)-[]->(y)"):
+        assert _eq(a.match(pat).vertex_mask, b.match(pat).vertex_mask), pat
+        assert _eq(a.match(pat).edge_mask, b.match(pat).edge_mask), pat
+    assert a.n_edges == b.n_edges == 4
+    # the revived edge is bare: the tombstoned edge's relationship is gone
+    assert not np.asarray(a.query_relationships(["follows"])).any()
+
+    # attribute/property writes on the revived pair address the LIVE edge,
+    # and deleting it again kills the revived edge, not the old tombstone
+    c = build()
+    c.delete_edges([0], [1])
+    c.insert_edges([0], [1])
+    c.add_edge_relationships([0], [1], ["likes"])
+    assert c.relationship_counts()["likes"] == 1
+    c.delete_edges([0], [1])
+    assert c.relationship_counts()["likes"] == 0
+    c.compact()
+    assert c.n_edges == 3
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_insert_edges_tombstoned_endpoint_raises(backend):
+    """An endpoint tombstoned by ``delete_vertices`` is gone — inserting an
+    edge at it raises ``ValueError`` BEFORE compaction exactly as it does
+    after (when the vertex has physically left the universe)."""
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 0])
+
+    def build():
+        return PropGraph(backend=backend).add_edges_from(src, dst)
+
+    pre = build().delete_vertices([2])
+    post = build().delete_vertices([2]).compact()
+    for pg in (pre, post):
+        with pytest.raises(ValueError):
+            pg.insert_edges([1], [2])
+        with pytest.raises(ValueError):
+            pg.insert_edges([2], [3])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_counts_subtract_tombstones(backend):
+    """``label_counts`` / ``relationship_counts`` agree with what the
+    tombstone-masked query paths return — the planner's 'exact' stats must
+    not overcount dead entities."""
+    pg = _build(backend, m=300, seed=9)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+
+    pg.delete_vertices(nodes[:40])
+    want_l = {lab: int(np.asarray(pg.query_labels([lab])).sum())
+              for lab in pg.label_set()}
+    assert pg.label_counts() == want_l
+
+    # dead edges = explicit tombstones ++ edges detached by dead endpoints
+    pg.delete_edges(nodes[es[:25]], nodes[ed[:25]])
+    want_r = {r: int(np.asarray(pg.query_relationships([r])).sum())
+              for r in pg.relationship_set()}
+    assert pg.relationship_counts() == want_r
+
+    # post-compaction the same consistency holds (the universe may shrink
+    # further: detached vertices vanish with their labels, like a
+    # from-scratch build of the surviving edges)
+    pg.compact()
+    assert pg.label_counts() == {
+        lab: int(np.asarray(pg.query_labels([lab])).sum())
+        for lab in pg.label_set()}
+    assert pg.relationship_counts() == {
+        r: int(np.asarray(pg.query_relationships([r])).sum())
+        for r in pg.relationship_set()}
+
+
+def test_compactor_records_failures_and_skips():
+    """A deterministically-failing compaction is counted, surfaced and —
+    after MAX_FAILURES consecutive failures — skipped, instead of being
+    retried forever in a silent hot loop.  Draining the overlay by other
+    means (a manual compact) forgives the graph."""
+    from repro.overlay.compactor import Compactor
+
+    reg = GraphRegistry()
+    pg = _build("arr", m=200, seed=33)
+    reg.register("g", pg)
+    pg.match(PATTERN)  # seal
+    nodes = np.asarray(pg.graph.node_map)
+    pg.insert_edges(nodes[:8], nodes[-8:])
+    assert pg.has_overlay()
+
+    comp = Compactor(reg, threshold=1)
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("kaboom")
+
+    pg.compact = boom  # instance attribute shadows the real method
+    for _ in range(comp.MAX_FAILURES + 2):
+        assert comp.sweep() == 0
+    assert len(calls) == comp.MAX_FAILURES  # then skipped, not retried
+    assert comp.errors == comp.MAX_FAILURES
+    assert "kaboom" in comp.last_error
+    assert comp.stats()["failing_graphs"] == {"g": comp.MAX_FAILURES}
+
+    del pg.compact  # restore the real method
+    pg.compact()  # manual drain
+    assert comp.sweep() == 0  # under threshold now...
+    assert comp.stats()["failing_graphs"] == {}  # ...and forgiven
+    pg.insert_edges(nodes[:4], nodes[-4:])
+    assert comp.sweep() == 1  # compacts again once it is healthy
+
+
+def test_service_stats_surface_compactor():
+    cfg = ServiceConfig(auto_compact_threshold=8)
+    with Service(config=cfg) as svc:
+        svc.add_graph("g", build_tenant_graph("arr", 300, seed=5))
+        st = svc.stats()
+        assert st["compactor"]["errors"] == 0
+        assert st["compactor"]["failing_graphs"] == {}
+    # without auto-compaction there is no compactor section
+    with Service() as svc:
+        assert "compactor" not in svc.stats()
+
+
 def test_service_auto_compaction_invalidates_results():
     """Compaction is structural: when the service's background Compactor
     folds the overlay in, cached results for the graph die."""

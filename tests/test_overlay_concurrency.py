@@ -168,6 +168,56 @@ def test_service_serves_pinned_snapshot_during_writes():
         assert _eq(fresh, pg.match(PATTERN).vertex_mask)
 
 
+def test_writes_survive_concurrent_background_compaction():
+    """A writer streaming edge/attribute batches while the background
+    ``Compactor`` repeatedly folds the overlay must lose NOTHING — the
+    per-graph write lock serializes every mutator with compaction's
+    gather→rebuild→swap window, so a write can never land inside it and be
+    discarded by the swap.  The final compacted graph is bitwise what the
+    same batch stream produces with no compactor racing it."""
+    from repro.overlay.compactor import Compactor
+    from repro.service import GraphRegistry
+
+    def run(compactor_threshold):
+        pg = _build(m=600, seed=41)
+        nodes = np.asarray(pg.graph.node_map)
+        np.asarray(pg.match(PATTERN).edge_mask)  # seal → delta write path
+        comp = None
+        if compactor_threshold is not None:
+            reg = GraphRegistry()
+            reg.register("g", pg)
+            comp = Compactor(reg, threshold=compactor_threshold,
+                             interval=0.001)
+            comp.start()
+        try:
+            for bs, bd in _batches(nodes, seed=53):
+                pg.insert_edges(bs, bd)
+                pg.add_edge_relationships(bs, bd, ["follows"] * BATCH)
+                pg.add_node_labels(bs[:8], ["l1"] * 8)
+        finally:
+            if comp is not None:
+                # let the compactor drain the tail of the stream too, so at
+                # least one background compaction is guaranteed to have run
+                deadline = time.monotonic() + 60
+                while pg.has_overlay() and time.monotonic() < deadline:
+                    time.sleep(0.005)
+                comp.stop()
+                assert comp.compactions >= 1
+                assert comp.errors == 0, comp.last_error
+        pg.compact()
+        return pg
+
+    raced = run(compactor_threshold=16)
+    ref = run(compactor_threshold=None)
+    assert raced.n_edges == ref.n_edges
+    assert raced.n_vertices == ref.n_vertices
+    assert _eq(raced.match(PATTERN).vertex_mask, ref.match(PATTERN).vertex_mask)
+    assert _eq(raced.match(PATTERN).edge_mask, ref.match(PATTERN).edge_mask)
+    assert _eq(raced.components(COMP_PATTERN), ref.components(COMP_PATTERN))
+    assert raced.label_counts() == ref.label_counts()
+    assert raced.relationship_counts() == ref.relationship_counts()
+
+
 _SUBPROCESS_SCRIPT = r"""
 import threading, time
 import numpy as np, jax
