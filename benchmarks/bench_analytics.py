@@ -1,0 +1,187 @@
+"""Semiring analytics benchmark: weighted shortest paths, PageRank and
+label-propagation communities through the frontier engine's semiring relax
+(docs/ARCHITECTURE.md §12), single-device vs mesh.
+
+Rows (JSON via ``benchmarks.common.emit_json``; ``BENCH_JSON_PATH`` or the
+``json_path`` arg appends to a file — run.py pins ``BENCH_traverse.json``,
+the frontier engine's trajectory file, since these are its instances):
+
+  * ``shortest_paths_{backend}`` — ``PropGraph.shortest_paths`` over the
+    ``w`` edge property, pattern-filtered: the (min, +) tropical fixed
+    point in ONE jitted ``while_loop``.
+  * ``pagerank_{backend}``       — ``PropGraph.pagerank``, weighted: the
+    (+, ×) counting instance, 20 scan steps.
+  * ``communities_{backend}``    — ``PropGraph.communities``: the mode
+    relax (sort + segment counts per round).
+  * ``{sp,pagerank}_mesh_d{P}``  — the shard_map paths on a P-device
+    sub-mesh (virtual devices — validates the distribution machinery and
+    measures its overhead, like bench_traverse's mesh rows; ``method``
+    records it).
+
+Every timed row is verified against a vectorized numpy oracle first
+(Bellman–Ford / power iteration / synchronous mode propagation) — SP and
+communities bitwise, PageRank within float tolerance; mesh rows verify
+against the single-device result (pmin exact, psum atol).
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede first jax init to take effect
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+
+METHOD = "host-virtual-devices"
+PATTERN = "(a)-[:follows]->(b)"
+N_SEEDS = 16
+PR_ITERS = 20
+
+
+def _build(backend: str, m: int, mesh=None, seed: int = 0):
+    from repro.core import PropGraph
+    from repro.graph import random_uniform_graph
+
+    rng = np.random.default_rng(seed)
+    src, dst = random_uniform_graph(m, seed=seed)
+    pg = PropGraph(backend=backend, mesh=mesh).add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rels = rng.choice(["follows", "likes"], size=len(es), p=[0.3, 0.7])
+    pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    pg.add_edge_properties("w", nodes[es], nodes[ed],
+                           rng.uniform(0.5, 2.0, len(es)).astype(np.float32))
+    return pg, rels
+
+
+def np_bellman_ford(es, ed, w, n, seed_ids, e_ok) -> np.ndarray:
+    """Vectorized numpy Bellman–Ford in f32 — the tropical oracle."""
+    t, h, wv = es[e_ok], ed[e_ok], w[e_ok].astype(np.float32)
+    dist = np.full(n, np.inf, np.float32)
+    dist[seed_ids] = 0.0
+    for _ in range(n + 1):
+        nd = dist.copy()
+        np.minimum.at(nd, h, dist[t] + wv)
+        if np.array_equal(nd, dist):
+            break
+        dist = nd
+    return dist
+
+
+def np_pagerank(es, ed, w, n, *, damping=0.85, iters=PR_ITERS) -> np.ndarray:
+    """Vectorized numpy power iteration in f32 — the counting oracle."""
+    w = w.astype(np.float32)
+    out_deg = np.zeros(n, np.float32)
+    np.add.at(out_deg, es, w)
+    inv = np.where(out_deg > 0, 1.0 / np.maximum(out_deg, 1e-30), 0.0)
+    r = np.full(n, 1.0 / max(n, 1), np.float32)
+    for _ in range(iters):
+        agg = np.zeros(n, np.float32)
+        np.add.at(agg, ed, (r * inv)[es] * w)
+        dangling = np.sum(np.where(out_deg > 0, np.float32(0), r))
+        r = np.float32((1 - damping) / n) + np.float32(damping) * (
+            agg + dangling / np.float32(n))
+    return r
+
+
+def np_label_propagation(es, ed, n, *, max_iters=64) -> np.ndarray:
+    """Vectorized numpy synchronous label propagation — the mode oracle:
+    per round every vertex takes its neighbors' (undirected) most frequent
+    label, smallest label breaking ties; fixed point or ``max_iters``."""
+    heads = np.concatenate([ed, es])
+    tails = np.concatenate([es, ed])
+    labels = np.arange(n, dtype=np.int32)
+    for _ in range(max_iters):
+        lab = labels[tails]
+        key = heads.astype(np.int64) * n + lab
+        uniq, counts = np.unique(key, return_counts=True)
+        uh = (uniq // n).astype(np.int64)
+        ul = (uniq % n).astype(np.int32)
+        # per head: max count, then smallest label — lexsort is stable so
+        # the first row of each head group is the winner
+        order = np.lexsort((ul, -counts, uh))
+        uh, ul = uh[order], ul[order]
+        first = np.ones(len(uh), bool)
+        first[1:] = uh[1:] != uh[:-1]
+        new = labels.copy()
+        new[uh[first]] = ul[first]
+        if np.array_equal(new, labels):
+            break
+        labels = new
+    return labels
+
+
+def run(m: int = 100_000, json_path: Optional[str] = None,
+        device_counts=(1, 2, 4, 8)) -> None:
+    import jax
+
+    from repro.launch.mesh import make_entity_mesh
+
+    for backend in ("arr", "list"):
+        pg, rels = _build(backend, m)
+        nodes = np.asarray(pg.graph.node_map)
+        es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+        w = np.asarray(pg.edge_props["w"][0])
+        n = pg.graph.n
+        seeds = nodes[:N_SEEDS]
+        sid = pg._vertex_internal(seeds)
+
+        got = np.asarray(pg.shortest_paths(seeds, weight="w", pattern=PATTERN))
+        ref = np_bellman_ford(es, ed, w, n, sid, rels == "follows")
+        assert np.array_equal(got, ref), backend
+        t = time_call(lambda: pg.shortest_paths(seeds, weight="w",
+                                                pattern=PATTERN))
+        emit_json(f"shortest_paths_{backend}_m{m}", t, path=json_path,
+                  backend=backend, m=m, seeds=N_SEEDS, semiring="tropical")
+
+        got = np.asarray(pg.pagerank(weight="w", iters=PR_ITERS))
+        ref = np_pagerank(es, ed, w, n, iters=PR_ITERS)
+        assert np.allclose(got, ref, atol=1e-6), backend
+        t = time_call(lambda: pg.pagerank(weight="w", iters=PR_ITERS))
+        emit_json(f"pagerank_{backend}_m{m}", t, path=json_path,
+                  backend=backend, m=m, iters=PR_ITERS, semiring="counting")
+
+        got = np.asarray(pg.communities())
+        ref = np_label_propagation(es, ed, n)
+        assert np.array_equal(got, ref), backend
+        t = time_call(lambda: pg.communities())
+        emit_json(f"communities_{backend}_m{m}", t, path=json_path,
+                  backend=backend, m=m, semiring="mode")
+
+    avail = len(jax.devices())
+    counts = [c for c in device_counts if c <= avail]
+    if counts != list(device_counts):
+        print(f"# bench_analytics: only {avail} device(s) visible — sweeping "
+              f"{counts} (run standalone or set "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    pg0, _ = _build("arr", m)
+    nodes = np.asarray(pg0.graph.node_map)
+    seeds = nodes[:N_SEEDS]
+    sp_base = np.asarray(pg0.shortest_paths(seeds, weight="w", pattern=PATTERN))
+    pr_base = np.asarray(pg0.pagerank(weight="w", iters=PR_ITERS))
+    for p in counts:
+        mesh = make_entity_mesh(p)
+        pg, _ = _build("arr", m, mesh=mesh)
+        got = np.asarray(pg.shortest_paths(seeds, weight="w", pattern=PATTERN))
+        assert np.array_equal(got, sp_base), p  # pmin is exact: bitwise
+        t = time_call(lambda: pg.shortest_paths(seeds, weight="w",
+                                                pattern=PATTERN))
+        emit_json(f"sp_mesh_d{p}_m{m}", t, path=json_path, m=m, devices=p,
+                  semiring="tropical", method=METHOD)
+        got = np.asarray(pg.pagerank(weight="w", iters=PR_ITERS))
+        assert np.allclose(got, pr_base, atol=1e-5), p  # psum reassociates
+        t = time_call(lambda: pg.pagerank(weight="w", iters=PR_ITERS))
+        emit_json(f"pagerank_mesh_d{p}_m{m}", t, path=json_path, m=m,
+                  devices=p, semiring="counting", method=METHOD)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=100_000)
+    a = ap.parse_args()
+    run(m=a.m, json_path=os.environ.get("BENCH_JSON_PATH"))

@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
                  mesh sweep (JSON lines; ALWAYS appended to
                  ``BENCH_traverse.json`` — override with
                  ``BENCH_JSON_PATH``; see bench_traverse.py)
+  analytics    — semiring analytics: weighted shortest paths, PageRank,
+                 label-propagation communities + mesh sweep, every row
+                 oracle-verified before timing (JSON lines appended to
+                 ``BENCH_traverse.json`` like the traverse section — they
+                 share the frontier engine; see bench_analytics.py)
   serve        — service layer: coalesced concurrent serving vs sequential
                  per-request baseline, concurrency 1/2/4/8, adaptive- vs
                  fixed-window, plus cross-process TCP rows (JSON lines;
@@ -68,6 +73,12 @@ def main() -> None:
     bench_traverse.run(m=20_000 if small else 100_000,
                        json_path=os.environ.get("BENCH_JSON_PATH",
                                                 "BENCH_traverse.json"))
+
+    print("# analytics (semiring engine: shortest paths, pagerank, communities)")
+    from benchmarks import bench_analytics
+    bench_analytics.run(m=20_000 if small else 100_000,
+                        json_path=os.environ.get("BENCH_JSON_PATH",
+                                                 "BENCH_traverse.json"))
 
     print("# serve (service layer: coalesced vs sequential, concurrency sweep,")
     print("#        adaptive vs fixed window, cross-process TCP)")

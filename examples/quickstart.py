@@ -194,4 +194,26 @@ pg.compact()                           # merge: overlay → fresh base stores
 assert not pg.has_overlay()
 assert bool((np.asarray(pg.match(pattern).vertex_mask) == before).all())
 print("compaction folded the overlay in; answers unchanged ✓")
+
+# -- 10. weighted analytics: one semiring relax, three algorithms -------------
+# The frontier step generalizes over a semiring (docs/ARCHITECTURE.md §12):
+# (min, +) over an edge-property weight = Bellman–Ford shortest paths,
+# (+, ×) = PageRank, mode-relax = label-propagation communities.  All take
+# the same single-hop pattern hook as khop/components, and an edge WITHOUT
+# the weight property is not traversable (no sound default).
+rng_w = np.random.default_rng(7)
+esn, edn = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+pg.add_edge_properties("toll", nodes[esn], nodes[edn],
+                       rng_w.uniform(0.5, 2.0, len(esn)).astype(np.float32))
+dist = np.asarray(pg.shortest_paths(nodes[:8], weight="toll",
+                                    pattern="(a)-[:rel7]->(b)"))
+print(f"weighted shortest paths: {int(np.isfinite(dist).sum()):,} vertices "
+      f"reachable over rel7, median toll "
+      f"{float(np.median(dist[np.isfinite(dist)])):.2f}")
+prw = np.asarray(pg.pagerank(weight="toll"))
+comm = np.asarray(pg.communities("(a)-[:rel7]->(b)"))
+sizes10 = np.bincount(comm[comm >= 0])
+print(f"toll-weighted PageRank sums to {float(prw.sum()):.3f}; "
+      f"label propagation found {int((sizes10 > 0).sum()):,} communities "
+      f"on the rel7 subgraph")
 print("OK")

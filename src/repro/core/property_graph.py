@@ -1038,6 +1038,145 @@ class PropGraph:
             v_ok = av if v_ok is None else v_ok & av
         return traverse.components_masked(g, v_ok, e_ok, max_iters=max_iters)
 
+    def _weighted_edge_filter(self, e_ok, weight: Optional[str]):
+        """Fold a numeric edge-property column into a traversal: returns
+        (f32 weights or None, edge filter with the column's validity mask
+        ANDed in).  An edge without the property is NOT traversable under
+        a weighted semiring — there is no sound default weight."""
+        if weight is None:
+            return None, e_ok
+        from repro.query.weights import edge_weight_values
+
+        w, wvalid = edge_weight_values(self, weight)
+        return w, (wvalid if e_ok is None else e_ok & wvalid)
+
+    def shortest_paths(
+        self,
+        seeds,
+        *,
+        weight: Optional[str] = None,
+        pattern=None,
+        undirected: bool = False,
+        max_iters: Optional[int] = None,
+    ) -> jax.Array:
+        """Multi-source shortest-path distances from ``seeds`` (original
+        ids) over the (min, +) tropical semiring — (n,) f32, 0.0 at the
+        seeds, +inf where unreachable (docs/ARCHITECTURE.md §12).
+
+        ``weight`` names a numeric edge property; edges without the
+        property do not participate (``None`` = unit weights, hop
+        counts).  ``pattern`` is the same node-only or single-hop filter
+        ``khop`` takes — the ``shortestPath()``-style hook: the pattern
+        constrains each STEP of the walk (relationship, predicates,
+        endpoint labels, ``<-[...]-`` direction), the fixed point
+        supplies the path structure.  Overlay tombstones and delta edges
+        compose exactly as in ``khop``; under a mesh the per-round relax
+        all-reduces partial distances with ``pmin`` (bitwise-identical
+        to the single-device path)."""
+        from repro import traverse
+
+        g = self._require_graph()
+        v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
+            self, pattern)
+        e_ok = jnp.ones((g.m,), jnp.bool_) if e_mask is None else e_mask
+        tail, head = (g.src, g.dst) if direction == 1 else (g.dst, g.src)
+        if v_tail is not None:
+            e_ok = e_ok & v_tail[tail]
+        if v_head is not None:
+            e_ok = e_ok & v_head[head]
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = e_ok & ae
+        w, e_ok = self._weighted_edge_filter(e_ok, weight)
+        ids = self._vertex_internal(seeds)
+        ids = ids[ids >= 0]
+        if self._dead_v is not None and ids.size:
+            ids = ids[~self._dead_v[ids]]  # dead seeds don't traverse
+        seed_mask = jnp.zeros((g.n,), jnp.bool_).at[jnp.asarray(ids)].set(True)
+        if self.mesh is not None:
+            return traverse.shortest_paths_sharded(
+                g, seed_mask, w, e_ok, mesh=self.mesh, direction=direction,
+                undirected=undirected, max_iters=max_iters)
+        return traverse.shortest_paths_masked(
+            g, seed_mask, w, e_ok, direction=direction,
+            undirected=undirected, max_iters=max_iters)
+
+    def _subgraph_filters(self, pattern):
+        """Whole-subgraph mask composition shared by ``components``-shaped
+        analytics (pagerank/communities): pattern endpoint masks gate
+        edges AND define vertex membership (either endpoint constraint
+        admits a vertex), overlay tombstones AND out of both."""
+        from repro import traverse
+
+        g = self._require_graph()
+        v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
+            self, pattern)
+        tail, head = (g.src, g.dst) if direction == 1 else (g.dst, g.src)
+        e_ok = e_mask
+        v_ok = None
+        if v_tail is not None or v_head is not None:
+            vt = jnp.ones((g.n,), jnp.bool_) if v_tail is None else v_tail
+            vh = jnp.ones((g.n,), jnp.bool_) if v_head is None else v_head
+            em = jnp.ones((g.m,), jnp.bool_) if e_ok is None else e_ok
+            e_ok = em & vt[tail] & vh[head]
+            v_ok = vt | vh
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = ae if e_ok is None else e_ok & ae
+        av = self._alive_vertex_mask()
+        if av is not None:
+            v_ok = av if v_ok is None else v_ok & av
+        return g, v_ok, e_ok, direction
+
+    def pagerank(
+        self,
+        *,
+        pattern=None,
+        weight: Optional[str] = None,
+        damping: float = 0.85,
+        iters: int = 20,
+    ) -> jax.Array:
+        """PageRank on the subgraph the filter ``pattern`` allows — (n,)
+        f32 ranks, 0.0 for vertices outside the filter (§12).
+
+        The (+, ×) semiring instance: per-iteration contributions
+        ``rank/out_degree`` flow along allowed edges (``weight`` scales
+        them per-edge; edges without the property drop out), teleport and
+        dangling mass redistribute over the allowed vertex count.  With
+        no filter this is the classic §I kernel (``repro.graph.pagerank``
+        delegates here).  Under a mesh the per-step aggregation
+        all-reduces partial sums with ``psum`` — equal to the
+        single-device ranks within float tolerance."""
+        from repro import traverse
+
+        g, v_ok, e_ok, direction = self._subgraph_filters(pattern)
+        w, e_ok = self._weighted_edge_filter(e_ok, weight)
+        if self.mesh is not None:
+            return traverse.pagerank_sharded(
+                g, v_ok, e_ok, w, mesh=self.mesh, damping=damping,
+                iters=iters, direction=direction)
+        return traverse.pagerank_masked(
+            g, v_ok, e_ok, w, damping=damping, iters=iters,
+            direction=direction)
+
+    def communities(self, pattern=None, *, max_iters: int = 64) -> jax.Array:
+        """Community labels by synchronous label propagation on the
+        subgraph the filter ``pattern`` allows — (n,) int32 (label =
+        a member vertex id, internal numbering), -1 outside the filter
+        (§12).
+
+        Mode relax under a fixed deterministic tie-break (most frequent
+        neighbor label, smallest wins ties); edges count as undirected,
+        exactly ``components``' participation rule.  Every op is integer,
+        so results are exact and identical under a mesh (the sort-based
+        mode has no elementwise ⊕ to all-reduce; GSPMD runs the same
+        program over the placed arrays)."""
+        from repro import traverse
+
+        g, v_ok, e_ok, _ = self._subgraph_filters(pattern)
+        return traverse.label_propagation_masked(
+            g, v_ok, e_ok, max_iters=max_iters)
+
     # ------------------------------------------- snapshots / views / overlay
     def snapshot(self) -> "PropGraph":
         """Immutable view pinned at (base store @ version, frozen delta

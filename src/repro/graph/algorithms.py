@@ -31,7 +31,6 @@ def connected_components(g: DIGraph, *, max_iters: int = 128) -> jax.Array:
     return components_masked(g, max_iters=max_iters)
 
 
-@partial(jax.jit, static_argnames=("iters",))
 def pagerank(
     g: DIGraph,
     *,
@@ -40,21 +39,18 @@ def pagerank(
     edge_mask: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Power iteration over the DI edge list; dangling mass redistributed.
-    ``edge_mask`` composes with property queries for typed-edge PageRank."""
-    w = jnp.ones((g.m,), jnp.float32) if edge_mask is None else edge_mask.astype(jnp.float32)
-    out_deg = jax.ops.segment_sum(w, g.src, g.n, indices_are_sorted=True)
-    inv_deg = jnp.where(out_deg > 0, 1.0 / jnp.maximum(out_deg, 1e-30), 0.0)
+    ``edge_mask`` composes with property queries for typed-edge PageRank.
 
-    def step(r, _):
-        contrib = r[g.src] * inv_deg[g.src] * w
-        agg = jax.ops.segment_sum(contrib, g.dst, g.n)
-        dangling = jnp.sum(jnp.where(out_deg > 0, 0.0, r))
-        r_new = (1 - damping) / g.n + damping * (agg + dangling / g.n)
-        return r_new, None
+    Thin alias for the frontier engine's (+, ×) semiring instance
+    (``repro.traverse.pagerank_masked`` with no vertex filter), which is
+    regression-pinned against the original standalone iteration this
+    module used to carry — same formula, one implementation; the relax
+    scatter fuses differently than the old ``segment_sum``, so parity is
+    one f32 ulp per step, not bitwise (tests/test_semiring.py)."""
+    from repro.traverse import pagerank_masked
 
-    r0 = jnp.full((g.n,), 1.0 / max(g.n, 1), jnp.float32)
-    r, _ = jax.lax.scan(step, r0, None, length=iters)
-    return r
+    return pagerank_masked(
+        g, None, edge_mask, damping=damping, iters=iters)
 
 
 @partial(jax.jit, static_argnames=("max_deg",))

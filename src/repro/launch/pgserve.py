@@ -60,8 +60,9 @@ RELS = ("follows", "likes")
 
 def build_tenant_graph(backend: str, m: int, *, mesh=None, seed: int = 0):
     """One synthetic tenant: Tab.-I-regime random graph with labels
-    ``l0..l{N_LABELS-1}``, relationships ``follows``/``likes`` and an
-    ``age`` property — the attribute shape every pool pattern queries."""
+    ``l0..l{N_LABELS-1}``, relationships ``follows``/``likes``, an ``age``
+    vertex property (the attribute shape every pool pattern queries) and a
+    ``w`` edge weight in [0.5, 2) — what the weighted analytics traverse."""
     from repro.core import PropGraph
     from repro.graph import random_uniform_graph
 
@@ -76,6 +77,8 @@ def build_tenant_graph(backend: str, m: int, *, mesh=None, seed: int = 0):
                               rng.choice(RELS, size=len(es)))
     pg.add_node_properties("age", nodes,
                            rng.integers(0, 90, len(nodes)).astype(np.int32))
+    pg.add_edge_properties("w", nodes[es], nodes[ed],
+                           rng.uniform(0.5, 2.0, len(es)).astype(np.float32))
     return pg
 
 
@@ -354,8 +357,10 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
     three backends; a client in THIS process verifies every pool pattern
     bitwise against an in-process ``PropGraph.match`` reference (the
     tenant build is seeded, so both processes construct identical graphs),
-    then exercises pipelining, a variable-length traversal query (plus the
-    plan-time string-predicate rejection), wire mutation + invalidation,
+    then exercises pipelining, the semiring analytics verbs (weighted
+    shortest paths / PageRank / communities), a variable-length traversal
+    query (plus the plan-time string-predicate rejection), wire mutation +
+    invalidation,
     the save→``load_graph`` path (cross-backend), error isolation, and
     graceful drain/shutdown.  Prints ``PGSERVE NET SMOKE OK``."""
     import tempfile
@@ -386,6 +391,25 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
             for pattern, res in zip(burst, got):
                 _assert_wire_result_matches(res, refs["arr"].match(pattern),
                                             ("pipelined", pattern))
+            # semiring analytics over the wire (§12): weighted shortest
+            # paths and communities bitwise vs the in-process reference,
+            # PageRank within float tolerance
+            for b in backends:
+                seeds = np.asarray(refs[b].graph.node_map)[:4]
+                spat = "(a)-[:follows]->(b)"
+                assert np.array_equal(
+                    c.shortest_paths(b, seeds, weight="w", pattern=spat),
+                    np.asarray(refs[b].shortest_paths(
+                        seeds, weight="w", pattern=spat))), ("sp", b)
+                assert np.allclose(
+                    c.pagerank(b, weight="w"),
+                    np.asarray(refs[b].pagerank(weight="w")),
+                    atol=1e-6), ("pagerank", b)
+                assert np.array_equal(
+                    c.communities(b),
+                    np.asarray(refs[b].communities())), ("communities", b)
+            print("pgserve net smoke: weighted analytics ≡ in-process OK",
+                  flush=True)
             # explain crosses the wire as text
             assert "plan" in c.explain("arr", pool[0]).lower()
             # variable-length traversal over the wire: frontier-engine
@@ -468,6 +492,18 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
                         _assert_wire_result_matches(
                             c.query("sharded", pattern),
                             refs["arr"].match(pattern), ("sharded", pattern))
+                    # weighted analytics against the mesh-placed reopen:
+                    # tropical pmin exact, counting psum within atol —
+                    # driven cross-process under the CI's 8 virtual devices
+                    seeds = np.asarray(refs["arr"].graph.node_map)[:4]
+                    assert np.array_equal(
+                        c.shortest_paths("sharded", seeds, weight="w"),
+                        np.asarray(refs["arr"].shortest_paths(
+                            seeds, weight="w"))), "sharded sp"
+                    assert np.allclose(
+                        c.pagerank("sharded"),
+                        np.asarray(refs["arr"].pagerank()),
+                        atol=1e-5), "sharded pagerank"
                     print(f"pgserve net smoke: sharded P={devices} ≡ "
                           "single-device OK", flush=True)
                 else:
@@ -522,6 +558,26 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
             wl = synthetic_workload(["g"], pool, requests, seed=seed)
             run_workload(svc, wl, concurrency)
             _verify_bitwise(svc, {"g": pg}, pool)
+            # semiring analytics through the service (§12): weighted
+            # traversal (tropical), PageRank (counting) and communities
+            # (mode) match the direct PropGraph calls; the repeat probe is
+            # a result-cache hit returning the identical array
+            seeds = np.asarray(pg.graph.node_map)[:4]
+            spat = "(a)-[:follows]->(b)"
+            sp = svc.shortest_paths("g", seeds, weight="w", pattern=spat)
+            assert np.array_equal(sp, np.asarray(pg.shortest_paths(
+                seeds, weight="w", pattern=spat))), backend
+            assert np.isfinite(sp).any(), backend
+            pr = svc.pagerank("g", weight="w")
+            assert np.array_equal(pr, np.asarray(pg.pagerank(weight="w"))), \
+                backend
+            assert abs(float(np.sum(pr)) - 1.0) < 1e-3, backend
+            cm = svc.communities("g")
+            assert np.array_equal(cm, np.asarray(pg.communities())), backend
+            hits0 = svc.stats().get("result_hits", 0)
+            assert np.array_equal(sp, svc.shortest_paths(
+                "g", seeds, weight="w", pattern=spat)), backend
+            assert svc.stats().get("result_hits", 0) > hits0, backend
             # variable-length traversal through the service (per-request
             # fallback in the coalescer, result cache still serves it)
             vpat = "(a:l1)-[:follows*1..3]->(b:l2)"
@@ -602,6 +658,15 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
                 got = svc.query_batch("sharded", [pattern])[0]
                 assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all(), \
                     pattern
+            # weighted analytics on the mesh: the tropical relax pmin
+            # all-reduce is exact (bitwise vs the unsharded graph), the
+            # PageRank psum reassociates (atol)
+            seeds = np.asarray(pg1.graph.node_map)[:4]
+            assert np.array_equal(
+                svc.shortest_paths("sharded", seeds, weight="w"),
+                np.asarray(pg1.shortest_paths(seeds, weight="w")))
+            assert np.allclose(svc.pagerank("sharded", weight="w"),
+                               np.asarray(pg1.pagerank(weight="w")), atol=1e-5)
         print(f"pgserve smoke: mesh P={len(mesh.devices)} ≡ single-device OK")
     else:
         print("pgserve smoke: mesh check skipped (1 device)")

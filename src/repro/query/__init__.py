@@ -10,6 +10,7 @@ from repro.query.executor import MatchResult, execute_plan, execute_plan_with_ma
 from repro.query.parser import ParseError, parse
 from repro.query.plan import MaskStep, Plan, PredicateStep
 from repro.query.planner import plan_pattern
+from repro.query.weights import edge_weight_values
 
 __all__ = [
     "Pattern",
@@ -25,4 +26,5 @@ __all__ = [
     "MatchResult",
     "execute_plan",
     "execute_plan_with_masks",
+    "edge_weight_values",
 ]

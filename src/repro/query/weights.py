@@ -1,0 +1,41 @@
+"""Weight-property extraction — the query layer's numeric-column front door
+for the weighted analytics (docs/ARCHITECTURE.md §12).
+
+A pattern predicate (``{bytes > 0}``) consumes a typed edge column as a
+Boolean mask; the tropical / counting semirings consume the COLUMN ITSELF
+as the per-edge ⊗ operand.  ``edge_weight_values`` is that read path:
+one typed edge-property column, padded to the effective (base ++ delta)
+edge universe, as (f32 values, validity mask).  An edge without the
+property (delta edges predating the column, never-assigned base edges)
+is NOT traversable under a weighted semiring — there is no sound default
+weight — so callers AND the validity mask into their edge filter, which
+the differential tests pin as the "property-masked edges" case.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["edge_weight_values"]
+
+
+def edge_weight_values(pg, name: str) -> Tuple[jax.Array, jax.Array]:
+    """(values (m_eff,) f32, valid (m_eff,) bool) for edge property ``name``.
+
+    Columns predating the current delta edges pad with (0, False) — a
+    delta edge has no weight until ``update_edge_properties`` assigns one,
+    exactly the padding rule ``edge_predicate_mask`` applies to Boolean
+    reads of the same column.
+    """
+    g = pg._require_graph()
+    if name not in pg.edge_props:
+        raise KeyError(
+            f"unknown edge property {name!r}; known: {sorted(pg.edge_props)}")
+    col, valid = pg.edge_props[name]
+    if int(col.shape[0]) < g.m:
+        pad = g.m - int(col.shape[0])
+        col = jnp.concatenate([col, jnp.zeros((pad,), col.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), jnp.bool_)])
+    return col.astype(jnp.float32), valid

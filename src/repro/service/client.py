@@ -93,9 +93,11 @@ class PGClient:
             raise
         return rid
 
-    def _wait(self, rid: int, timeout: Optional[float] = None):
+    def _wait_frame(self, rid: int, timeout: Optional[float] = None):
         """Read frames until ``rid``'s response arrives; other ids are
-        stashed for their own waiters (pipelining).
+        stashed for their own waiters (pipelining).  Returns the raw
+        ``(header, arrays)`` frame after the ok-check — the analytics
+        verbs consume the array blobs directly.
 
         ``timeout`` overrides the connection default for THIS wait only
         (``None`` keeps the default).  A timeout mid-frame leaves the
@@ -119,6 +121,10 @@ class PGClient:
         header, arrays = self._stash.pop(rid)
         if not header.get("ok"):
             raise wire.wire_to_exc(header["error"])
+        return header, arrays
+
+    def _wait(self, rid: int, timeout: Optional[float] = None):
+        header, arrays = self._wait_frame(rid, timeout=timeout)
         if "result" in header:
             return wire.wire_to_result(header["result"], arrays)
         return header
@@ -168,6 +174,40 @@ class PGClient:
                 impl: Optional[str] = None) -> str:
         return self._call("explain", graph=graph, pattern=pattern,
                           impl=impl)["explain"]
+
+    # ------------------------------------------------------------ analytics
+    def shortest_paths(self, graph: str, seeds, *,
+                       weight: Optional[str] = None,
+                       pattern: Optional[str] = None,
+                       undirected: bool = False,
+                       max_iters: Optional[int] = None) -> np.ndarray:
+        """Weighted multi-source shortest paths server-side: (n,) f32
+        distances (+inf = unreachable), result-cached on the server under
+        the pattern's refs plus the ``weight`` property."""
+        _, arrays = self._wait_frame(self._send(
+            "analytics", [np.asarray(seeds, np.int64)], analytic="shortest_paths",
+            graph=graph, weight=weight, pattern=pattern,
+            undirected=undirected, max_iters=max_iters))
+        return arrays[0]
+
+    def pagerank(self, graph: str, *, weight: Optional[str] = None,
+                 pattern: Optional[str] = None, damping: float = 0.85,
+                 iters: int = 20) -> np.ndarray:
+        """PageRank over the server's (optionally pattern-filtered,
+        optionally weighted) graph: (n,) f32 ranks."""
+        _, arrays = self._wait_frame(self._send(
+            "analytics", (), analytic="pagerank", graph=graph, weight=weight,
+            pattern=pattern, damping=damping, iters=iters))
+        return arrays[0]
+
+    def communities(self, graph: str, *, pattern: Optional[str] = None,
+                    max_iters: int = 64) -> np.ndarray:
+        """Label-propagation communities server-side: (n,) i32 labels
+        (-1 = outside the filter)."""
+        _, arrays = self._wait_frame(self._send(
+            "analytics", (), analytic="communities", graph=graph,
+            pattern=pattern, max_iters=max_iters))
+        return arrays[0]
 
     # ------------------------------------------------------------- registry
     def load_graph(self, name: str, path: str, *,

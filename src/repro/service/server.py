@@ -25,6 +25,11 @@ Request ops (header ``{"op": ..., "id": ...}`` + optional array blobs):
                                        insert_edges / delete_vertices /
                                        delete_edges /
                                        update_{node,edge}_properties
+    analytics {graph, analytic, ..}  shortest_paths / pagerank /
+                                       communities through the semiring
+                                       frontier engine (§12); the (n,)
+                                       result vector rides back as an
+                                       array blob
     snapshot {graph, name?}          pin a frozen snapshot, register it
     fork_view {graph, name?}         writable copy-on-write view
     drop_view {name}                 unregister a snapshot/fork
@@ -404,6 +409,34 @@ class PGServer:
             src, dst, values = arrays
             pg.update_edge_properties(header["name"], src, dst, values)
         return {"version": pg.version}, ()
+
+    def _op_analytics(self, header, arrays):
+        """Semiring analytics over the wire: ``{"analytic": shortest_paths
+        | pagerank | communities, "graph": ..., ...}``; seeds for
+        shortest_paths ride as the one request array.  The (n,) result
+        vector returns as a response array blob (f32 distances/ranks or
+        i32 labels) — dense numeric payloads never go through the header."""
+        analytic = header["analytic"]
+        graph = header["graph"]
+        if analytic == "shortest_paths":
+            out = self.service.shortest_paths(
+                graph, arrays[0], weight=header.get("weight"),
+                pattern=header.get("pattern"),
+                undirected=bool(header.get("undirected", False)),
+                max_iters=header.get("max_iters"))
+        elif analytic == "pagerank":
+            out = self.service.pagerank(
+                graph, weight=header.get("weight"),
+                pattern=header.get("pattern"),
+                damping=header.get("damping", 0.85),
+                iters=header.get("iters", 20))
+        elif analytic == "communities":
+            out = self.service.communities(
+                graph, pattern=header.get("pattern"),
+                max_iters=header.get("max_iters", 64))
+        else:
+            raise ValueError(f"unknown analytic {analytic!r}")
+        return {"analytic": analytic, "dtype": str(out.dtype)}, (out,)
 
     # overlay verbs: snapshot isolation over the wire --------------------------
     def _op_snapshot(self, header, arrays):

@@ -26,6 +26,8 @@ import threading
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Union
 
+import numpy as np
+
 from repro.overlay.delta import overlaps, pattern_refs
 from repro.query import Pattern, execute_plan, parse, plan_pattern
 from repro.service.cache import LRUCache
@@ -232,6 +234,93 @@ class Service:
         self._bump("batched_requests", len(patterns))
         self._bump("completed", len(patterns))
         return out
+
+    # ------------------------------------------------------------- analytics
+    def shortest_paths(self, graph: str, seeds, *,
+                       weight: Optional[str] = None,
+                       pattern: Union[str, Pattern, None] = None,
+                       undirected: bool = False,
+                       max_iters: Optional[int] = None):
+        """Serve ``PropGraph.shortest_paths`` under ``graph``: (n,) f32
+        distances as numpy.  Cached like pattern queries — the entry's
+        footprint is the filter pattern's refs PLUS the weight property,
+        so a write to ``weight``'s column invalidates it while unrelated
+        property writes leave it live (§11, §12)."""
+        canon_seeds = tuple(sorted({int(s) for s in np.ravel(seeds)}))
+        params = (f"s={canon_seeds}:w={weight}:u={int(bool(undirected))}"
+                  f":k={max_iters}")
+        return self._analytics(
+            graph, "shortest_paths", params, pattern, weight,
+            lambda pg: pg.shortest_paths(
+                list(canon_seeds), weight=weight, pattern=pattern,
+                undirected=undirected, max_iters=max_iters))
+
+    def pagerank(self, graph: str, *, weight: Optional[str] = None,
+                 pattern: Union[str, Pattern, None] = None,
+                 damping: float = 0.85, iters: int = 20):
+        """Serve ``PropGraph.pagerank`` under ``graph``: (n,) f32 ranks as
+        numpy, cached/invalidated like :meth:`shortest_paths`."""
+        params = f"w={weight}:d={damping!r}:it={iters}"
+        return self._analytics(
+            graph, "pagerank", params, pattern, weight,
+            lambda pg: pg.pagerank(pattern=pattern, weight=weight,
+                                   damping=damping, iters=iters))
+
+    def communities(self, graph: str, *,
+                    pattern: Union[str, Pattern, None] = None,
+                    max_iters: int = 64):
+        """Serve ``PropGraph.communities`` under ``graph``: (n,) int32
+        labels as numpy, cached/invalidated like :meth:`shortest_paths`."""
+        params = f"k={max_iters}"
+        return self._analytics(
+            graph, "communities", params, pattern, None,
+            lambda pg: pg.communities(pattern=pattern, max_iters=max_iters))
+
+    def _analytics(self, graph: str, op: str, params: str,
+                   pattern, weight: Optional[str], run):
+        """Shared serve path for the semiring analytics verbs: result cache
+        keyed ``(graph, "analytics:op:pattern:params", None)`` — key[0] is
+        the graph name, so every existing purge path (drop, structural
+        events, overlap tests against the stored refs) applies unchanged.
+        Runs in the caller's thread (the mutator precedent): analytics hit
+        the frontier engine directly, never the plan/coalesce pipeline.
+        Consistency under concurrent mutators mirrors ``_serve_group``:
+        version read before running, re-checked after, up to 3 attempts;
+        a torn view is returned best-effort but never cached, and the
+        put-then-purge guard drops an entry a racing write may have missed."""
+        pg = self.registry.get(graph)
+        if pattern is not None:
+            canonical, ast = self._canon(pattern)
+            refs = pattern_refs(ast)
+        else:
+            canonical, refs = "", (frozenset(), frozenset(), frozenset())
+        if weight is not None:
+            refs = (refs[0], refs[1], refs[2] | frozenset((str(weight),)))
+        key = (graph, f"analytics:{op}:{canonical}:{params}", None)
+        self._bump("analytics_requests")
+        hit = self.result_cache.get(key)
+        if hit is not None:
+            self._bump("result_hits")
+            return hit[2]
+        self._bump("result_misses")
+        res = None
+        for attempt in range(3):
+            version = pg.version
+            try:
+                res = np.asarray(run(pg))
+            except Exception:
+                if pg.version != version and attempt < 2:
+                    continue  # a concurrent mutation tore the view — retry
+                self._bump("errors")
+                raise
+            if pg.version == version:
+                self.result_cache.put(key, (version, refs, res))
+                if pg.version != version:
+                    # a write landed between the stability check and the
+                    # put — drop our own entry (see _serve_group)
+                    self.result_cache.purge(lambda kk, vv, _k=key: kk == _k)
+                break
+        return res
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:

@@ -1,22 +1,47 @@
-"""repro.traverse — the frontier engine (docs/ARCHITECTURE.md §10).
+"""repro.traverse — the semiring frontier engine (docs/ARCHITECTURE.md §10, §12).
 
-One jitted, masked frontier-expansion primitive that both the pattern
-matcher's variable-length hops (``-[:rel*1..k]->``, ``*``) and the
-property-aware analytics (``PropGraph.khop`` / ``PropGraph.components``)
-execute through: edge-centric bitmap steps, a CSR small-frontier fast
-path, and a shard_map path that all-reduces the frontier bitmask per step.
+One jitted, masked relax primitive, generalized over a configurable
+semiring (⊕ combine, ⊗ extend), that the pattern matcher's
+variable-length hops (``-[:rel*1..k]->``, ``*``), the Boolean
+reachability analytics (``PropGraph.khop`` / ``components``) and the
+numeric analytics (``shortest_paths`` / ``pagerank`` / ``communities``)
+all execute through: edge-centric relax steps, a CSR small-frontier fast
+path, and a shard_map path that ⊕-all-reduces the per-device partial
+value vector per step (pmax / pmin / psum).
 """
-from repro.traverse.analytics import components_masked, single_hop_filters
+from repro.traverse.analytics import (
+    components_masked,
+    label_propagation_masked,
+    pagerank_masked,
+    pagerank_sharded,
+    shortest_paths_masked,
+    shortest_paths_sharded,
+    single_hop_filters,
+)
 from repro.traverse.engine import (
+    BOOLEAN,
+    COUNTING,
+    MINLABEL,
+    TROPICAL,
+    Semiring,
     frontier_step,
     khop_csr,
     khop_mask,
     khop_mask_sharded,
     reach_closure,
     reach_closure_sharded,
+    semiring_relax,
+    semiring_relax_sharded,
 )
 
 __all__ = [
+    "Semiring",
+    "BOOLEAN",
+    "TROPICAL",
+    "COUNTING",
+    "MINLABEL",
+    "semiring_relax",
+    "semiring_relax_sharded",
     "frontier_step",
     "khop_mask",
     "khop_csr",
@@ -24,5 +49,10 @@ __all__ = [
     "reach_closure",
     "reach_closure_sharded",
     "components_masked",
+    "shortest_paths_masked",
+    "shortest_paths_sharded",
+    "pagerank_masked",
+    "pagerank_sharded",
+    "label_propagation_masked",
     "single_hop_filters",
 ]

@@ -1,34 +1,44 @@
-"""Frontier engine — masked frontier expansion over DI (docs/ARCHITECTURE.md §10).
+"""Frontier engine — semiring frontier expansion over DI (docs/ARCHITECTURE.md §10, §12).
 
 One primitive unifies the query executor's chain propagation and the
-reachability-style analytics (k-hop, connected components): a Boolean
-frontier over the n vertices crossed with a relationship/property-masked
-edge set yields the next frontier.  Everything here is a client of
-:func:`frontier_step`:
+frontier analytics (k-hop, connected components, weighted shortest paths,
+PageRank): a per-vertex value vector crossed with a (possibly masked /
+weighted) edge set yields the next value vector, under a configurable
+:class:`Semiring` — ⊕ combines the messages arriving at a vertex, ⊗
+extends a vertex value along an edge.  Everything here is a client of
+:func:`semiring_relax`:
 
-  * ``khop_mask``      — union of ≤k expansions (``while_loop`` with
-    early exit; one XLA program for the whole traversal).
-  * ``reach_closure``  — expansion to a fixed point (the ``*`` unbounded
+  * ``frontier_step``   — the (OR, AND) Boolean instance: heads of allowed
+    edges whose tail is in the frontier.
+  * ``khop_mask``       — union of ≤k Boolean expansions (``while_loop``
+    with early exit; one XLA program for the whole traversal).
+  * ``reach_closure``   — expansion to a fixed point (the ``*`` unbounded
     pattern hop and reachability closures; bounded by ``n`` rounds).
-  * ``khop_csr``       — the CSR fast path: instead of relaxing all m
+  * ``khop_csr``        — the CSR fast path: instead of relaxing all m
     edges per step (the edge-centric bitmap step), gather only the
     frontier vertices' adjacency slices off ``seg``/``dst`` — O(|F|·d̂)
     per step, which beats O(m) while the frontier is small (§10 cost
     model).  Host-orchestrated BFS levels, bucketed frontier capacity to
     bound compiles; bitwise-equal to ``khop_mask``.
-  * ``*_sharded``      — the multi-device path: each device relaxes its
-    own block of the edge list under ``shard_map`` and the per-step
-    frontier bitmask is OR-combined with ONE ``pmax`` all-reduce
-    (1 byte/entity/step — the same replication argument as the DIP mask
-    combination, docs/ARCHITECTURE.md §7).
+  * ``*_sharded``       — the multi-device path: each device relaxes its
+    own block of the edge list under ``shard_map`` into a partial (n,)
+    value vector and ONE all-reduce combines the partials with the
+    semiring's ⊕ primitive — ``pmax`` for the Boolean frontier bitmask
+    (1 byte/entity/step), ``pmin`` for tropical distances, ``psum`` for
+    PageRank contributions (the same replication argument as the DIP
+    mask combination, docs/ARCHITECTURE.md §7).
 
-All functions are exact (Boolean algebra, no estimates): sharded, CSR and
-edge-centric paths produce bitwise-identical masks (tests/test_traverse.py).
+The Boolean / tropical / min-label instances are exact (idempotent ⊕,
+order-insensitive): sharded and single-device paths produce bitwise-
+identical results.  The counting (+, ×) instance reassociates float sums
+across devices, so the sharded PageRank path is equal within float
+tolerance only (tests/test_semiring.py pins both).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import lru_cache, partial
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +47,13 @@ import numpy as np
 from repro.core.di import DIGraph
 
 __all__ = [
+    "Semiring",
+    "BOOLEAN",
+    "TROPICAL",
+    "COUNTING",
+    "MINLABEL",
+    "semiring_relax",
+    "semiring_relax_sharded",
     "frontier_step",
     "khop_mask",
     "reach_closure",
@@ -44,6 +61,52 @@ __all__ = [
     "khop_mask_sharded",
     "reach_closure_sharded",
 ]
+
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """One relax algebra: ⊕ combines messages at a vertex, ⊗ extends a
+    vertex value along an edge.
+
+    ``zero`` is the ⊕ identity AND the ⊗ absorber (a zero-valued vertex
+    contributes nothing through any edge), so an all-``zero`` relax input
+    is a fixed point — the axiom tests/test_semiring.py property-checks.
+    ``scatter`` names the ``.at[].{max,min,add}`` combine the relax
+    scatters with; ``allreduce`` names the matching cross-device ⊕
+    primitive for the shard_map path.  Instances are module-level
+    constants — hashable, so they ride jit static arguments.
+    """
+
+    name: str
+    zero: object  # ⊕ identity / ⊗ absorber (False, +inf, 0.0, INT32_MAX)
+    scatter: str  # "max" | "min" | "add" — the ⊕ scatter combine
+    extend: Callable  # ⊗: (tail value, edge value) → message
+    allreduce: str  # "pmax" | "pmin" | "psum" — cross-device ⊕
+
+
+# (OR, AND) over bool — reachability.  ⊕ = any (scatter max), ⊗ = frontier
+# bit AND edge-allowed bit.
+BOOLEAN = Semiring("boolean", False, "max", lambda x, w: x & w, "pmax")
+
+# (min, +) over f32 — weighted shortest paths.  zero = +inf: unreachable
+# stays unreachable (inf + w = inf), and a masked edge (weight forced to
+# +inf) never relaxes anything.
+TROPICAL = Semiring("tropical", np.float32(np.inf), "min",
+                    lambda x, w: x + w, "pmin")
+
+# (+, ×) over f32 — weighted SpMV, the PageRank contribution step.  zero
+# = 0.0: a rank-0 vertex contributes nothing, a weight-0 (masked) edge
+# carries nothing.
+COUNTING = Semiring("counting", np.float32(0.0), "add",
+                    lambda x, w: x * w, "psum")
+
+# (min, select) over int32 — the component min-hook: an allowed edge
+# forwards the tail's label unchanged, a masked edge forwards the
+# identity.  zero = INT32_MAX so any real label wins the min.
+MINLABEL = Semiring("minlabel", _I32_MAX, "min",
+                    lambda x, w: jnp.where(w, x, _I32_MAX), "pmin")
 
 
 def _ends(g: DIGraph, direction: int):
@@ -56,6 +119,34 @@ def _all_edges(g: DIGraph, edge_allowed) -> jax.Array:
     return jnp.ones((g.m,), jnp.bool_) if edge_allowed is None else edge_allowed
 
 
+def semiring_relax(
+    g: DIGraph,
+    x: jax.Array,
+    edge_vals: jax.Array,
+    sr: Semiring,
+    *,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """ONE edge-centric relax: ``out[v] = ⊕_{(u→v) edges} x[u] ⊗ w[e]``.
+
+    (n,) value vector × (m,) edge-value vector → (n,) messages; vertices
+    with no incoming allowed edge hold ``sr.zero``.  The result does NOT
+    include the input values — compose with the running state outside
+    (``mask | relax``, ``minimum(dist, relax)``, …).  ``undirected``
+    additionally relaxes every edge in reverse into the same output (⊕ is
+    commutative/associative, so a second scatter is exact).  Traceable
+    (not jitted): compose it inside jitted loops; the public entry points
+    here do.
+    """
+    tail, head = _ends(g, direction)
+    out = jnp.full_like(x, sr.zero)
+    out = getattr(out.at[head], sr.scatter)(sr.extend(x[tail], edge_vals))
+    if undirected:
+        out = getattr(out.at[tail], sr.scatter)(sr.extend(x[head], edge_vals))
+    return out
+
+
 def frontier_step(
     g: DIGraph,
     frontier: jax.Array,
@@ -64,16 +155,12 @@ def frontier_step(
     direction: int = 1,
     undirected: bool = False,
 ) -> jax.Array:
-    """ONE masked expansion: heads of allowed edges whose tail is in the
-    frontier.  (n,) bool × (m,) bool → (n,) bool; exactly one step — the
-    result does NOT include the input frontier.  Traceable (not jitted):
-    compose it inside jitted loops; the public entry points here do."""
-    e_ok = _all_edges(g, edge_allowed)
-    tail, head = _ends(g, direction)
-    out = jnp.zeros_like(frontier).at[head].max(frontier[tail] & e_ok)
-    if undirected:
-        out = out | jnp.zeros_like(frontier).at[tail].max(frontier[head] & e_ok)
-    return out
+    """ONE masked Boolean expansion: heads of allowed edges whose tail is
+    in the frontier — the (OR, AND) :data:`BOOLEAN` instance of
+    :func:`semiring_relax`.  (n,) bool × (m,) bool → (n,) bool; exactly
+    one step, the result does NOT include the input frontier."""
+    return semiring_relax(g, frontier, _all_edges(g, edge_allowed), BOOLEAN,
+                          direction=direction, undirected=undirected)
 
 
 @partial(jax.jit, static_argnames=("k", "direction", "undirected"))
@@ -193,14 +280,76 @@ def khop_csr(
 
 
 # ------------------------------------------------------------- sharded path
+def _pad_edges(g: DIGraph, edge_vals: jax.Array, p: int, direction: int,
+               pad_value):
+    """(tail, head, edge_vals) padded to a multiple of the shard count.
+    Pad edges point at vertex 0 and carry the semiring's ⊗ absorber as
+    their edge value (False / +inf / 0.0), so the relax reads them but
+    they never contribute a message."""
+    tail, head = _ends(g, direction)
+    m = tail.shape[0]
+    pad = (-(-max(m, 1) // p)) * p - m
+    tail = jnp.pad(tail, (0, pad))
+    head = jnp.pad(head, (0, pad))
+    edge_vals = jnp.pad(edge_vals, (0, pad), constant_values=pad_value)
+    return tail, head, edge_vals
+
+
+@lru_cache(maxsize=None)
+def _sharded_relax_fn(mesh, direction: int, undirected: bool, sr: Semiring):
+    """ONE semiring relax under ``shard_map``: every device relaxes only
+    its own block of the (padded) edge list into a partial (n,) value
+    vector, and ONE ``{pmax,pmin,psum}`` all-reduce ⊕-combines the
+    partials — the value vector is the only thing that moves between
+    devices per step.  Cached per (mesh, direction, undirected, semiring);
+    jit re-specializes on shapes as usual."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import pg_entity_axes
+
+    ax = pg_entity_axes(mesh)
+    reduce_fn = getattr(jax.lax, sr.allreduce)
+
+    def local(tail_l, head_l, ev_l, x):
+        part = jnp.full((x.shape[0],), sr.zero, x.dtype)
+        part = getattr(part.at[head_l], sr.scatter)(sr.extend(x[tail_l], ev_l))
+        if undirected:
+            part = getattr(part.at[tail_l], sr.scatter)(
+                sr.extend(x[head_l], ev_l))
+        return reduce_fn(part, ax)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(ax), P(ax), P(ax), P()), out_specs=P())
+
+
+def semiring_relax_sharded(
+    g: DIGraph,
+    x: jax.Array,
+    edge_vals: jax.Array,
+    sr: Semiring,
+    *,
+    mesh,
+    direction: int = 1,
+    undirected: bool = False,
+) -> jax.Array:
+    """:func:`semiring_relax` with the per-step shard_map/all-reduce
+    layout.  Idempotent-⊕ semirings (Boolean, tropical, min-label) are
+    bitwise-identical to the single-device relax; ``psum`` reassociates
+    float sums, so :data:`COUNTING` agrees within tolerance only."""
+    from repro.launch.sharding import pg_entity_shards
+
+    step = _sharded_relax_fn(mesh, direction, undirected, sr)
+    tail, head, edge_vals = _pad_edges(
+        g, edge_vals, pg_entity_shards(mesh), direction, sr.zero)
+    return step(tail, head, edge_vals, x)
+
+
 @lru_cache(maxsize=None)
 def _sharded_khop_fn(mesh, direction: int, undirected: bool):
-    """Jitted k-hop whose step runs under ``shard_map``: every device
-    relaxes only its own block of the (padded) edge list into a partial
-    (n,) int8 mask, and ONE ``pmax`` all-reduce ORs the partials — the
-    frontier is the only thing that moves between devices, 1 byte/entity
-    per step.  Cached per (mesh, direction, undirected); jit re-specializes
-    on shapes/k as usual."""
+    """Jitted Boolean k-hop whose step is the sharded relax on an int8
+    frontier bitmask: the per-step ``pmax`` all-reduce ORs the per-device
+    partials, 1 byte/entity per step."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -221,14 +370,7 @@ def _sharded_khop_fn(mesh, direction: int, undirected: bool):
 
     @partial(jax.jit, static_argnames=("k",))
     def fn(g: DIGraph, seed_mask, e_ok, *, k: int):
-        tail, head = _ends(g, direction)
-        m = tail.shape[0]
-        pad = (-(-max(m, 1) // p)) * p - m
-        # pad edges are disabled (e_ok False) and point at vertex 0 — the
-        # relax reads them but they never scatter a True
-        tail = jnp.pad(tail, (0, pad))
-        head = jnp.pad(head, (0, pad))
-        e_ok = jnp.pad(e_ok, (0, pad))
+        tail, head, e_ok = _pad_edges(g, e_ok, p, direction, False)
 
         def body(state):
             mask, _, it = state
