@@ -138,6 +138,48 @@ def run(m: int = 50_000, requests: int = 64, concurrencies=(1, 2, 4, 8),
                 ServiceConfig(result_cache_size=0), max(concurrencies),
                 baseline=seq, m=m, mode="service-coalesce-only")
 
+    # -- observability overhead guard (docs/ARCHITECTURE.md §13): the
+    # metrics registry must be free when disabled and near-free when on.
+    # Measure the same c=max coalesced workload with metrics enabled vs
+    # disabled (fresh service each, jits warm) in ALTERNATING trials —
+    # back-to-back blocks read scheduler drift as flag overhead at this
+    # row's ~tens-of-ms wall time — take best-of per side, and record the
+    # relative difference; the build fails if flipping the flag moves the
+    # coalesce timing by ≥5%.
+    from repro.obs import set_enabled
+
+    cmax = max(concurrencies)
+
+    def _measure(c: int):
+        with Service() as svc:
+            svc.add_graph("tenant0", pg)
+            return run_workload(svc, wl, c, repeats=repeats)
+
+    met_on, met_off = None, None
+    for _ in range(max(repeats, 3)):
+        m_on = _measure(cmax)
+        prev = set_enabled(False)
+        try:
+            m_off = _measure(cmax)
+        finally:
+            set_enabled(prev)
+        if met_on is None or m_on["wall_s"] < met_on["wall_s"]:
+            met_on = m_on
+        if met_off is None or m_off["wall_s"] < met_off["wall_s"]:
+            met_off = m_off
+    overhead = (met_on["wall_s"] - met_off["wall_s"]) / met_off["wall_s"]
+    emit_json(
+        f"serve_arr_metrics_off_c{cmax}_m{m}",
+        met_off["wall_s"] / requests, path=json_path,
+        qps=round(met_off["qps"], 1), concurrency=cmax, requests=requests,
+        m=m, p50_ms=round(met_off["p50_ms"], 3), runs=repeats,
+        qps_metrics_on=round(met_on["qps"], 1),
+        metrics_overhead=round(overhead, 4), mode="service-metrics-disabled",
+    )
+    assert abs(overhead) < 0.05, (
+        f"metrics flag moved c={cmax} coalesce timing by "
+        f"{overhead:+.1%} (guard: <5%)")
+
     if not net:
         return
     # -- cross-process: same workload through a spawned server over TCP

@@ -11,12 +11,39 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
 __all__ = ["time_call", "emit", "emit_json"]
+
+_RUN_STAMP: Optional[Tuple[int, Optional[str]]] = None
+
+
+def _run_stamp() -> Tuple[int, Optional[str]]:
+    """(run_id, git_sha) minted once per process.
+
+    ``run_id`` is a wall-clock epoch second — monotonic across successive
+    benchmark runs, constant within one, so rows appended to the same JSONL
+    file group by run and sort chronologically.  ``git_sha`` ties the row to
+    the code that produced it (None outside a git checkout).
+    """
+    global _RUN_STAMP
+    if _RUN_STAMP is None:
+        sha: Optional[str] = None
+        try:
+            out = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=os.path.dirname(os.path.abspath(__file__)),
+                capture_output=True, text=True, timeout=5,
+            )
+            sha = out.stdout.strip() or None
+        except Exception:
+            sha = None
+        _RUN_STAMP = (int(time.time()), sha)
+    return _RUN_STAMP
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -46,7 +73,9 @@ def emit_json(name: str, seconds: float, path: Optional[str] = None, **fields) -
     env var) is set the row is also appended there, so successive PRs can
     diff perf without parsing stdout.
     """
-    row = {"name": name, "us_per_call": round(seconds * 1e6, 1), **fields}
+    run_id, git_sha = _run_stamp()
+    row = {"name": name, "us_per_call": round(seconds * 1e6, 1),
+           "run_id": run_id, "git_sha": git_sha, **fields}
     line = json.dumps(row, sort_keys=True)
     print(line)
     path = path or os.environ.get("BENCH_JSON_PATH")

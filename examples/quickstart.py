@@ -216,4 +216,30 @@ sizes10 = np.bincount(comm[comm >= 0])
 print(f"toll-weighted PageRank sums to {float(prw.sum()):.3f}; "
       f"label propagation found {int((sizes10 > 0).sum()):,} communities "
       f"on the rel7 subgraph")
+
+# -- 11. observability: EXPLAIN ANALYZE, trace spans, Prometheus metrics ------
+# Every query can report where its wall time went (docs/ARCHITECTURE.md §13).
+# explain_analyze() runs the plan's device stages twice under
+# block_until_ready, so the first call's jit compilation separates cleanly
+# from steady-state execution; the service keeps per-query span trees in a
+# bounded ring (slow_query_ms=0 captures every query, the demo lever) and
+# renders every counter as Prometheus text — the same text the pgd
+# `metrics` wire verb serves to a scraper.
+from repro.obs import parse_prometheus
+from repro.service import ServiceConfig
+
+rep = pg.explain_analyze(pattern)
+print(f"explain analyze: compile {rep.compile_ms:.1f} ms once, then "
+      f"{rep.steady_ms:.3f} ms/query steady-state (cold={rep.cold})")
+with Service(config=ServiceConfig(slow_query_ms=0.0)) as svc:
+    svc.add_graph("g", pg)
+    for _ in range(4):
+        svc.query("g", pattern)
+    tr = svc.trace_log()[-1]
+    stages = [s["name"] for s in tr["spans"]]
+    parsed = parse_prometheus(svc.metrics_text())
+    print(f"trace {tr['trace_id']}: {' → '.join(stages)}")
+    print(f"metrics: {int(parsed['pg_service_submitted_total'])} submitted, "
+          f"{int(parsed.get('pg_service_result_hits_total', 0))} result-cache "
+          f"hits, {len(parsed)} series exposed")
 print("OK")

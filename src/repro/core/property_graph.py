@@ -42,7 +42,31 @@ from repro.core import dip_arr, dip_list, dip_listd, dip_shard
 from repro.core.attr_map import AttributeMap
 from repro.core.di import DIGraph, build_di, edge_lookup
 from repro.core.queries import extract_subgraph, filtered_bfs, induce_edge_mask
+from repro.obs.metrics import GLOBAL as _OBS
+from repro.obs.metrics import SIZE_BUCKETS as _SIZE_BUCKETS
+from repro.obs.metrics import enabled as _obs_enabled
 from repro.overlay.delta import AttrDelta, EdgeDelta, MutationEvent, pair_keys
+
+
+def _obs_traverse(op: str, rounds: Optional[int], seeds: Optional[int]) -> None:
+    """Frontier/semiring engine accounting (docs/ARCHITECTURE.md §13):
+    per-op run counts plus the host-known shape of the work — relax-round
+    budgets and seed-set sizes.  The exact converged round count lives
+    inside a jitted ``while_loop``; reading it back would force a device
+    sync per call, so the budget (``k``/``max_iters``, the loop's bound)
+    is what's recorded.  Host-side only, never a device sync."""
+    if not _obs_enabled():
+        return
+    _OBS.counter("pg_traverse_runs", "frontier/semiring engine runs",
+                 op=op).inc()
+    if rounds is not None:
+        _OBS.histogram("pg_traverse_relax_rounds",
+                       "relax-round budget per run (loop bound)",
+                       buckets=_SIZE_BUCKETS, op=op).observe(rounds)
+    if seeds is not None:
+        _OBS.histogram("pg_traverse_seed_size",
+                       "seed/frontier-origin set size per run",
+                       buckets=_SIZE_BUCKETS, op=op).observe(seeds)
 
 __all__ = ["PropGraph", "BACKENDS"]
 
@@ -872,7 +896,8 @@ class PropGraph:
         return out
 
     # ------------------------------------------------------ pattern matching
-    def match(self, pattern, *, impl: Optional[str] = None):
+    def match(self, pattern, *, impl: Optional[str] = None,
+              profile: bool = False):
         """Declarative pattern query: ``pg.match("(a:person {age > 30})-[:follows]->(b:person)")``.
 
         Parses ``pattern`` (str or a pre-built ``repro.query.Pattern``),
@@ -881,7 +906,16 @@ class PropGraph:
         ``vertex_mask``/``edge_mask`` cover exactly the entities in at least
         one full match.  ``impl`` force-overrides the planner's per-mask
         implementation choice.
+
+        ``profile=True`` returns ``(MatchResult, ProfileReport)`` instead —
+        the EXPLAIN ANALYZE path (docs/ARCHITECTURE.md §13): per-stage wall
+        times with the JAX compile-vs-execute split measured by a steady-
+        state re-run, so it costs roughly one extra warm execution.
         """
+        if profile:
+            from repro.obs.profile import profile_match
+
+            return profile_match(self, pattern, impl=impl)
         from repro.query import execute_plan, parse, plan_pattern
 
         pat = parse(pattern) if isinstance(pattern, str) else pattern
@@ -895,6 +929,17 @@ class PropGraph:
 
         pat = parse(pattern) if isinstance(pattern, str) else pattern
         return plan_pattern(self, pat, impl=impl).describe()
+
+    def explain_analyze(self, pattern, *, impl: Optional[str] = None):
+        """EXPLAIN ANALYZE: run ``pattern`` and return a ``ProfileReport``
+        — the executed plan annotated with measured per-stage times
+        (parse / plan / mask materialization / propagation) and the
+        first-call XLA compilation separated from device execution
+        (``report.compile_ms`` / ``report.cold``).  ``report.describe()``
+        renders the plan with the timing table appended."""
+        from repro.obs.profile import profile_match
+
+        return profile_match(self, pattern, impl=impl)[1]
 
     def subgraph(
         self,
@@ -976,6 +1021,7 @@ class PropGraph:
         g = self._require_graph()
         if impl not in (None, "frontier", "csr"):
             raise ValueError(f"unknown impl {impl!r}")
+        _obs_traverse("khop", int(k), int(np.asarray(seeds).size))
         v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
             self, pattern)
         e_ok = jnp.ones((g.m,), jnp.bool_) if e_mask is None else e_mask
@@ -1020,6 +1066,7 @@ class PropGraph:
         from repro import traverse
 
         g = self._require_graph()
+        _obs_traverse("components", int(max_iters), None)
         v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
             self, pattern)
         tail, head = (g.src, g.dst) if direction == 1 else (g.dst, g.src)
@@ -1076,6 +1123,9 @@ class PropGraph:
         from repro import traverse
 
         g = self._require_graph()
+        _obs_traverse("shortest_paths",
+                      None if max_iters is None else int(max_iters),
+                      int(np.asarray(seeds).size))
         v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
             self, pattern)
         e_ok = jnp.ones((g.m,), jnp.bool_) if e_mask is None else e_mask
@@ -1149,6 +1199,7 @@ class PropGraph:
         single-device ranks within float tolerance."""
         from repro import traverse
 
+        _obs_traverse("pagerank", int(iters), None)
         g, v_ok, e_ok, direction = self._subgraph_filters(pattern)
         w, e_ok = self._weighted_edge_filter(e_ok, weight)
         if self.mesh is not None:
@@ -1173,6 +1224,7 @@ class PropGraph:
         program over the placed arrays)."""
         from repro import traverse
 
+        _obs_traverse("communities", int(max_iters), None)
         g, v_ok, e_ok, _ = self._subgraph_filters(pattern)
         return traverse.label_propagation_masked(
             g, v_ok, e_ok, max_iters=max_iters)

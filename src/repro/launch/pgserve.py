@@ -517,7 +517,29 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
             else:
                 raise AssertionError("bad property should raise KeyError")
             assert c.ping()  # session survived the failed request
+            # metrics verb (§13): the Prometheus exposition parses, counters
+            # are monotonic across a pipelined burst, the totals agree with
+            # the stats verb, and the span tree round-trips the client's
+            # trace id
+            from repro.obs import parse_prometheus
+
+            m1 = parse_prometheus(c.metrics())
+            hs = [c.submit("arr", p) for p in pool[:8]]
+            for h in hs:
+                h.result()
+            assert hs[0].trace is not None, "trace header missing"
+            assert hs[0].trace["trace_id"] == hs[0].trace_id
+            m2 = parse_prometheus(c.metrics())
+            assert (m2["pg_service_submitted_total"]
+                    == m1["pg_service_submitted_total"] + len(hs))
+            totals = [k for k in m1 if k.endswith("_total")]
+            assert totals and all(m2.get(k, 0.0) >= m1[k] for k in totals), \
+                "counters went backwards"
             stats = c.stats()
+            assert m2["pg_service_submitted_total"] == stats["submitted"]
+            assert m2["pg_service_completed_total"] == stats["completed"]
+            print("pgserve net smoke: metrics verb + trace round-trip OK",
+                  flush=True)
             assert stats.get("completed", 0) > 0
             c.drain()
             c.shutdown()
@@ -645,6 +667,49 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
         svc.drop_graph(snap)
     print("pgserve smoke: overlay snapshot/fork/compact OK")
 
+    # observability (§13): EXPLAIN ANALYZE splits compile from steady-state,
+    # the metrics exposition parses and agrees with stats(), counters are
+    # monotonic across a second burst, the trace ring holds full span trees,
+    # and the disabled path still answers queries bitwise-identically
+    from repro.obs import parse_prometheus, set_enabled
+
+    pg = build_tenant_graph("arr", m, seed=seed)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        rep = pg.explain_analyze(pool[0])
+        rep2 = pg.explain_analyze(pool[0])  # warm: compile already paid
+        assert rep.total_first_ms >= rep.steady_ms >= 0
+        assert rep2.compile_ms <= rep.compile_ms
+        wl = synthetic_workload(["g"], pool, requests, seed=seed + 1)
+        run_workload(svc, wl, concurrency)
+        m1 = parse_prometheus(svc.metrics_text())
+        st = svc.stats()
+        assert m1["pg_service_submitted_total"] == st["submitted"]
+        assert m1["pg_service_completed_total"] == st["completed"]
+        run_workload(svc, wl, concurrency)
+        m2 = parse_prometheus(svc.metrics_text())
+        assert (m2["pg_service_submitted_total"]
+                == m1["pg_service_submitted_total"] + len(wl))
+        totals = [k for k in m1 if k.endswith("_total")]
+        assert totals and all(m2.get(k, 0.0) >= m1[k] for k in totals), \
+            "counters went backwards"
+        tl = svc.trace_log()
+        assert tl, "trace ring empty"
+        names = {s["name"] for t in tl for s in t.get("spans", [])}
+        assert "execute" in names or "cache" in names, names
+        prev = set_enabled(False)
+        try:
+            before = svc.stats().get("submitted", 0)
+            got = svc.query("g", pool[1])
+            ref = pg.match(pool[1])
+            assert (np.asarray(got.edge_mask)
+                    == np.asarray(ref.edge_mask)).all()
+            assert svc.stats().get("submitted", 0) == before, \
+                "disabled metrics still counted"
+        finally:
+            set_enabled(prev)
+    print("pgserve smoke: observability (metrics/traces/explain_analyze) OK")
+
     if len(jax.devices()) > 1:
         from repro.launch.mesh import make_entity_mesh
 
@@ -695,6 +760,9 @@ def main() -> None:
     ap.add_argument("--concurrency", type=int, default=8)
     ap.add_argument("--mesh", action="store_true",
                     help="place tenant graphs on an entity mesh over all devices")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the Prometheus exposition after the workload "
+                         "(fetched over the wire in --net mode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -724,6 +792,8 @@ def main() -> None:
 
             with PGClient(args.host, port=port) as c:
                 print(f"stats: {c.stats()}")
+                if args.metrics:
+                    print(c.metrics(), end="")
                 c.shutdown()
             proc.wait(timeout=60)
         finally:
@@ -759,10 +829,13 @@ def main() -> None:
             svc.add_graph(name, pg)
         metrics = run_workload(svc, wl, args.concurrency)
         stats = svc.stats()
+        exposition = svc.metrics_text() if args.metrics else None
     print(f"service (c={args.concurrency}): {metrics['qps']:.1f} qps, "
           f"p50={metrics['p50_ms']:.2f}ms p95={metrics['p95_ms']:.2f}ms, "
           f"speedup ×{metrics['qps'] / seq['qps']:.2f}")
     print(f"stats: {stats}")
+    if exposition is not None:
+        print(exposition, end="")
 
 
 if __name__ == "__main__":

@@ -16,10 +16,14 @@ compacted — their pinned delta chain IS their contract.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.metrics import GLOBAL as _OBS
+from repro.obs.metrics import enabled as _obs_enabled
 
 from repro.core import dip_shard
 from repro.core.attr_map import AttributeMap
@@ -178,6 +182,7 @@ class Compactor(threading.Thread):
         self._stop_evt = threading.Event()
 
     def sweep(self) -> int:
+        t0 = time.perf_counter()
         done = 0
         for name in self._registry.names():
             try:
@@ -186,23 +191,39 @@ class Compactor(threading.Thread):
                 continue  # dropped between names() and get()
             if pg is None or getattr(pg, "_frozen", False):
                 continue
-            if pg.overlay_size() < self.threshold:
+            overlay = pg.overlay_size()
+            if overlay < self.threshold:
                 # overlay below threshold — if it previously failed here,
                 # something (a manual compact) drained it: forgive it
                 self._failures.pop(name, None)
                 continue
             if self._failures.get(name, 0) >= self.MAX_FAILURES:
                 continue  # repeatedly failing graph: stop burning CPU on it
+            if _obs_enabled():
+                _OBS.histogram(
+                    "pg_compact_delta_size",
+                    "overlay entries folded per compaction",
+                    buckets=(16, 64, 256, 1024, 4096, 16384, 65536),
+                ).observe(overlay)
             try:
                 pg.compact()
             except Exception as e:  # noqa: BLE001 — isolate to this graph
                 self.errors += 1
                 self._failures[name] = self._failures.get(name, 0) + 1
                 self.last_error = f"{name}: {type(e).__name__}: {e}"
+                if _obs_enabled():
+                    _OBS.counter("pg_compact_failures",
+                                 "background compaction failures").inc()
                 continue
             self._failures.pop(name, None)
             done += 1
         self.compactions += done
+        if _obs_enabled():
+            _OBS.counter("pg_compact_compactions",
+                         "background compactions completed").inc(done)
+            _OBS.histogram("pg_compact_sweep_ms",
+                           "compactor sweep duration").observe(
+                (time.perf_counter() - t0) * 1e3)
         return done
 
     def stats(self) -> Dict[str, object]:

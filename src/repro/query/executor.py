@@ -56,10 +56,19 @@ import numpy as np
 
 from repro.core.di import DIGraph
 from repro.core.queries import extract_subgraph, induce_edge_mask_directed
+from repro.obs.metrics import GLOBAL as _OBS
+from repro.obs.metrics import enabled as _obs_enabled
 from repro.query.plan import Plan
 from repro.traverse.engine import frontier_step, reach_closure
 
 __all__ = ["MatchResult", "execute_plan", "execute_plan_with_masks"]
+
+# process-global execution accounting (docs/ARCHITECTURE.md §13) —
+# resolved once at import; host-side counts only, never a device sync
+_M_PLANS = _OBS.counter("pg_exec_plans", "plans run through propagation")
+_M_MASKS = _OBS.counter("pg_exec_mask_steps", "attribute mask steps materialized")
+_M_FUSED = _OBS.counter(
+    "pg_exec_fused_masks", "mask steps that rode a fused batched launch")
 
 
 @partial(
@@ -255,6 +264,9 @@ def _materialize_masks(pg, plan: Plan) -> Tuple[Dict[int, jax.Array], Dict[int, 
 
     fused = set(plan.fused_node_slots)
     fused_steps = [s for s in plan.mask_steps if s.kind == "node" and s.slot in fused]
+    if _obs_enabled():
+        _M_MASKS.inc(len(plan.mask_steps))
+        _M_FUSED.inc(len(fused_steps))
     if fused_steps:
         stacked = pg._vstore.query_any_batched(
             [s.values for s in fused_steps], impl=fused_steps[0].impl
@@ -304,6 +316,8 @@ def execute_plan_with_masks(
     with ``execute_plan``, hand in masks computed from the same stores
     (any DIP-ARR impl; they agree bitwise)."""
     g = pg._require_graph()
+    if _obs_enabled():
+        _M_PLANS.inc()
 
     cands = []
     for slot, node in enumerate(plan.pattern.nodes):

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import new_trace_id
 from repro.service import wire
 from repro.service.wire import WireMatchResult
 
@@ -37,14 +38,28 @@ __all__ = ["PGClient", "PGFuture"]
 
 
 class PGFuture:
-    """Handle for one pipelined request; ``result()`` blocks on its id."""
+    """Handle for one pipelined request; ``result()`` blocks on its id.
 
-    def __init__(self, client: "PGClient", rid: int):
+    After ``result()`` returns, ``trace`` holds the server's span tree for
+    this query (dict, rooted at the trace id this client minted) when the
+    server has tracing enabled — ``None`` before resolution or when the
+    server traced nothing."""
+
+    def __init__(self, client: "PGClient", rid: int,
+                 trace_id: Optional[str] = None):
         self._client = client
         self._rid = rid
+        self.trace_id = trace_id
+        self.trace: Optional[Dict] = None
 
     def result(self, timeout: Optional[float] = None) -> WireMatchResult:
-        return self._client._wait(self._rid, timeout=timeout)
+        header, arrays = self._client._wait_frame(self._rid, timeout=timeout)
+        self.trace = header.get("trace")
+        if self.trace is not None:
+            self._client.last_trace = self.trace
+        if "result" in header:
+            return wire.wire_to_result(header["result"], arrays)
+        return header
 
 
 class PGClient:
@@ -62,6 +77,9 @@ class PGClient:
         self._broken: Optional[str] = None  # why the stream is unusable
         self._stash: Dict[int, tuple] = {}  # id → (header, arrays) arrived
         # while we were waiting for a different id (out-of-order responses)
+        self.trace = True  # mint a trace id per query; the server's span
+        # tree comes back on the handle (PGFuture.trace / last_trace)
+        self.last_trace: Optional[Dict] = None  # most recent query's tree
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
@@ -140,8 +158,11 @@ class PGClient:
         Every handle should eventually be ``result()``-ed: a response whose
         handle is abandoned stays stashed on the client for the life of
         the connection (the stream has no way to un-receive it)."""
+        tid = new_trace_id() if self.trace else None
         return PGFuture(self, self._send("query", graph=graph,
-                                         pattern=pattern, impl=impl))
+                                         pattern=pattern, impl=impl,
+                                         trace=tid),
+                        trace_id=tid)
 
     def query(self, graph: str, pattern: str, *,
               impl: Optional[str] = None) -> WireMatchResult:
@@ -306,6 +327,18 @@ class PGClient:
 
     def stats(self) -> Dict:
         return self._call("stats")["stats"]
+
+    def metrics(self) -> str:
+        """Prometheus text exposition from the server (service registry +
+        process-global wire/executor/compactor instruments) — feed it to a
+        scraper or ``repro.obs.parse_prometheus``."""
+        return self._call("metrics")["metrics"]
+
+    def traces(self) -> Dict:
+        """Server-side observability rings: ``{"traces": [...], "slow":
+        [...]}`` — recent per-query span trees and the slow-query log."""
+        out = self._call("traces")
+        return {"traces": out["traces"], "slow": out["slow"]}
 
     def drain(self) -> None:
         self._call("drain")

@@ -139,13 +139,26 @@ class MicroBatcher:
 
     def __init__(self, execute_batch: Callable[[List], None], *,
                  max_batch: int = 32, window_ms: float = 2.0,
-                 adaptive: bool = True):
+                 adaptive: bool = True, metrics=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
         self._execute_batch = execute_batch
         self.max_batch = max_batch
         self.window_s = window_ms / 1e3
         self.adaptive = adaptive
+        # optional obs.MetricsRegistry: batch occupancy + window wait
+        # histograms (docs/ARCHITECTURE.md §13); instruments are created
+        # here once so the worker loop never enters the registry lock
+        self._m_occupancy = self._m_wait = None
+        if metrics is not None:
+            from repro.obs.metrics import SIZE_BUCKETS
+
+            self._m_occupancy = metrics.histogram(
+                "pg_sched_batch_occupancy",
+                "requests per executed micro-batch", buckets=SIZE_BUCKETS)
+            self._m_wait = metrics.histogram(
+                "pg_sched_window_wait_ms",
+                "batch-window wait from first dequeue to execution")
         self._queue: "queue.Queue" = queue.Queue()
         self._closed = False
         self._lifecycle = threading.Lock()  # orders submit vs close: nothing
@@ -182,6 +195,7 @@ class MicroBatcher:
                 return
             batch = [first]
             stop = False
+            t_first = time.monotonic()
             # adaptive window: an empty queue means nothing can coalesce —
             # skip the window entirely (c=1 pays zero batching latency);
             # a non-empty queue means pressure, so the window opens and
@@ -203,6 +217,9 @@ class MicroBatcher:
                     stop = True
                     break
                 batch.append(req)
+            if self._m_occupancy is not None:
+                self._m_occupancy.observe(len(batch))
+                self._m_wait.observe((time.monotonic() - t_first) * 1e3)
             try:
                 self._execute_batch(batch)
             except Exception as e:  # noqa: BLE001 — keep the worker alive

@@ -12,6 +12,9 @@ processes, not just threads) and ONE pair of caches.
 Request ops (header ``{"op": ..., "id": ...}`` + optional array blobs):
 
     ping / graphs / stats            server + service introspection
+    metrics                          Prometheus text exposition of the
+                                       service + process registries (§13)
+    traces                           recent trace trees + slow-query log
     load_graph {name, path, backend, mesh}   registry.load from disk
     query {graph, pattern, impl}     → Service.submit(); the response is
                                        written when the FUTURE resolves,
@@ -51,6 +54,8 @@ import threading
 import time
 from typing import Dict, Optional
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import Trace
 from repro.service import wire
 from repro.service.service import Service
 
@@ -308,6 +313,7 @@ class PGServer:
     def _dispatch(self, sess: _Session, header: Dict, arrays) -> None:
         op = header.get("op")
         rid = header.get("id")
+        t0 = time.perf_counter()
         try:
             if op == "query":
                 self._op_query(sess, rid, header)
@@ -319,14 +325,28 @@ class PGServer:
         except Exception as e:  # noqa: BLE001 — per-request isolation
             sess.send({"id": rid, "ok": False, "error": wire.exc_to_wire(e)})
             return
+        finally:
+            if obs_metrics.enabled():
+                # per-op server latency; for "query" this covers submit +
+                # fastpath only — device time lands on the trace instead
+                obs_metrics.GLOBAL.histogram(
+                    "pg_wire_op_ms", "server-side op handling latency",
+                    op=str(op)).observe((time.perf_counter() - t0) * 1e3)
         out_header.update({"id": rid, "ok": True})
         sess.send(out_header, out_arrays)
         if op == "shutdown":
             self._shutdown_requested.set()
 
     def _op_query(self, sess: _Session, rid, header: Dict) -> None:
+        # a client-minted trace id roots the server-side span tree; the
+        # finished tree rides back in the response header so the client
+        # can see where ITS query's time went (docs/ARCHITECTURE.md §13)
+        tr = None
+        tid = header.get("trace")
+        if tid is not None and self.service.config.trace_buffer > 0:
+            tr = Trace("query", trace_id=str(tid))
         fut = self.service.submit(header["graph"], header["pattern"],
-                                  impl=header.get("impl"))
+                                  impl=header.get("impl"), trace=tr)
         with sess.plock:
             sess.pending[rid] = fut
 
@@ -335,11 +355,22 @@ class PGServer:
                 sess.pending.pop(rid, None)
             err = f.exception()
             if err is not None:
-                sess.send({"id": rid, "ok": False,
-                           "error": wire.exc_to_wire(err)})
+                hdr = {"id": rid, "ok": False, "error": wire.exc_to_wire(err)}
+                if tr is not None:
+                    hdr["trace"] = tr.finish().to_dict()
+                sess.send(hdr)
                 return
+            t0 = time.perf_counter()
             meta, out = wire.result_to_wire(f.result())
-            sess.send({"id": rid, "ok": True, "result": meta}, out)
+            t1 = time.perf_counter()
+            hdr = {"id": rid, "ok": True, "result": meta}
+            if tr is not None:
+                tr.add_span("serialize", t0, t1)
+                tr.root.t1 = t1  # extend the root over serialization; the
+                # service pushed this trace into its ring at resolve time,
+                # and rings hold live objects, so the span is visible there
+                hdr["trace"] = tr.to_dict()
+            sess.send(hdr, out)
 
         fut.add_done_callback(_respond)
 
@@ -355,6 +386,13 @@ class PGServer:
 
     def _op_stats(self, header, arrays):
         return {"stats": self.service.stats()}, ()
+
+    def _op_metrics(self, header, arrays):
+        return {"metrics": self.service.metrics_text()}, ()
+
+    def _op_traces(self, header, arrays):
+        return {"traces": self.service.trace_log(),
+                "slow": self.service.slow_queries()}, ()
 
     def _op_load_graph(self, header, arrays):
         mesh = None

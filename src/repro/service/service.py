@@ -22,12 +22,15 @@ writer for the async path.
 from __future__ import annotations
 
 import dataclasses
-import threading
+import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.metrics import SIZE_BUCKETS, MetricsRegistry, render_prometheus
+from repro.obs.trace import Trace, TraceBuffer
 from repro.overlay.delta import overlaps, pattern_refs
 from repro.query import Pattern, execute_plan, parse, plan_pattern
 from repro.service.cache import LRUCache
@@ -54,6 +57,10 @@ class ServiceConfig:
     # before the queue — hot patterns skip the batching window entirely
     auto_compact_threshold: Optional[int] = None  # overlay entries per graph
     # before the background Compactor folds deltas into the base (None = off)
+    trace_buffer: int = 256  # finished per-query traces kept in the ring
+    # (0 = tracing off: no Trace objects allocated on the serve path)
+    slow_query_ms: float = 250.0  # traces at/over this wall time are
+    # mirrored into the slow-query log (0 = log every traced query)
 
 
 @dataclasses.dataclass
@@ -63,6 +70,8 @@ class _Request:
     ast: Pattern
     impl: Optional[str]
     future: Future
+    trace: Optional[Trace] = None
+    t_enqueue: float = 0.0  # perf_counter at submit → the batch.wait span
 
 
 class Service:
@@ -79,14 +88,30 @@ class Service:
         self.plan_cache = LRUCache(self.config.plan_cache_size)
         self.result_cache = LRUCache(self.config.result_cache_size)
         self._canon_cache = LRUCache(512)  # raw text → (canonical, ast)
-        self._stats: Dict[str, int] = {}
-        self._stats_lock = threading.Lock()
+        # per-instance metrics registry (docs/ARCHITECTURE.md §13): request/
+        # batch/cache counters live with THIS service — many short-lived
+        # services in one test process keep independent stats() deltas.
+        # The audit of the old `_stats` dict found its single-lock `_bump`
+        # race-free but contended across the scheduler worker, session
+        # writer threads and the compactor; per-counter locks replace it.
+        self.metrics = MetricsRegistry()
+        # per-key counter cache: _bump is on the submit fastpath, so it
+        # must not pay the registry's key construction per call.  Plain
+        # dict — GIL-atomic get/set, and counter identity is stable (the
+        # registry dedups), so a racing double-store is benign.
+        self._counters: Dict[str, object] = {}
+        self._m_coalesce_width = self.metrics.histogram(
+            "pg_sched_coalesce_width",
+            "requests fused per coalesced launch", buckets=SIZE_BUCKETS)
+        self.traces = TraceBuffer(maxlen=self.config.trace_buffer,
+                                  slow_ms=self.config.slow_query_ms)
         self.registry.subscribe(self._on_mutation)
         self._batcher = MicroBatcher(
             self._execute_batch,
             max_batch=self.config.max_batch,
             window_ms=self.config.window_ms,
             adaptive=self.config.adaptive_window,
+            metrics=self.metrics,
         )
         self._compactor = None
         if self.config.auto_compact_threshold is not None:
@@ -170,16 +195,31 @@ class Service:
 
     # --------------------------------------------------------------- clients
     def submit(self, graph: str, pattern: Union[str, Pattern], *,
-               impl: Optional[str] = None) -> Future:
+               impl: Optional[str] = None,
+               trace: Optional[Trace] = None) -> Future:
         """Enqueue one pattern query; returns its ``Future`` immediately.
 
         Parse errors surface here (caller's thread), not on the future —
-        a malformed pattern is a client bug, not a serving failure."""
+        a malformed pattern is a client bug, not a serving failure.
+
+        ``trace`` carries a caller-minted span tree (the wire server hands
+        in one rooted at the client's trace id); with tracing enabled
+        (``ServiceConfig.trace_buffer > 0``) an untraced submit mints its
+        own.  The trace travels WITH the request across the thread hops
+        and lands finished in ``Service.traces``."""
         if self._batcher.closed:
             # uniform closed-service contract: even a pattern the result
             # cache could answer raises, like every cache miss would
             raise RuntimeError("scheduler is closed")
+        t0 = time.perf_counter()
         canonical, ast = self._canon(pattern)
+        t1 = time.perf_counter()
+        tr = trace
+        if tr is None and self.config.trace_buffer > 0:
+            tr = Trace("query")
+        if tr is not None:
+            tr.annotate(graph=graph, pattern=canonical)
+            tr.add_span("parse", t0, t1)
         fut: Future = Future()
         self._bump("submitted")
         if self.config.submit_fastpath:
@@ -192,11 +232,16 @@ class Service:
                     self._bump("result_hits")
                     self._bump("fastpath_hits")
                     self._bump("completed")
+                    if tr is not None:
+                        tr.add_span("cache", t1, time.perf_counter(),
+                                    hit=True, fastpath=True)
                     fut.set_result(hit[2])
+                    if tr is not None:
+                        self.traces.push(tr)
                     return fut
         self._batcher.submit(
             _Request(graph=graph, canonical=canonical, ast=ast, impl=impl,
-                     future=fut)
+                     future=fut, trace=tr, t_enqueue=time.perf_counter())
         )
         return fut
 
@@ -325,9 +370,12 @@ class Service:
     # ----------------------------------------------------------------- stats
     def stats(self) -> Dict[str, object]:
         """Counter snapshot: request/batch totals, coalescing activity,
-        cache hit/miss/eviction/invalidation accounting."""
-        with self._stats_lock:
-            out: Dict[str, object] = dict(self._stats)
+        cache hit/miss/eviction/invalidation accounting.  Backed by the
+        per-service metrics registry — the same instruments the Prometheus
+        exposition renders, so the two views cannot disagree.  Legacy flat
+        keys (``submitted``, ``result_hits``, …) are unchanged; registry
+        histograms appear under their ``pg_``-prefixed names as dicts."""
+        out: Dict[str, object] = self.metrics.snapshot()
         out["plan_cache"] = self.plan_cache.stats()
         out["result_cache"] = self.result_cache.stats()
         if self._compactor is not None:
@@ -336,9 +384,43 @@ class Service:
             out["compactor"] = self._compactor.stats()
         return out
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: this service's registry (request/
+        batch/cache counters, scheduler histograms) plus the process
+        ``GLOBAL`` registry (wire, executor, compactor).  Cache and
+        compactor internals keep their own counters; they are mirrored
+        into labeled instruments here at render time so the scrape always
+        agrees with ``stats()``."""
+        for tier, cache in (("plan", self.plan_cache),
+                            ("result", self.result_cache)):
+            s = cache.stats()
+            for k in ("hits", "misses", "evictions"):
+                self.metrics.counter(
+                    f"pg_cache_{k}", f"LRU cache {k} by tier",
+                    tier=tier).set_total(s[k])
+            self.metrics.gauge(
+                "pg_cache_size", "LRU cache live entries",
+                tier=tier).set(s["size"])
+            self.metrics.gauge(
+                "pg_cache_maxsize", "LRU cache capacity",
+                tier=tier).set(s["maxsize"])
+        # compactor sweeps/failures live in GLOBAL (pg_compact_*): the
+        # Compactor instruments itself, so nothing to mirror here
+        return render_prometheus(self.metrics, obs_metrics.GLOBAL)
+
+    def trace_log(self) -> List[Dict[str, object]]:
+        """Finished per-query trace trees, oldest first (bounded ring)."""
+        return self.traces.traces()
+
+    def slow_queries(self) -> List[Dict[str, object]]:
+        """Traces that ran at/over ``ServiceConfig.slow_query_ms``."""
+        return self.traces.slow()
+
     def _bump(self, key: str, n: int = 1) -> None:
-        with self._stats_lock:
-            self._stats[key] = self._stats.get(key, 0) + n
+        c = self._counters.get(key)
+        if c is None:
+            c = self._counters[key] = self.metrics.counter(key)
+        c.inc(n)
 
     # ------------------------------------------------------------- internals
     def _canon(self, pattern: Union[str, Pattern]):
@@ -373,10 +455,13 @@ class Service:
         results = execute_coalesced(pg, plans, impl=impl, stats=local)
         for k, v in local.items():
             self._bump(k, v)
+        self._m_coalesce_width.observe(len(plans))
         return results
 
     def _serve_group(self, pg, graph: str, impl: Optional[str],
-                     canon_asts: Dict[str, Pattern]) -> Dict[str, object]:
+                     canon_asts: Dict[str, Pattern],
+                     timings: Optional[Dict[str, object]] = None
+                     ) -> Dict[str, object]:
         """The serve pipeline for ONE deduplicated group: result-cache
         probe → per-request planning → coalesced execution → cache put.
         Returns canonical → ``MatchResult`` or ``Exception`` — both entry
@@ -389,7 +474,14 @@ class Service:
         co-batched tenants.  Consistency under concurrent mutators: the
         version is read before executing and re-checked after — a
         mid-flight mutation (torn graph/store view) retries the group and
-        nothing torn is ever cached or returned as authoritative."""
+        nothing torn is ever cached or returned as authoritative.
+
+        ``timings`` (optional mutable dict) receives the group's stage
+        endpoints — ``cache``/``plan``/``execute`` → ``(t0, t1)`` in
+        ``perf_counter`` seconds plus ``cache_hits`` (canonicals served
+        from cache) — measured ONCE per group; the batch path copies them
+        into every member request's trace."""
+        t_cache0 = time.perf_counter()
         outcomes: Dict[str, object] = {}
         todo: Dict[str, Pattern] = {}
         for canonical, ast in canon_asts.items():
@@ -400,6 +492,10 @@ class Service:
             else:
                 self._bump("result_misses")
                 todo[canonical] = ast
+        t_cache1 = time.perf_counter()
+        if timings is not None:
+            timings["cache"] = (t_cache0, t_cache1)
+            timings["cache_hits"] = set(outcomes)
         if not todo:
             return outcomes
 
@@ -410,6 +506,9 @@ class Service:
             except Exception as e:  # noqa: BLE001 — isolated to this request
                 outcomes[canonical] = e
                 self._bump("errors")
+        t_plan1 = time.perf_counter()
+        if timings is not None:
+            timings["plan"] = (t_cache1, t_plan1)
         if not plans:
             return outcomes
 
@@ -434,6 +533,8 @@ class Service:
             if pg.version == version:
                 stable = True
                 break  # consistent snapshot — safe to cache
+        if timings is not None:
+            timings["execute"] = (t_plan1, time.perf_counter())
         put_keys = []
         for c, res in zip(keys, results):
             if isinstance(res, BaseException):
@@ -489,6 +590,9 @@ class Service:
                     if r.future.set_running_or_notify_cancel():
                         r.future.set_exception(e)
                         self._bump("errors")
+                        if r.trace is not None:
+                            r.trace.annotate(error="KeyError")
+                            self.traces.push(r.trace)
                 continue
             # duplicate canonicals inside one window execute ONCE and fan
             # the result out (the multi-tenant hot-pattern case)
@@ -504,12 +608,31 @@ class Service:
                 by_canonical.setdefault(r.canonical, []).append(r)
             if not by_canonical:
                 continue
-            outcomes = self._serve_group(pg, gname, impl, canon_asts)
+            traced = [r for rs in by_canonical.values() for r in rs
+                      if r.trace is not None]
+            t_batch = time.perf_counter()
+            for r in traced:
+                r.trace.add_span("batch.wait", r.t_enqueue, t_batch,
+                                 batch_size=len(batch))
+            timings: Optional[Dict[str, object]] = {} if traced else None
+            outcomes = self._serve_group(pg, gname, impl, canon_asts,
+                                         timings=timings)
             for canonical, rs in by_canonical.items():
                 res = outcomes[canonical]
                 for r in rs:
+                    if r.trace is not None and timings is not None:
+                        hits = timings.get("cache_hits", ())
+                        for stage in ("cache", "plan", "execute"):
+                            tt = timings.get(stage)
+                            if tt is None:
+                                continue
+                            attrs = ({"hit": canonical in hits}
+                                     if stage == "cache" else {})
+                            r.trace.add_span(stage, tt[0], tt[1], **attrs)
                     if isinstance(res, BaseException):
                         r.future.set_exception(res)
                     else:
                         r.future.set_result(res)
                         self._bump("completed")
+                    if r.trace is not None:
+                        self.traces.push(r.trace)

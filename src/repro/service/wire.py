@@ -55,6 +55,22 @@ MAGIC = b"PGW1"
 MAX_PAYLOAD = 1 << 30  # 1 GiB — fail fast on garbage length prefixes
 _LEN = struct.Struct("!I")
 
+# process-global frame/byte accounting (docs/ARCHITECTURE.md §13); the
+# counters are resolved once at import so the per-frame cost with metrics
+# ON is two lock+add pairs, and with metrics OFF a single flag check
+from repro.obs.metrics import enabled as _obs_enabled  # noqa: E402
+
+
+def _wire_counters(direction: str):
+    from repro.obs.metrics import GLOBAL
+
+    return (GLOBAL.counter("pg_wire_frames", "wire frames", dir=direction),
+            GLOBAL.counter("pg_wire_bytes", "wire bytes", dir=direction))
+
+
+_SENT = _wire_counters("sent")
+_RECEIVED = _wire_counters("received")
+
 
 class ProtocolError(RuntimeError):
     """Malformed frame: bad magic, truncated payload, oversized length."""
@@ -136,7 +152,12 @@ def encode_msg(header: Dict, arrays: Sequence[np.ndarray] = ()) -> bytes:
 
 def send_msg(sock: socket.socket, header: Dict,
              arrays: Sequence[np.ndarray] = ()) -> None:
-    sock.sendall(encode_msg(header, arrays))
+    buf = encode_msg(header, arrays)
+    if _obs_enabled():
+        frames, nbytes = _SENT
+        frames.inc()
+        nbytes.inc(len(buf))
+    sock.sendall(buf)
 
 
 def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes:
@@ -155,12 +176,18 @@ def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes:
 def recv_msg(sock: socket.socket) -> Tuple[Dict, List[np.ndarray]]:
     """Read one frame → ``(header, arrays)``; blocks until complete."""
     head = _recv_exact(sock, len(MAGIC) + _LEN.size, at_boundary=True)
+    if _obs_enabled():
+        frames, nbytes = _RECEIVED
+        frames.inc()
+        nbytes.inc(len(head))
     if head[: len(MAGIC)] != MAGIC:
         raise ProtocolError(f"bad magic {head[:len(MAGIC)]!r}")
     (payload_len,) = _LEN.unpack(head[len(MAGIC):])
     if payload_len > MAX_PAYLOAD or payload_len < _LEN.size:
         raise ProtocolError(f"bad payload length {payload_len}")
     payload = memoryview(_recv_exact(sock, payload_len, at_boundary=False))
+    if _obs_enabled():
+        _RECEIVED[1].inc(payload_len)
     (header_len,) = _LEN.unpack(payload[: _LEN.size])
     if _LEN.size + header_len > payload_len:
         raise ProtocolError(f"bad header length {header_len}")

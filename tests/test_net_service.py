@@ -387,3 +387,71 @@ def test_cross_process_net_roundtrip():
     finally:
         if proc.poll() is None:
             proc.kill()
+
+
+# ------------------------------------------------------------ observability
+def test_net_trace_id_roundtrip(served):
+    """The client mints a trace id per query; the server's span tree comes
+    back in the response header rooted at that id (ARCHITECTURE §13)."""
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        h = c.submit("g", PATTERNS[0])
+        res = h.result()
+        assert h.trace_id and h.trace is not None
+        assert h.trace["trace_id"] == h.trace_id
+        names = [s["name"] for s in h.trace["spans"]]
+        assert "serialize" in names, names
+        assert "parse" in names or "cache" in names, names
+        assert c.last_trace is h.trace
+        _assert_wire_matches(res, pg.match(PATTERNS[0]))
+
+
+def test_net_trace_opt_out(served):
+    """client.trace = False sends no trace id; no tree comes back."""
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        c.trace = False
+        h = c.submit("g", PATTERNS[1])
+        h.result()
+        assert h.trace_id is None and h.trace is None
+
+
+def test_net_slow_query_ring_captures_client_trace():
+    """slow_query_ms=0 marks every query slow: the traces verb's slow ring
+    must hold span trees rooted at the CLIENT's ids."""
+    pg = build_tenant_graph("arr", 400, seed=7)
+    svc = Service(config=ServiceConfig(slow_query_ms=0.0))
+    svc.add_graph("g", pg)
+    server = PGServer(svc, port=0).start()
+    try:
+        with PGClient(port=server.port) as c:
+            hs = [c.submit("g", p) for p in PATTERNS]
+            for h in hs:
+                h.result()
+            payload = c.traces()
+            slow_ids = {t["trace_id"] for t in payload["slow"]}
+            assert {h.trace_id for h in hs} <= slow_ids
+            assert {t["trace_id"] for t in payload["traces"]} >= slow_ids
+    finally:
+        server.close()
+        svc.close()
+
+
+def test_net_metrics_verb_parses_and_counts(served):
+    """The metrics verb returns Prometheus text that parses, moves by
+    exactly the burst size, and agrees with the stats verb."""
+    from repro.obs import parse_prometheus
+
+    server, pg = served
+    with PGClient(port=server.port) as c:
+        m1 = parse_prometheus(c.metrics())
+        for p in PATTERNS:
+            c.query("g", p)
+        m2 = parse_prometheus(c.metrics())
+        st = c.stats()
+    assert (m2["pg_service_submitted_total"]
+            == m1["pg_service_submitted_total"] + len(PATTERNS))
+    assert m2["pg_service_submitted_total"] == st["submitted"]
+    assert m2["pg_service_completed_total"] == st["completed"]
+    # wire instrumentation rode along (labeled GLOBAL counters)
+    assert any(k.startswith("pg_wire_bytes") for k in m2), sorted(m2)[:10]

@@ -1,0 +1,306 @@
+"""Observability layer: metrics registry, Prometheus exposition, trace
+spans, and EXPLAIN ANALYZE (src/repro/obs/, docs/ARCHITECTURE.md §13).
+
+The contracts under test:
+
+* the registry is get-or-create on (name, labels) identity, type-checked,
+  and counters are atomic under concurrent increments — including through
+  ``Service._bump``, whose old dict-based counters this registry replaced
+  (the lost-update audit);
+* the enable flag is a real off switch: disabled counters/histograms do
+  not move (gauges deliberately still do — they record state, not
+  events), and ``set_enabled`` returns the previous value so guards can
+  restore it;
+* ``render_prometheus`` emits text that ``parse_prometheus`` reads back
+  exactly — legacy short names normalize to ``pg_service_*_total``,
+  explicit ``pg_*`` names pass through, histograms expose cumulative
+  ``le`` buckets — and the exposition always agrees with
+  ``Service.stats()``;
+* traces are explicit span trees that serialize/rehydrate losslessly, and
+  the ``TraceBuffer`` rings stay bounded;
+* ``explain_analyze`` separates compile from steady-state execution, and
+  ``match(profile=True)`` returns a result bitwise-identical to plain
+  ``match()``;
+* ``LRUCache.stats()`` keeps its size/capacity/eviction fields (the
+  exposition mirrors them into gauges).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.launch.pgserve import build_tenant_graph
+from repro.obs import (
+    Span,
+    Trace,
+    TraceBuffer,
+    new_trace_id,
+    parse_prometheus,
+    render_prometheus,
+    set_enabled,
+)
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.service import Service, ServiceConfig
+from repro.service.cache import LRUCache
+
+PATTERN = "(a:l1|l2)-[:follows]->(b:l3)"
+
+
+@pytest.fixture
+def pg():
+    return build_tenant_graph("arr", 600, seed=11)
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_get_or_create_identity():
+    reg = MetricsRegistry()
+    c1 = reg.counter("hits", "help text")
+    c2 = reg.counter("hits")
+    assert c1 is c2
+    # labels are part of the identity, order-insensitive
+    a = reg.counter("pg_wire_frames", dir="sent")
+    b = reg.counter("pg_wire_frames", dir="received")
+    assert a is not b
+    assert reg.counter("pg_wire_frames", dir="sent") is a
+    h1 = reg.histogram("lat_ms", op="query", tier="x")
+    h2 = reg.histogram("lat_ms", tier="x", op="query")
+    assert h1 is h2
+
+
+def test_registry_rejects_type_mismatch():
+    reg = MetricsRegistry()
+    reg.counter("thing")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("thing")
+
+
+def test_registry_snapshot_keys():
+    reg = MetricsRegistry()
+    reg.counter("plain").inc(3)
+    reg.gauge("occupancy", tier="result").set(7)
+    snap = reg.snapshot()
+    assert snap["plain"] == 3
+    assert snap["occupancy{tier=result}"] == 7
+
+
+def test_counter_concurrent_increments_exact():
+    """The Service._bump audit: N threads × K increments lose nothing."""
+    reg = MetricsRegistry()
+    threads_n, per_thread = 8, 2_000
+
+    def worker():
+        for _ in range(per_thread):
+            reg.counter("submitted").inc()
+
+    ts = [threading.Thread(target=worker) for _ in range(threads_n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter("submitted").value() == threads_n * per_thread
+
+
+def test_service_bump_concurrent_exact():
+    """Same audit at the Service layer: _bump rides the registry now."""
+    svc = Service.__new__(Service)  # counters only — no scheduler needed
+    svc.metrics = MetricsRegistry()
+    svc._counters = {}
+
+    def worker():
+        for _ in range(1_000):
+            svc._bump("submitted")
+
+    ts = [threading.Thread(target=worker) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert svc.metrics.counter("submitted").value() == 8_000
+
+
+def test_histogram_buckets_cumulative():
+    h = Histogram("h", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    snap = h.value()
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(555.5)
+    assert snap["buckets"] == {1.0: 1, 10.0: 2, 100.0: 3}  # +Inf holds the 4th
+
+
+def test_histogram_rejects_unsorted_buckets():
+    with pytest.raises(ValueError):
+        Histogram("h", buckets=(10.0, 1.0))
+
+
+# ------------------------------------------------------------- enable flag
+def test_disabled_metrics_do_not_move():
+    c, h, g = Counter("c"), Histogram("h"), Gauge("g")
+    prev = set_enabled(False)
+    try:
+        assert prev is True  # suite default
+        c.inc(5)
+        h.observe(1.0)
+        g.set(3)
+        assert c.value() == 0
+        assert h.value()["count"] == 0
+        assert g.value() == 3  # gauges record state: deliberately ungated
+    finally:
+        set_enabled(prev)
+    c.inc(5)
+    assert c.value() == 5
+
+
+def test_set_enabled_returns_previous():
+    try:
+        assert set_enabled(False) is True  # suite default: on
+        assert set_enabled(True) is False
+        assert set_enabled(True) is True
+    finally:
+        set_enabled(True)
+
+
+# -------------------------------------------------------------- exposition
+def test_render_parse_roundtrip_and_name_normalization():
+    reg = MetricsRegistry()
+    reg.counter("result_hits").inc(4)           # legacy short name
+    reg.counter("pg_wire_frames", dir="sent").inc(9)  # explicit pg_ name
+    reg.gauge("pg_cache_size", tier="plan").set(3)
+    reg.histogram("pg_wire_op_ms", op="query",
+                  buckets=(1.0, 10.0)).observe(2.5)
+    text = render_prometheus(reg)
+    assert "# TYPE pg_service_result_hits_total counter" in text
+    parsed = parse_prometheus(text)
+    assert parsed["pg_service_result_hits_total"] == 4
+    assert parsed['pg_wire_frames_total{dir="sent"}'] == 9
+    assert parsed['pg_cache_size{tier="plan"}'] == 3
+    assert parsed['pg_wire_op_ms_bucket{op="query",le="1"}'] == 0
+    assert parsed['pg_wire_op_ms_bucket{op="query",le="10"}'] == 1
+    assert parsed['pg_wire_op_ms_bucket{op="query",le="+Inf"}'] == 1
+    assert parsed['pg_wire_op_ms_count{op="query"}'] == 1
+    assert parsed['pg_wire_op_ms_sum{op="query"}'] == pytest.approx(2.5)
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus("pg_thing_total notanumber\n")
+    with pytest.raises(ValueError):
+        parse_prometheus("   \x00garbage 1\n")
+
+
+def test_service_exposition_agrees_with_stats(pg):
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        for _ in range(3):
+            svc.query("g", PATTERN)
+        st = svc.stats()
+        parsed = parse_prometheus(svc.metrics_text())
+    assert parsed["pg_service_submitted_total"] == st["submitted"] == 3
+    assert parsed["pg_service_completed_total"] == st["completed"]
+    # cache occupancy gauges mirrored in at render time
+    assert parsed['pg_cache_size{tier="result"}'] == st["result_cache"]["size"]
+    assert (parsed['pg_cache_hits_total{tier="result"}']
+            == st["result_cache"]["hits"])
+
+
+# ------------------------------------------------------------------- traces
+def test_span_tree_and_serialization():
+    tr = Trace("query", trace_id=new_trace_id())
+    with tr.span("plan") as sp:
+        sp.annotate(steps=3)
+        with sp.span("inner"):
+            pass
+    tr.add_span("execute", 1.0, 1.25, batch_size=4)
+    d = tr.finish().to_dict()
+    assert d["trace_id"] == tr.trace_id
+    names = [s["name"] for s in d["spans"]]
+    assert names == ["plan", "execute"]
+    assert d["spans"][0]["attrs"] == {"steps": 3}
+    assert d["spans"][0]["spans"][0]["name"] == "inner"
+    assert d["spans"][1]["ms"] == pytest.approx(250.0)
+    back = Trace.from_dict(d)
+    assert back.trace_id == tr.trace_id
+    assert back.to_dict()["spans"][1]["ms"] == pytest.approx(250.0)
+
+
+def test_span_context_manager_records_error():
+    tr = Trace()
+    with pytest.raises(RuntimeError):
+        with tr.span("execute") as sp:
+            raise RuntimeError("boom")
+    assert sp.t1 is not None
+    assert sp.attrs["error"] == "RuntimeError"
+
+
+def test_trace_buffer_ring_bounds_and_slow_mirror():
+    buf = TraceBuffer(maxlen=4, slow_ms=0.0, slow_maxlen=2)
+    pushed = [Trace(trace_id=f"t{i:02d}") for i in range(7)]
+    for t in pushed:
+        buf.push(t)
+    assert len(buf) == 4
+    assert [t["trace_id"] for t in buf.traces()] == ["t03", "t04", "t05", "t06"]
+    # slow_ms=0 mirrors everything; the slow ring keeps its own bound
+    assert [t["trace_id"] for t in buf.slow()] == ["t05", "t06"]
+    disabled = TraceBuffer(maxlen=0)
+    disabled.push(Trace())
+    assert len(disabled) == 0
+
+
+def test_service_trace_ring_captures_span_stages(pg):
+    cfg = ServiceConfig(slow_query_ms=0.0)
+    with Service(config=cfg) as svc:
+        svc.add_graph("g", pg)
+        svc.query("g", PATTERN)   # cold: full pipeline
+        svc.query("g", PATTERN)   # warm: submit fastpath result hit
+        traces = svc.trace_log()
+        slow = svc.slow_queries()
+    assert len(traces) == 2
+    cold_names = [s["name"] for s in traces[0]["spans"]]
+    for stage in ("parse", "batch.wait", "cache", "plan", "execute"):
+        assert stage in cold_names, cold_names
+    warm = traces[1]["spans"]
+    cache = next(s for s in warm if s["name"] == "cache")
+    assert cache["attrs"]["hit"] is True
+    assert len(slow) == 2  # slow_ms=0 captures everything
+
+
+# ----------------------------------------------------------- explain analyze
+def test_explain_analyze_cold_then_warm(pg):
+    import jax
+
+    pattern = "(a:l4)-[:likes]->(b:l5)"
+    jax.clear_caches()  # guarantee the first run really compiles
+    rep = pg.explain_analyze(pattern)
+    assert rep.parse_ms >= 0 and rep.plan_ms >= 0
+    assert rep.total_first_ms >= rep.steady_ms >= 0
+    assert rep.cold and rep.compile_ms > 0
+    rep2 = pg.explain_analyze(pattern)  # same jit cache: compile already paid
+    # warm compile share collapses; a loose ratio (not the exact cold flag)
+    # keeps host-timing jitter from flaking the assertion
+    assert rep2.compile_ms < rep.compile_ms / 10
+    d = rep.to_dict()
+    assert {"compile_ms", "execute_ms", "masks_ms"} <= set(d)
+    txt = rep.describe()
+    assert "analyze" in txt and "compile" in txt
+
+
+def test_match_profile_returns_identical_result(pg):
+    ref = pg.match(PATTERN)
+    got, rep = pg.match(PATTERN, profile=True)
+    assert (np.asarray(got.vertex_mask) == np.asarray(ref.vertex_mask)).all()
+    assert (np.asarray(got.edge_mask) == np.asarray(ref.edge_mask)).all()
+    assert rep.steady_ms >= 0
+
+
+# ----------------------------------------------------------------- lru cache
+def test_lru_cache_stats_fields_regression():
+    c = LRUCache(maxsize=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1
+    assert c.get("zzz") is None
+    c.put("c", 3)  # evicts b (a was refreshed by the hit)
+    st = c.stats()
+    assert st == {"size": 2, "maxsize": 2, "hits": 1, "misses": 1,
+                  "evictions": 1}
+    assert c.get("b") is None  # b was the eviction victim
