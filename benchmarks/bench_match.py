@@ -74,6 +74,29 @@ def run(m: int = 100_000) -> None:
     t = time_call(lambda: [pg.query_labels(list(q)) for q in queries])
     emit_json(f"arr_separate_masks_m{m}", t, q=len(queries))
 
+    # -- fused packed predicate+label combine vs the byte two-op pipeline ----
+    # (arr; 0-hop pattern so mask combination IS the work).  "composed" is
+    # the pre-bitplane pipeline: byte store, label query + separate
+    # predicate mask op ANDed in bool space.  "fused" evaluates the
+    # predicate inside the single packed word-space combine launch.
+    from repro.core import bitplane
+
+    pred_pat = "(a:common {age > 40})"
+    times = {}
+    for mode, p in (("fused", True), ("composed", False)):
+        with bitplane.byte_masks(not p):
+            pg = _build("arr", m)
+            nodes = np.asarray(pg.graph.node_map)
+            rng = np.random.default_rng(9)
+            pg.add_node_properties(
+                "age", nodes,
+                rng.integers(0, 80, len(nodes)).astype(np.float32))
+            plan = plan_pattern(pg, parse(pred_pat))
+            times[mode] = time_call(lambda: execute_plan(pg, plan))
+    emit_json(f"arr_pred_label_fused_m{m}", times["fused"], m=m,
+              speedup=round(times["composed"] / times["fused"], 2))
+    emit_json(f"arr_pred_label_composed_m{m}", times["composed"], m=m)
+
     # -- skew: budget gather vs inverted scan on a selective label (listd) ---
     pg = _build("listd", m)
     t = time_call(lambda: pg.query_labels(["needle"], impl="budget"))

@@ -1,0 +1,110 @@
+"""Bit-packed vs byte mask-plane scan bandwidth (the PR-9 headline numbers).
+
+The DIP-arr plane is the bandwidth-bound object in the whole query path: a
+label query streams all ``k × n`` plane entries once (roofline: ~0.1
+flop/byte).  Packing the plane 8× smaller (uint32 words, 1 bit/entity)
+cuts the streamed bytes 8× — these rows measure both the structural
+bytes-moved ratio and the realized wall-clock speedup on ``bitmap_query``
+at ``n ≥ 1M``, plus the executor-level payoff: a fused predicate+label
+``match()`` vs the two-op composition it replaces.
+
+Rows append to ``BENCH_scan.json`` (override: ``BENCH_JSON_PATH``) with
+``run_id``/``git_sha`` stamps like every other JSON section.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+from repro.core import bitplane, dip_arr
+
+
+def _plane(n: int, k: int, packed: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    ent = rng.integers(0, n, size=2 * n).astype(np.int64)
+    att = rng.integers(0, k, size=2 * n).astype(np.int64)
+    return dip_arr.build_dip_arr_host(ent, att, k=k, n=n, packed=packed)
+
+
+def run(n: int = 1_000_000, k: int = 64,
+        json_path: str = "BENCH_scan.json") -> None:
+    byte = _plane(n, k, packed=False)
+    packed = _plane(n, k, packed=True)
+    mask = jnp.zeros((k,), bool).at[jnp.arange(0, k, 3)].set(True)
+
+    # parity first — a fast wrong answer is not a benchmark row
+    ref = np.asarray(dip_arr.query_any(byte, mask, impl="scan"))
+    got = np.asarray(bitplane.unpack_mask(
+        dip_arr.query_any_words(packed, mask), n))
+    assert np.array_equal(ref, got), "packed/byte disagree — not benchmarking"
+
+    byte_bytes = byte.bitmap.size * byte.bitmap.dtype.itemsize  # k·n int8
+    word_bytes = packed.bitmap.size * packed.bitmap.dtype.itemsize  # k·⌈n/32⌉·4
+
+    t_byte = time_call(lambda: dip_arr.query_any(byte, mask, impl="scan"))
+    emit_json(f"scan_byte_n{n}", t_byte, path=json_path, n=n, k=k,
+              bytes_moved=byte_bytes,
+              gb_per_s=round(byte_bytes / t_byte / 1e9, 2))
+    t_packed = time_call(lambda: dip_arr.query_any_words(packed, mask))
+    emit_json(f"scan_packed_n{n}", t_packed, path=json_path, n=n, k=k,
+              bytes_moved=word_bytes,
+              gb_per_s=round(word_bytes / t_packed / 1e9, 2),
+              bytes_ratio=round(byte_bytes / word_bytes, 2),
+              speedup=round(t_byte / t_packed, 2))
+    # packed including the one boundary unpack (what a bool consumer pays)
+    t_pu = time_call(lambda: bitplane.unpack_mask(
+        dip_arr.query_any_words(packed, mask), n))
+    emit_json(f"scan_packed_unpack_n{n}", t_pu, path=json_path, n=n, k=k,
+              speedup=round(t_byte / t_pu, 2))
+
+    # batched (Q=8) — the executor's fused-launch shape
+    masks = jnp.zeros((8, k), bool).at[jnp.arange(8)[:, None],
+                                       jnp.arange(0, k, 5)[None, :]].set(True)
+    t_byte_b = time_call(lambda: dip_arr.query_any_batched(byte, masks))
+    emit_json(f"scan_batched_byte_n{n}", t_byte_b, path=json_path, n=n, k=k, q=8)
+    t_packed_b = time_call(lambda: dip_arr.query_any_batched_words(packed, masks))
+    emit_json(f"scan_batched_packed_n{n}", t_packed_b, path=json_path, n=n,
+              k=k, q=8, speedup=round(t_byte_b / t_packed_b, 2))
+
+    # -- executor payoff: fused predicate+label match vs two-op composition --
+    from repro.core import PropGraph
+
+    rng = np.random.default_rng(1)
+    m = n  # one edge per vertex keeps the build cheap; masks dominate anyway
+    src = rng.integers(0, n // 2, m)
+    dst = rng.integers(0, n // 2, m)
+    # 0-hop pattern so the mask-combination stage IS the measurement —
+    # hop propagation would swamp it with edge-scatter time
+    pat = "(a:person {age > 40})"
+    for lbl, p in (("packed", True), ("byte", False)):
+        with bitplane.byte_masks(not p):
+            pg = PropGraph(backend="arr").add_edges_from(src, dst)
+            nodes = np.asarray(pg.graph.node_map)
+            pg.add_node_labels(nodes, rng.choice(["person", "org"], len(nodes)))
+            pg.add_node_properties(
+                "age", nodes, rng.integers(0, 80, len(nodes)).astype(np.float32))
+            plan = None
+            from repro.query import execute_plan, parse, plan_pattern
+            plan = plan_pattern(pg, parse(pat))
+            t = time_call(lambda: execute_plan(pg, plan))
+            emit_json(f"match_pred_label_{lbl}_n{n}", t, path=json_path,
+                      n=len(nodes), mode=lbl)
+
+            def composed():  # the two-op baseline the fused combine replaces
+                return (pg.query_labels(["person"])
+                        & pg.vertex_predicate_mask("age", ">", 40.0))
+
+            t2 = time_call(composed)
+            emit_json(f"mask_pred_label_composed_{lbl}_n{n}", t2,
+                      path=json_path, n=len(nodes), mode=lbl)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000)
+    ap.add_argument("--k", type=int, default=64)
+    a = ap.parse_args()
+    run(n=a.n, k=a.k)

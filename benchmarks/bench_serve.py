@@ -176,8 +176,10 @@ def run(m: int = 50_000, requests: int = 64, concurrencies=(1, 2, 4, 8),
         qps_metrics_on=round(met_on["qps"], 1),
         metrics_overhead=round(overhead, 4), mode="service-metrics-disabled",
     )
-    assert abs(overhead) < 0.05, (
-        f"metrics flag moved c={cmax} coalesce timing by "
+    # one-sided: negative readings mean scheduler noise beat the best-of
+    # filter (metrics can't make the service faster), not a regression
+    assert overhead < 0.05, (
+        f"metrics flag slowed c={cmax} coalesce timing by "
         f"{overhead:+.1%} (guard: <5%)")
 
     if not net:

@@ -4,8 +4,11 @@ graph4-regime edge set (10⁸ edges, K=50), lowered on the production mesh.
 This is the §Perf 'most representative of the paper's technique' experiment:
   baseline   — paper-faithful row-scan query (bool AND + OR-reduce over rows)
   optimized  — beyond-paper MXU matvec form (bf16 dot), int8 bitmap
-Both are lowered + compiled on the 16×16 mesh with the bitmap entity-sharded
-(the paper's distribution), and the three roofline terms compared.
+  packed     — bit-packed word plane (uint32, 1 bit/entity): word-select +
+               OR-reduce, 8× fewer plane bytes than the int8 forms
+All are lowered + compiled on the 16×16 mesh with the bitmap entity-sharded
+(the paper's distribution; packed shards the WORD axis), and the three
+roofline terms compared.
 
 Run:  PYTHONPATH=src python -m benchmarks.pg_roofline
 """
@@ -39,18 +42,30 @@ def matvec_query(bitmap, mask):  # beyond-paper MXU form
     return (mask.astype(jnp.bfloat16) @ bitmap.astype(jnp.bfloat16)) > 0
 
 
+def packed_query(plane, mask):  # bit-packed word plane (core.bitplane layout)
+    sel = jnp.where(mask[:, None], plane, jnp.uint32(0))
+    return jax.lax.reduce(sel, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+
+
 def main():
     mesh = make_production_mesh()
     bitmap_sh = NamedSharding(mesh, P(None, ("data", "model")))  # entity-sharded
     mask_sh = NamedSharding(mesh, P(None))
     bm = jax.ShapeDtypeStruct((K, M), jnp.int8, sharding=bitmap_sh)
     mk = jax.ShapeDtypeStruct((K,), jnp.bool_, sharding=mask_sh)
+    # packed plane: same M entities in ⌈M/32⌉ uint32 words, word axis
+    # sharded — padded to whole words per device (launch.sharding.pg_word_pad)
+    n_dev = 256
+    w_pad = -(-(M // 32) // n_dev) * n_dev
+    pm = jax.ShapeDtypeStruct((K, w_pad), jnp.uint32, sharding=bitmap_sh)
     out_sh = NamedSharding(mesh, P(("data", "model")))
 
-    for name, fn in (("scan(paper)", scan_query), ("matvec(ours)", matvec_query)):
+    for name, fn, arg in (("scan(paper)", scan_query, bm),
+                          ("matvec(ours)", matvec_query, bm),
+                          ("packed(ours)", packed_query, pm)):
         with mesh:
             comp = jax.jit(fn, in_shardings=(bitmap_sh, mask_sh),
-                           out_shardings=out_sh).lower(bm, mk).compile()
+                           out_shardings=out_sh).lower(arg, mk).compile()
         t = analyze_hlo(comp.as_text())
         mem_t = t["bytes"] / HBM_BW
         cmp_t = t["flops"] / PEAK_BF16
@@ -58,7 +73,9 @@ def main():
         dom = max((("compute", cmp_t), ("memory", mem_t), ("collective", coll_t)),
                   key=lambda kv: kv[1])
         # useful-byte floor: the K×M_local int8 bitmap must be read once
-        floor = (K * M / 256) / HBM_BW
+        # (the packed plane's floor is 8× lower — 1 bit per entity)
+        bits = 1 if arg is pm else 8
+        floor = (K * M * bits / 8 / 256) / HBM_BW
         print(f"{name:13s} compute={cmp_t:.3e}s memory={mem_t:.3e}s "
               f"collective={coll_t:.3e}s dominant={dom[0]} "
               f"| memory-term/byte-floor={mem_t / floor:.2f}")

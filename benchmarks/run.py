@@ -6,6 +6,10 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
   fig5_query   — query throughput per DIP variant + impl (paper Fig. 5, §VII-B;
                  includes the DIP-LISTD linked-chase 10× validation)
   kernels      — Pallas kernels vs oracles (interpret mode)
+  scan         — bit-packed vs byte mask plane: scan bandwidth/bytes-moved
+                 at n≥1M and fused predicate+label match vs two-op
+                 composition (JSON lines appended to ``BENCH_scan.json`` —
+                 override with ``BENCH_JSON_PATH``; see bench_scan.py)
   match        — pattern-engine rows (beyond-paper; JSON lines via
                  benchmarks.common.emit_json, see bench_match.py)
   shard        — sharded-store locale sweep 1→8 virtual devices (JSON lines;
@@ -59,6 +63,12 @@ def main() -> None:
     print("# kernels (Pallas interpret vs jnp oracle)")
     from benchmarks import bench_kernels
     bench_kernels.run()
+
+    print("# scan (bit-packed vs byte mask plane: bandwidth + fused match)")
+    from benchmarks import bench_scan
+    bench_scan.run(n=100_000 if small else 1_000_000,
+                   json_path=os.environ.get("BENCH_JSON_PATH",
+                                            "BENCH_scan.json"))
 
     print("# match (pattern engine: declarative vs hand-composed, fusion, skew)")
     from benchmarks import bench_match

@@ -242,4 +242,22 @@ with Service(config=ServiceConfig(slow_query_ms=0.0)) as svc:
     print(f"metrics: {int(parsed['pg_service_submitted_total'])} submitted, "
           f"{int(parsed.get('pg_service_result_hits_total', 0))} result-cache "
           f"hits, {len(parsed)} series exposed")
+
+# -- 12. bit-packed mask plane: 8× smaller bitmaps, same answers --------------
+# DIP-arr planes — and every mask they emit, through the kernels, the shard
+# collectives and the wire — are uint32 bitmaps: 1 bit/entity instead of the
+# paper's 1 byte (docs/ARCHITECTURE.md §14).  The byte layout stays available
+# for one release (REPRO_PG_BYTE_MASKS=1, or bitplane.byte_masks() in-process);
+# answers are bitwise-identical either way.
+from repro.core import bitplane
+
+with bitplane.byte_masks():
+    pg_byte = PropGraph(backend="arr").add_edges_from(src, dst)
+    pg_byte.add_node_labels(nodes, labels)
+    assert bool((pg_byte.query_labels(["label1", "label2", "label3"]) == vmask).all())
+plane = pg._vstore.finalize().bitmap        # packed: (K, ⌈n/32⌉) uint32
+plane_byte = pg_byte._vstore.finalize().bitmap  # byte fallback: (K, n) int8
+print(f"label plane: {plane_byte.nbytes:,} B (byte layout) → {plane.nbytes:,} B "
+      f"(packed, {plane_byte.nbytes / plane.nbytes:.1f}× smaller), "
+      f"answers bitwise-identical ✓")
 print("OK")

@@ -29,6 +29,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitplane
+
 __all__ = [
     "DIPArr",
     "build_dip_arr",
@@ -37,7 +39,9 @@ __all__ = [
     "query_any_scan",
     "query_any_matvec",
     "query_any",
+    "query_any_words",
     "query_any_batched",
+    "query_any_batched_words",
     "attrs_of_entity",
     "entities_of_attr",
 ]
@@ -46,20 +50,31 @@ __all__ = [
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["bitmap"],
-    meta_fields=["k", "n"],
+    meta_fields=["k", "n", "packed"],
 )
 @dataclasses.dataclass(frozen=True)
 class DIPArr:
-    """(k attributes × n entities) presence bitmap, stored int8 (byte array —
-    matches the paper's byte Boolean array and avoids XLA bool-packing hazards).
+    """(k attributes × n entities) presence bitmap.
+
+    Two storage layouts, selected at build time (``bitplane.packed_default``):
+      * byte  — ``(k, n)`` int8 in {0, 1}: the paper's byte Boolean array,
+        kept for one release behind ``REPRO_PG_BYTE_MASKS=1``.
+      * packed — ``(k, ceil(n/32))`` uint32, little-endian bit order
+        (entity ``e`` ↔ bit ``e & 31`` of word ``e >> 5``): 8× less HBM
+        traffic on the scan path; tail padding bits are zero by invariant.
+
+    ``packed`` is a pytree META field so jitted queries specialize per
+    layout — the two never mix inside one trace.
     """
 
-    bitmap: jax.Array  # (k, n) int8, values in {0, 1}
+    bitmap: jax.Array  # (k, n) int8 OR (k, ceil(n/32)) uint32
     k: int
     n: int
+    packed: bool = False
 
 
-def build_dip_arr(entity_ids, attr_ids, *, k: int, n: int) -> DIPArr:
+def build_dip_arr(entity_ids, attr_ids, *, k: int, n: int,
+                  packed: bool | None = None) -> DIPArr:
     """Bulk build: flag ``bitmap[attr, entity] = 1`` for every pair.
 
     O(nnz) — the paper's per-entity flag write, done as one vectorized
@@ -68,37 +83,78 @@ def build_dip_arr(entity_ids, attr_ids, *, k: int, n: int) -> DIPArr:
     so the bitmap layout (out-of-range pairs dropped) has one definition
     for both the single-device store and the sharded placement path.
     """
-    host = build_dip_arr_host(entity_ids, attr_ids, k=k, n=n)
+    host = build_dip_arr_host(entity_ids, attr_ids, k=k, n=n, packed=packed)
     return dataclasses.replace(host, bitmap=jnp.asarray(host.bitmap))
 
 
-def build_dip_arr_host(entity_ids, attr_ids, *, k: int, n: int) -> DIPArr:
+def build_dip_arr_host(entity_ids, attr_ids, *, k: int, n: int,
+                       packed: bool | None = None) -> DIPArr:
     """``build_dip_arr`` with HOST (numpy) storage — same bitmap, no device
     allocation.  The sharded path builds here, derives the per-attribute
     stats, then places only the padded shards on devices
-    (docs/ARCHITECTURE.md §7), so no device ever holds the full replica."""
+    (docs/ARCHITECTURE.md §7), so no device ever holds the full replica.
+
+    The packed build scatters single-bit ORs straight into the word plane —
+    no transient ``(k, n)`` byte array is ever materialized."""
     import numpy as np
 
+    if packed is None:
+        packed = bitplane.packed_default()
     entity_ids = np.asarray(entity_ids, np.int32).ravel()
     attr_ids = np.asarray(attr_ids, np.int32).ravel()
-    bitmap = np.zeros((k, n), np.int8)
     ok = (entity_ids >= 0) & (entity_ids < n) & (attr_ids >= 0) & (attr_ids < k)
+    if packed:
+        ent, att = entity_ids[ok], attr_ids[ok]
+        plane = np.zeros((k, bitplane.n_words(n)), np.uint32)
+        np.bitwise_or.at(plane, (att, ent >> 5), np.uint32(1) << (ent & 31))
+        return DIPArr(bitmap=plane, k=k, n=n, packed=True)
+    bitmap = np.zeros((k, n), np.int8)
     bitmap[attr_ids[ok], entity_ids[ok]] = 1  # mode="drop" equivalent
-    return DIPArr(bitmap=bitmap, k=k, n=n)
+    return DIPArr(bitmap=bitmap, k=k, n=n, packed=False)
 
 
 def insert(dip: DIPArr, entity_ids, attr_ids) -> DIPArr:
     """Functional bulk insert of additional (entity, attribute) pairs."""
-    bitmap = dip.bitmap.at[
-        jnp.asarray(attr_ids, jnp.int32), jnp.asarray(entity_ids, jnp.int32)
-    ].set(1, mode="drop")
+    ent = jnp.asarray(entity_ids, jnp.int32)
+    att = jnp.asarray(attr_ids, jnp.int32)
+    if dip.packed:
+        # XLA scatter has no bitwise-or combiner (max on words is NOT or),
+        # so round-trip through bits.  Insert is the cold pre-seal path —
+        # bulk loads go through build_dip_arr_host's direct word scatter.
+        bits = bitplane.unpack_mask(dip.bitmap, dip.n)
+        bits = bits.at[att, ent].set(True, mode="drop")
+        return dataclasses.replace(dip, bitmap=bitplane.pack_mask(bits))
+    bitmap = dip.bitmap.at[att, ent].set(1, mode="drop")
     return dataclasses.replace(dip, bitmap=bitmap)
+
+
+@jax.jit
+def query_any_words(dip: DIPArr, attr_mask: jax.Array) -> jax.Array:
+    """Packed query, packed result: (k,) bool → (W,) uint32 words.
+
+    OR-of-selected-rows is pure word arithmetic — select via a full-word
+    AND mask, then a bitwise-or tree over K.  8× fewer bytes stream from
+    HBM than the byte scan; no unpack until the propagation boundary.
+    """
+    assert dip.packed, "query_any_words requires a packed store"
+    sel = jnp.where(attr_mask[:, None], dip.bitmap, jnp.uint32(0))
+    return bitplane.or_reduce(sel, axis=0)
+
+
+@jax.jit
+def query_any_batched_words(dip: DIPArr, attr_masks: jax.Array) -> jax.Array:
+    """Q packed queries in one launch: (Q, K) bool → (Q, W) uint32."""
+    assert dip.packed, "query_any_batched_words requires a packed store"
+    sel = jnp.where(attr_masks[:, :, None], dip.bitmap[None], jnp.uint32(0))
+    return bitplane.or_reduce(sel, axis=1)
 
 
 @jax.jit
 def query_any_scan(dip: DIPArr, attr_mask: jax.Array) -> jax.Array:
     """Paper-faithful query: scan each selected attribute row, OR into the
     output mask.  ``attr_mask`` is the (k,) bool query (OR semantics, §VI)."""
+    if dip.packed:
+        return bitplane.unpack_mask(query_any_words(dip, attr_mask), dip.n)
     sel = dip.bitmap.astype(jnp.bool_) & attr_mask[:, None]
     return jnp.any(sel, axis=0)
 
@@ -109,7 +165,11 @@ def query_any_matvec(dip: DIPArr, attr_mask: jax.Array) -> jax.Array:
 
     counts[e] = Σ_a mask[a]·bitmap[a,e]  ⇒  mask_out = counts > 0.
     bf16 is safe: counts ≤ k ≤ a few hundred, exactly representable.
+    On a packed store there is no MXU trick for word-OR, so "matvec"
+    degrades to the word reduction (still the bandwidth winner).
     """
+    if dip.packed:
+        return bitplane.unpack_mask(query_any_words(dip, attr_mask), dip.n)
     q = attr_mask.astype(jnp.bfloat16)
     counts = q @ dip.bitmap.astype(jnp.bfloat16)
     return counts > 0
@@ -123,6 +183,9 @@ def query_any(dip: DIPArr, attr_mask: jax.Array, *, impl: str = "matvec") -> jax
     if impl == "kernel":  # Pallas bitmap_query kernel (interpret mode on CPU)
         from repro.kernels.bitmap_query import ops as _ops
 
+        if dip.packed:
+            return bitplane.unpack_mask(
+                _ops.bitmap_query_packed(dip.bitmap, attr_mask), dip.n)
         return _ops.bitmap_query(dip.bitmap, attr_mask)
     raise ValueError(f"unknown impl {impl!r}")
 
@@ -131,6 +194,9 @@ def query_any(dip: DIPArr, attr_mask: jax.Array, *, impl: str = "matvec") -> jax
 def query_any_batched_matvec(dip: DIPArr, attr_masks: jax.Array) -> jax.Array:
     """Q OR-queries as one MXU matmul: ``(Q, K) @ (K, N) > 0`` — the bitmap
     streams from HBM once for all Q masks (the pattern planner's fusion)."""
+    if dip.packed:
+        return bitplane.unpack_mask(
+            query_any_batched_words(dip, attr_masks), dip.n)
     q = attr_masks.astype(jnp.bfloat16)
     counts = q @ dip.bitmap.astype(jnp.bfloat16)
     return counts > 0
@@ -145,6 +211,9 @@ def query_any_batched(dip: DIPArr, attr_masks: jax.Array, *, impl: str = "matvec
     if impl == "kernel":
         from repro.kernels.bitmap_query import ops as _ops
 
+        if dip.packed:
+            return bitplane.unpack_mask(
+                _ops.bitmap_query_batched_packed(dip.bitmap, attr_masks), dip.n)
         return _ops.bitmap_query_batched(dip.bitmap, attr_masks)
     raise ValueError(f"unknown impl {impl!r}")
 
@@ -153,10 +222,15 @@ def query_any_batched(dip: DIPArr, attr_masks: jax.Array, *, impl: str = "matvec
 def attrs_of_entity(dip: DIPArr, e: jax.Array) -> jax.Array:
     """Column read: (k,) bool of attributes held by entity ``e`` (Fig. 4:
     'to extract the value stored for a given vertex or edge')."""
+    if dip.packed:
+        word = dip.bitmap[:, e >> 5]
+        return ((word >> (e & 31).astype(jnp.uint32)) & 1).astype(jnp.bool_)
     return dip.bitmap[:, e].astype(jnp.bool_)
 
 
 @jax.jit
 def entities_of_attr(dip: DIPArr, a: jax.Array) -> jax.Array:
     """Row read: (n,) bool of entities carrying attribute ``a``."""
+    if dip.packed:
+        return bitplane.unpack_mask(dip.bitmap[a, :], dip.n)
     return dip.bitmap[a, :].astype(jnp.bool_)

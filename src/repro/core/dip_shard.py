@@ -37,6 +37,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import bitplane
 from repro.core.di import DIGraph
 from repro.core.dip_arr import DIPArr
 from repro.core.dip_list import DIPList
@@ -51,6 +52,8 @@ __all__ = [
     "place_column",
     "query_any_sharded",
     "query_any_batched_sharded",
+    "query_any_words_sharded",
+    "query_any_batched_words_sharded",
 ]
 
 
@@ -81,18 +84,24 @@ def _pad_to(x, size: int, fill=0):
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["bitmap"],
-    meta_fields=["k", "n", "n_pad", "mesh"],
+    meta_fields=["k", "n", "n_pad", "mesh", "packed"],
 )
 @dataclasses.dataclass(frozen=True)
 class ShardedDIPArr:
     """DIP-ARR bitmap padded to ``(k, n_pad)`` (n_pad = P⌈n/P⌉) and placed
-    ``P(None, entity_axes)`` — K resident everywhere, entities split."""
+    ``P(None, entity_axes)`` — K resident everywhere, entities split.
 
-    bitmap: jax.Array  # (k, n_pad) int8, entity-sharded
+    Packed form shards the WORD axis instead: ``(k, W_pad)`` uint32 with
+    ``W_pad = P⌈W/P⌉`` words (``n_pad = 32·W_pad``), so entity ownership
+    stays word-aligned — each device owns whole words and a sharded word
+    mask is the sharded entity mask, 1 bit/entity."""
+
+    bitmap: jax.Array  # (k, n_pad) int8 OR (k, n_pad/32) uint32, sharded
     k: int
-    n: int  # logical entity count (columns ≥ n are zero padding)
+    n: int  # logical entity count (columns/bits ≥ n are zero padding)
     n_pad: int
     mesh: jax.sharding.Mesh
+    packed: bool = False
 
 
 @partial(
@@ -199,11 +208,24 @@ def place_store(backend: str, store, mesh) -> ShardedStore:
 def place_dip_arr(store: DIPArr, mesh) -> ShardedDIPArr:
     from repro.launch.sharding import pg_arr_specs
 
-    n_pad = _pad_multiple(mesh, store.n)
     xp = np if isinstance(store.bitmap, np.ndarray) else jnp
-    bitmap = xp.pad(store.bitmap, ((0, 0), (0, n_pad - store.n)))
+    if store.packed:
+        # shard the WORD axis: pad to P whole words, n_pad = 32·W_pad bits.
+        # Pad words are zero ⇒ pad bits are zero — same invariant as byte
+        # pad columns, no epilogue masking anywhere downstream.
+        from repro.launch.sharding import pg_word_pad
+
+        w = store.bitmap.shape[1]
+        w_pad = pg_word_pad(mesh, store.n)
+        assert w_pad >= w
+        bitmap = xp.pad(store.bitmap, ((0, 0), (0, w_pad - w)))
+        n_pad = w_pad * bitplane.WORD
+    else:
+        n_pad = _pad_multiple(mesh, store.n)
+        bitmap = xp.pad(store.bitmap, ((0, 0), (0, n_pad - store.n)))
     bitmap = jax.device_put(bitmap, NamedSharding(mesh, pg_arr_specs(mesh)["bitmap"]))
-    return ShardedDIPArr(bitmap=bitmap, k=store.k, n=store.n, n_pad=n_pad, mesh=mesh)
+    return ShardedDIPArr(bitmap=bitmap, k=store.k, n=store.n, n_pad=n_pad,
+                         mesh=mesh, packed=store.packed)
 
 
 def place_dip_list(store: DIPList, mesh) -> ShardedDIPList:
@@ -238,11 +260,13 @@ def place_dip_listd(store: DIPListD, mesh) -> ShardedDIPListD:
 
 
 # --------------------------------------------------------------------- queries
-def _local_arr(bitmap_l: jax.Array) -> DIPArr:
+def _local_arr(bitmap_l: jax.Array, packed: bool = False) -> DIPArr:
     """The device-local (K, N/P) bitmap slice as a DIPArr, so the per-device
     query delegates to dip_arr's impls — the OR-of-rows math lives there
-    only."""
-    return DIPArr(bitmap=bitmap_l, k=bitmap_l.shape[0], n=bitmap_l.shape[1])
+    only.  Packed slices are whole words ⇒ a valid packed DIPArr over
+    32·W_local entities."""
+    n = bitmap_l.shape[1] * (bitplane.WORD if packed else 1)
+    return DIPArr(bitmap=bitmap_l, k=bitmap_l.shape[0], n=n, packed=packed)
 
 
 def _arr_local(bitmap_l: jax.Array, mask: jax.Array, impl: str):
@@ -252,8 +276,55 @@ def _arr_local(bitmap_l: jax.Array, mask: jax.Array, impl: str):
 
 
 @partial(jax.jit, static_argnames=("impl", "tile_n"))
+def _arr_query_words_sharded(ss: ShardedDIPArr, mask: jax.Array, *, impl: str,
+                             tile_n: int = 2048) -> jax.Array:
+    """Packed sharded query → (ceil(n/32),) uint32, word-sharded output,
+    zero collectives (each device ORs its own word slice)."""
+    ax = _axes(ss.mesh)
+    if impl == "kernel":
+        from repro.kernels.bitmap_query import ops as _ops
+
+        out = _ops.bitmap_query_packed_sharded(ss.bitmap, mask, mesh=ss.mesh)
+    else:
+        def local(bitmap_l, m):
+            from repro.core import dip_arr
+
+            return dip_arr.query_any_words(_local_arr(bitmap_l, packed=True), m)
+
+        f = shard_map(local, mesh=ss.mesh, in_specs=(P(None, ax), P()),
+                      out_specs=P(ax))
+        out = f(ss.bitmap, mask)
+    return out[: bitplane.n_words(ss.n)]
+
+
+@partial(jax.jit, static_argnames=("impl", "tile_n"))
+def _arr_query_batched_words_sharded(ss: ShardedDIPArr, masks: jax.Array, *,
+                                     impl: str, tile_n: int = 2048) -> jax.Array:
+    ax = _axes(ss.mesh)
+    if impl == "kernel":
+        from repro.kernels.bitmap_query import ops as _ops
+
+        out = _ops.bitmap_query_batched_packed_sharded(ss.bitmap, masks,
+                                                       mesh=ss.mesh)
+    else:
+        def local(bitmap_l, ms):
+            from repro.core import dip_arr
+
+            return dip_arr.query_any_batched_words(
+                _local_arr(bitmap_l, packed=True), ms)
+
+        f = shard_map(local, mesh=ss.mesh, in_specs=(P(None, ax), P()),
+                      out_specs=P(None, ax))
+        out = f(ss.bitmap, masks)
+    return out[:, : bitplane.n_words(ss.n)]
+
+
+@partial(jax.jit, static_argnames=("impl", "tile_n"))
 def _arr_query_sharded(ss: ShardedDIPArr, mask: jax.Array, *, impl: str,
                        tile_n: int = 2048) -> jax.Array:
+    if ss.packed:
+        words = _arr_query_words_sharded(ss, mask, impl=impl, tile_n=tile_n)
+        return bitplane.unpack_mask(words, ss.n)
     if impl == "kernel":
         from repro.kernels.bitmap_query import ops as _ops
 
@@ -270,6 +341,10 @@ def _arr_query_sharded(ss: ShardedDIPArr, mask: jax.Array, *, impl: str,
 @partial(jax.jit, static_argnames=("impl", "tile_n"))
 def _arr_query_batched_sharded(ss: ShardedDIPArr, masks: jax.Array, *, impl: str,
                                tile_n: int = 2048) -> jax.Array:
+    if ss.packed:
+        words = _arr_query_batched_words_sharded(ss, masks, impl=impl,
+                                                 tile_n=tile_n)
+        return bitplane.unpack_mask(words, ss.n)
     if impl == "kernel":
         from repro.kernels.bitmap_query import ops as _ops
 
@@ -288,9 +363,24 @@ def _arr_query_batched_sharded(ss: ShardedDIPArr, masks: jax.Array, *, impl: str
     return f(ss.bitmap, masks)[:, : ss.n]
 
 
-@jax.jit
-def _list_query_sharded(ss: ShardedDIPList, mask: jax.Array) -> jax.Array:
+def _or_combine(part: jax.Array, ax, p: int, n: int, packed: bool) -> jax.Array:
+    """OR the per-shard partial masks: the single mask-combination
+    collective.  Byte path: int8 pmax (1 byte/entity).  Packed path: pack
+    the local partial to words FIRST, OR-all-reduce the words (1
+    bit/entity on the interconnect — the §7 claim made literal), unpack
+    after."""
+    if packed:
+        words = bitplane.pack_mask(part > 0)
+        words = bitplane.or_allreduce(words, ax, p)
+        return bitplane.unpack_mask(words, n)
+    return jax.lax.pmax(part, ax) > 0
+
+
+@partial(jax.jit, static_argnames=("packed",))
+def _list_query_sharded(ss: ShardedDIPList, mask: jax.Array, *,
+                        packed: bool = False) -> jax.Array:
     ax = _axes(ss.mesh)
+    p = _shards(ss.mesh)
 
     def local(val_l, ent_l, m):
         # hits among MY slots only; pad slots scatter to entity n → dropped
@@ -298,18 +388,21 @@ def _list_query_sharded(ss: ShardedDIPList, mask: jax.Array) -> jax.Array:
         part = jnp.zeros((ss.n,), jnp.int8).at[ent_l].max(
             hit.astype(jnp.int8), mode="drop"
         )
-        # the single mask-combination collective: OR (max of 0/1 bytes, so
-        # no overflow at any P) of partial masks across shards
-        return jax.lax.pmax(part, ax) > 0
+        return _or_combine(part, ax, p, ss.n, packed)
 
+    # check_rep=False: the packed OR butterfly replicates via ppermute,
+    # which the static replication checker cannot prove
     f = shard_map(local, mesh=ss.mesh,
-                  in_specs=(P(ax), P(ax), P()), out_specs=P())
+                  in_specs=(P(ax), P(ax), P()), out_specs=P(),
+                  check_rep=False)
     return f(ss.val, ss.slot_entity, mask)
 
 
-@jax.jit
-def _listd_query_sharded(ss: ShardedDIPListD, mask: jax.Array) -> jax.Array:
+@partial(jax.jit, static_argnames=("packed",))
+def _listd_query_sharded(ss: ShardedDIPListD, mask: jax.Array, *,
+                         packed: bool = False) -> jax.Array:
     ax = _axes(ss.mesh)
+    p = _shards(ss.mesh)
 
     def local(ent_l, idx_l, a_off, m):
         # slot → owning attribute via the replicated inverted-CSR offsets
@@ -318,10 +411,11 @@ def _listd_query_sharded(ss: ShardedDIPListD, mask: jax.Array) -> jax.Array:
         part = jnp.zeros((ss.n,), jnp.int8).at[ent_l].max(
             hit.astype(jnp.int8), mode="drop"
         )
-        return jax.lax.pmax(part, ax) > 0
+        return _or_combine(part, ax, p, ss.n, packed)
 
     f = shard_map(local, mesh=ss.mesh,
-                  in_specs=(P(ax), P(ax), P(), P()), out_specs=P())
+                  in_specs=(P(ax), P(ax), P(), P()), out_specs=P(),
+                  check_rep=False)
     return f(ss.a_ent, ss.slot_idx, ss.a_off, mask)
 
 
@@ -337,14 +431,15 @@ def query_any_sharded(backend: str, ss: ShardedStore, attr_mask: jax.Array,
         if (impl or "matvec") not in _ARR_IMPLS:
             raise ValueError(f"unknown impl {impl!r}")
         return _arr_query_sharded(ss, attr_mask, impl=impl or "matvec")
+    packed = bitplane.packed_default()
     if backend == "list":
-        return _list_query_sharded(ss, attr_mask)
+        return _list_query_sharded(ss, attr_mask, packed=packed)
     if backend == "listd":
         # budget/linked are single-device work layouts → inverted slot scan;
         # anything else is a typo and fails like the single-device dispatcher
         if impl not in (None, "inverted", "budget", "linked"):
             raise ValueError(f"unknown impl {impl!r}")
-        return _listd_query_sharded(ss, attr_mask)
+        return _listd_query_sharded(ss, attr_mask, packed=packed)
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -355,3 +450,19 @@ def query_any_batched_sharded(ss: ShardedDIPArr, attr_masks: jax.Array,
     if (impl or "matvec") not in _ARR_IMPLS:
         raise ValueError(f"unknown impl {impl!r}")
     return _arr_query_batched_sharded(ss, attr_masks, impl=impl or "matvec")
+
+
+def query_any_words_sharded(ss: ShardedDIPArr, attr_mask: jax.Array,
+                            *, impl: Optional[str] = None) -> jax.Array:
+    """(ceil(n/32),) uint32 packed query over a word-sharded plane."""
+    if (impl or "matvec") not in _ARR_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}")
+    return _arr_query_words_sharded(ss, attr_mask, impl=impl or "matvec")
+
+
+def query_any_batched_words_sharded(ss: ShardedDIPArr, attr_masks: jax.Array,
+                                    *, impl: Optional[str] = None) -> jax.Array:
+    """(Q, ceil(n/32)) uint32 packed batched query (fused entry)."""
+    if (impl or "matvec") not in _ARR_IMPLS:
+        raise ValueError(f"unknown impl {impl!r}")
+    return _arr_query_batched_words_sharded(ss, attr_masks, impl=impl or "matvec")

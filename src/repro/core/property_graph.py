@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dip_arr, dip_list, dip_listd, dip_shard
+from repro.core import bitplane, dip_arr, dip_list, dip_listd, dip_shard
 from repro.core.attr_map import AttributeMap
 from repro.core.di import DIGraph, build_di, edge_lookup
 from repro.core.queries import extract_subgraph, filtered_bfs, induce_edge_mask
@@ -136,6 +136,19 @@ class _AttrStore:
         """A device/sharded base exists — inserts must not invalidate it."""
         return self._store is not None or self._sharded is not None
 
+    @property
+    def packed(self) -> bool:
+        """True when this store's base holds (or will hold) the bit-packed
+        uint32 word plane (arr only).  Captured at build time — a built
+        store answers from its own layout even if the process-wide flag
+        flips afterwards."""
+        if self.backend != "arr":
+            return False
+        for built in (self._store, self._sharded, self._host):
+            if built is not None:
+                return bool(built.packed)
+        return bitplane.packed_default()
+
     def insert(self, entity_ids: np.ndarray, values: Sequence[str]) -> None:
         attr_ids = self.amap.encode(values)
         attr_ids = np.broadcast_to(np.atleast_1d(attr_ids), np.shape(entity_ids)).ravel()
@@ -181,7 +194,12 @@ class _AttrStore:
         att = np.concatenate(self._pairs_a) if self._pairs_a else np.zeros(0, np.int32)
         if self.backend == "arr":
             host = dip_arr.build_dip_arr_host(ent, att, k=self.k, n=self.n)
-            self._counts = host.bitmap.sum(axis=1, dtype=np.int64)
+            if host.packed:
+                # popcount of the word plane rows ≡ the byte row sums
+                self._counts = np.bitwise_count(host.bitmap).sum(
+                    axis=1, dtype=np.int64)
+            else:
+                self._counts = host.bitmap.sum(axis=1, dtype=np.int64)
         elif self.backend == "list":
             host = dip_list.build_dip_list_host(ent, att, k=self.k, n=self.n)
             self._counts = np.bincount(np.asarray(host.val), minlength=self.k)
@@ -385,6 +403,80 @@ class _AttrStore:
                     rows = rows | jnp.asarray(drows)
             return rows
         return jnp.stack([self.query_any(v, impl=impl) for v in values_list])
+
+    def _pad_words_to_out(self, words: jax.Array) -> jax.Array:
+        """Word-space analog of ``_pad_to_out``: base tail bits past ``n``
+        are zero by the build invariant, so extending to the effective
+        universe is a zero-word concat — no bit surgery."""
+        w_out = bitplane.n_words(self.out_n)
+        if w_out > int(words.shape[-1]):
+            pad_shape = words.shape[:-1] + (w_out - int(words.shape[-1]),)
+            words = jnp.concatenate(
+                [words, jnp.zeros(pad_shape, jnp.uint32)], axis=-1)
+        return words[..., :w_out]
+
+    def query_any_words(self, values: Sequence[str], *,
+                        impl: Optional[str] = None) -> jax.Array:
+        """Packed query: (ceil(out_n/32),) uint32 word mask — the executor's
+        fused path keeps this packed through mask combination and unpacks
+        once at the propagation boundary.  arr + packed base only."""
+        assert self.packed, "query_any_words requires a packed arr store"
+        ids = self.known_ids(values) if len(values) else np.zeros(0, np.int32)
+        w_out = bitplane.n_words(self.out_n)
+        if ids.size == 0:
+            return jnp.zeros((w_out,), jnp.uint32)
+        if self.mesh is not None:
+            sharded = self.finalize_sharded()
+            mask = jnp.asarray(self.amap.mask(values, self._k_base))
+            out = dip_shard.query_any_words_sharded(sharded, mask, impl=impl)
+        else:
+            store = self.finalize()
+            mask = jnp.asarray(self.amap.mask(values, self._k_base))
+            if impl == "kernel":
+                from repro.kernels.bitmap_query import ops as _ops
+
+                out = _ops.bitmap_query_packed(store.bitmap, mask)
+            else:
+                out = dip_arr.query_any_words(store, mask)
+        out = self._pad_words_to_out(out)
+        if self._delta.size:
+            dwords = self._delta.mask_words(ids, self.out_n)
+            if dwords.any():
+                out = out | jnp.asarray(dwords)
+        return out
+
+    def query_any_batched_words(
+        self, values_list: Sequence[Sequence[str]], *,
+        impl: Optional[str] = None
+    ) -> jax.Array:
+        """(Q, ceil(out_n/32)) uint32 — Q packed OR-queries, one launch."""
+        assert self.packed, "query_any_batched_words requires a packed arr store"
+        if self.mesh is not None:
+            sharded = self.finalize_sharded()
+            masks = jnp.asarray(
+                np.stack([self.amap.mask(v, self._k_base) for v in values_list])
+            )
+            rows = dip_shard.query_any_batched_words_sharded(
+                sharded, masks, impl=impl)
+        else:
+            store = self.finalize()
+            masks = jnp.asarray(
+                np.stack([self.amap.mask(v, self._k_base) for v in values_list])
+            )
+            if impl == "kernel":
+                from repro.kernels.bitmap_query import ops as _ops
+
+                rows = _ops.bitmap_query_batched_packed(store.bitmap, masks)
+            else:
+                rows = dip_arr.query_any_batched_words(store, masks)
+        rows = self._pad_words_to_out(rows)
+        if self._delta.size:
+            drows = np.stack(
+                [self._delta.mask_words(self.known_ids(v), self.out_n)
+                 for v in values_list])
+            if drows.any():
+                rows = rows | jnp.asarray(drows)
+        return rows
 
     def clone(self) -> "_AttrStore":
         """Structurally-shared copy for snapshots/views: the sealed base,
@@ -871,6 +963,32 @@ class PropGraph:
             )
         col, valid = cols[name]
         return valid & self._PRED_OPS[op](col, value)
+
+    def _predicate_parts(
+        self, kind: str, name: str, op: str, value
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Host-side half of a predicate: validate (same KeyError /
+        ValueError / TypeError contracts as ``_predicate_mask``) and return
+        the raw ``(col, valid)`` column pair — the executor's fused packed
+        combine evaluates ``valid & op(col, value)`` INSIDE its single
+        jitted launch instead of through a separate mask op.  Edge columns
+        shorter than the effective universe are handled by the combine
+        (missing rows are invalid ⇒ False), not padded here."""
+        cols = self.vertex_props if kind == "node" else self.edge_props
+        ckind = "vertex" if kind == "node" else "edge"
+        if name not in cols:
+            raise KeyError(
+                f"unknown {ckind} property {name!r}; known: {sorted(cols)}"
+            )
+        if op not in self._PRED_OPS:
+            raise ValueError(f"unknown predicate op {op!r}; known: {sorted(self._PRED_OPS)}")
+        if isinstance(value, str):
+            raise TypeError(
+                f"{ckind} predicate {name!r} {op} {value!r}: string comparisons "
+                "are not supported on typed property columns — model "
+                "string-valued attributes as labels/relationships instead"
+            )
+        return cols[name]
 
     def vertex_predicate_mask(self, name: str, op: str, value) -> jax.Array:
         """(n,) bool — vertices whose typed property ``name`` compares true

@@ -1,7 +1,7 @@
-"""Pallas TPU kernel: DIP-ARR attribute query as an MXU matvec.
+"""Pallas TPU kernels: DIP-ARR attribute query, byte (MXU) and packed (VPU).
 
 The paper's DIP-ARR query scans the selected attribute rows of the (K, N)
-byte bitmap and ORs them (§VI-C, O(N/P)).  On TPU the same reduction is
+byte bitmap and ORs them (§VI-C, O(N/P)).  On TPU the byte form is
 reformulated for the systolic array:
 
     counts(1, Nt) = mask(1, K) @ bitmap(K, Nt);   out = counts > 0
@@ -11,6 +11,16 @@ holds a (K, Nt) bitmap block and the full (1, K) query mask in VMEM.
 VMEM budget: K ≤ 512 attributes × Nt = 2048 entities × 4 B (f32 on the MXU
 path) ≈ 4 MiB — comfortably inside the ~16 MiB/core VMEM envelope; Nt is the
 lane-aligned (×128) tunable.
+
+The PACKED form works on the (K, W = ceil(N/32)) uint32 word plane instead.
+There is no MXU trick for bitwise OR, but none is needed: the scan is
+bandwidth-bound, and the packed plane moves 8× fewer bytes than int8 (32×
+fewer than the f32 the MXU path casts to).  The kernel is a VPU loop over K
+accumulating ``acc |= select[a] & plane[a]`` on (Q, Wt) uint32 lanes —
+query masks arrive pre-broadcast as full-word 0x00000000/0xFFFFFFFF selects
+so the inner loop is two vector ops per row.  uint32 is a 32-bit lane type
+⇒ (8, 128) minimum tile; Wt = 512 words (= 16 384 entities) keeps the
+(K, Wt) block at K=512 to 1 MiB VMEM.
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_TILE_N = 2048
+DEFAULT_TILE_W = 512  # packed words per grid step (×128 lane-aligned)
 
 
 def _bitmap_query_kernel(mask_ref, bitmap_ref, out_ref):
@@ -90,3 +101,60 @@ def bitmap_query_batched_pallas(bitmap: jax.Array, attr_masks: jax.Array, *,
         interpret=interpret,
     )(maskf, bitmap)
     return out[:, :n]
+
+
+def _bitmap_query_packed_kernel(select_ref, plane_ref, out_ref):
+    select = select_ref[...]      # (Q, K) uint32 — 0 or 0xFFFFFFFF per query row
+    k = select.shape[1]
+
+    def body(a, acc):
+        return acc | (select[:, a][:, None] & plane_ref[a, :][None, :])
+
+    acc0 = jnp.zeros_like(out_ref)
+    out_ref[...] = jax.lax.fori_loop(0, k, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_w", "interpret"))
+def bitmap_query_batched_packed_pallas(
+    plane: jax.Array, attr_masks: jax.Array, *,
+    tile_w: int = DEFAULT_TILE_W, interpret: bool = True
+) -> jax.Array:
+    """Packed batched query: ``plane (K, W) uint32 × attr_masks (Q, K) bool
+    → (Q, W) uint32`` word masks, one launch for all Q queries.
+
+    The fori_loop over K keeps VMEM at (K, Wt) + (Q, Wt) — no (Q, K, Wt)
+    intermediate — while each (K, Wt) plane tile streams from HBM exactly
+    once for all Q query rows.
+    """
+    k, w = plane.shape
+    q = attr_masks.shape[0]
+    tile_w = min(tile_w, w)
+    pad = (-w) % tile_w
+    if pad:
+        plane = jnp.pad(plane, ((0, 0), (0, pad)))
+    w_pad = w + pad
+    select = jnp.where(attr_masks, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+
+    out = pl.pallas_call(
+        _bitmap_query_packed_kernel,
+        grid=(w_pad // tile_w,),
+        in_specs=[
+            pl.BlockSpec((q, k), lambda i: (0, 0)),        # selects: replicated
+            pl.BlockSpec((k, tile_w), lambda i: (0, i)),   # plane: word tiles
+        ],
+        out_specs=pl.BlockSpec((q, tile_w), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, w_pad), jnp.uint32),
+        interpret=interpret,
+    )(select, plane)
+    return out[:, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_w", "interpret"))
+def bitmap_query_packed_pallas(plane: jax.Array, attr_mask: jax.Array, *,
+                               tile_w: int = DEFAULT_TILE_W,
+                               interpret: bool = True) -> jax.Array:
+    """Packed single query: ``plane (K, W) uint32 × attr_mask (K,) bool →
+    (W,) uint32`` word mask."""
+    out = bitmap_query_batched_packed_pallas(
+        plane, attr_mask[None, :], tile_w=tile_w, interpret=interpret)
+    return out[0]

@@ -18,7 +18,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.bitmap_query.kernel import (
+    bitmap_query_batched_packed_pallas,
     bitmap_query_batched_pallas,
+    bitmap_query_packed_pallas,
     bitmap_query_pallas,
 )
 
@@ -66,6 +68,22 @@ def bitmap_query_batched(
     )
 
 
+def bitmap_query_packed(plane: jax.Array, attr_mask: jax.Array, *,
+                        tile_w: int = 512) -> jax.Array:
+    """(K, W) uint32 word plane × (K,) bool query → (W,) uint32 word mask —
+    the packed scan path: bitwise OR of selected rows, 1 bit/entity moved."""
+    return bitmap_query_packed_pallas(
+        plane, attr_mask, tile_w=tile_w, interpret=not _on_tpu())
+
+
+def bitmap_query_batched_packed(plane: jax.Array, attr_masks: jax.Array, *,
+                                tile_w: int = 512) -> jax.Array:
+    """(K, W) uint32 word plane × (Q, K) bool queries → (Q, W) uint32 word
+    masks, one launch (planner fusion entry, packed form)."""
+    return bitmap_query_batched_packed_pallas(
+        plane, attr_masks, tile_w=tile_w, interpret=not _on_tpu())
+
+
 def _entity_axes(mesh):
     from repro.launch.sharding import pg_entity_axes
 
@@ -107,3 +125,38 @@ def bitmap_query_batched_sharded(
         check_rep=False,  # no replication rule for pallas_call
     )
     return f(bitmap, attr_masks)
+
+
+@partial(jax.jit, static_argnames=("mesh", "tile_w"))
+def bitmap_query_packed_sharded(
+    plane: jax.Array, attr_mask: jax.Array, *, mesh, tile_w: int = 512
+) -> jax.Array:
+    """Sharded packed query: the (K, W) word plane is sharded on its WORD
+    axis (W divisible by the shard count, so entity ownership stays word-
+    aligned) → (W,) uint32, word-sharded, zero collectives."""
+    ax = _entity_axes(mesh)
+    f = shard_map(
+        lambda b, m: bitmap_query_packed(b, m, tile_w=tile_w),
+        mesh=mesh,
+        in_specs=(P(None, ax), P()),
+        out_specs=P(ax),
+        check_rep=False,  # no replication rule for pallas_call
+    )
+    return f(plane, attr_mask)
+
+
+@partial(jax.jit, static_argnames=("mesh", "tile_w"))
+def bitmap_query_batched_packed_sharded(
+    plane: jax.Array, attr_masks: jax.Array, *, mesh, tile_w: int = 512
+) -> jax.Array:
+    """Sharded packed multi-mask query: (Q, K) masks replicated, plane
+    word-sharded → (Q, W) uint32 word-sharded on W."""
+    ax = _entity_axes(mesh)
+    f = shard_map(
+        lambda b, m: bitmap_query_batched_packed(b, m, tile_w=tile_w),
+        mesh=mesh,
+        in_specs=(P(None, ax), P()),
+        out_specs=P(None, ax),
+        check_rep=False,  # no replication rule for pallas_call
+    )
+    return f(plane, attr_masks)

@@ -15,3 +15,21 @@ def bitmap_query_batched_ref(bitmap: jax.Array, attr_masks: jax.Array) -> jax.Ar
     """bitmap: (K, N) int8; attr_masks: (Q, K) bool → (Q, N) bool."""
     sel = bitmap.astype(jnp.bool_)[None] & attr_masks[:, :, None]
     return jnp.any(sel, axis=1)
+
+
+@jax.jit
+def bitmap_query_packed_ref(plane: jax.Array, attr_mask: jax.Array) -> jax.Array:
+    """plane: (K, W) uint32 word plane; attr_mask: (K,) bool → (W,) uint32."""
+    from repro.core import bitplane
+
+    sel = jnp.where(attr_mask[:, None], plane, jnp.uint32(0))
+    return bitplane.or_reduce(sel, axis=0)
+
+
+@jax.jit
+def bitmap_query_batched_packed_ref(plane: jax.Array, attr_masks: jax.Array) -> jax.Array:
+    """plane: (K, W) uint32; attr_masks: (Q, K) bool → (Q, W) uint32."""
+    from repro.core import bitplane
+
+    sel = jnp.where(attr_masks[:, :, None], plane[None], jnp.uint32(0))
+    return bitplane.or_reduce(sel, axis=1)

@@ -352,6 +352,57 @@ def _assert_wire_result_matches(got, ref, context) -> None:
         assert (np.asarray(gb[k]) == np.asarray(rb[k])).all(), (context, k)
 
 
+def _packed_parity_block(m: int, seed: int) -> None:
+    """Packed ≡ byte mask-plane gate (docs/ARCHITECTURE.md §14): the same
+    tenant graph built with the bit-packed plane and with the
+    ``REPRO_PG_BYTE_MASKS`` byte fallback answers match / khop /
+    components / overlay views bitwise-identically — per backend, and on
+    the mesh when >1 device is visible (word-axis shards + the packed OR
+    all-reduce frontier)."""
+    import jax
+
+    from repro.core import bitplane
+
+    pool = pattern_pool()
+
+    def surfaces(pg):
+        out = []
+        for pattern in pool[:3]:
+            res = pg.match(pattern)
+            out += [res.vertex_mask, res.edge_mask]
+        nodes = np.asarray(pg.graph.node_map)
+        out.append(pg.khop(nodes[:4], 2, pattern="(a)-[:follows]->(b)"))
+        out.append(pg.components("(a)-[:follows|likes]->(b)"))
+        # overlay views: snapshot pins pre-write answers; live sees deltas
+        snap = pg.snapshot()
+        live = pg.fork()
+        live.insert_edges(nodes[:8], nodes[-8:])
+        live.add_node_labels(nodes[:8], ["l1"] * 8)
+        live.delete_vertices(nodes[9:11])
+        out.append(snap.match(pool[0]).vertex_mask)
+        out.append(live.match(pool[0]).vertex_mask)
+        out.append(live.match(pool[0]).edge_mask)
+        return [np.asarray(x) for x in out]
+
+    meshes = [None]
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_entity_mesh
+
+        meshes.append(make_entity_mesh())
+    for mesh in meshes:
+        for backend in ("arr", "list", "listd") if mesh is None else ("arr",):
+            got = {}
+            for packed in (True, False):
+                with bitplane.byte_masks(not packed):
+                    got[packed] = surfaces(
+                        build_tenant_graph(backend, m, mesh=mesh, seed=seed))
+            for i, (a, b) in enumerate(zip(got[True], got[False])):
+                assert np.array_equal(a, b), (backend, mesh is not None, i)
+        where = "mesh" if mesh is not None else "single-device"
+        print(f"pgserve smoke: packed ≡ byte mask plane ({where}) OK",
+              flush=True)
+
+
 def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> None:
     """CI gate for the network path: one server SUBPROCESS serving all
     three backends; a client in THIS process verifies every pool pattern
@@ -547,6 +598,7 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
     finally:
         if proc.poll() is None:
             proc.kill()
+    _packed_parity_block(m, seed)
     print("PGSERVE NET SMOKE OK")
 
 
@@ -735,6 +787,7 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
         print(f"pgserve smoke: mesh P={len(mesh.devices)} ≡ single-device OK")
     else:
         print("pgserve smoke: mesh check skipped (1 device)")
+    _packed_parity_block(m, seed)
     print("PGSERVE SMOKE OK")
 
 

@@ -29,6 +29,7 @@ __all__ = [
     "dlrm_batch_specs", "named", "tree_named",
     "pg_entity_axes", "pg_entity_shards", "pg_di_specs", "pg_arr_specs",
     "pg_list_specs", "pg_listd_specs", "pg_prop_spec", "pg_specs",
+    "pg_word_pad",
 ]
 
 
@@ -170,8 +171,24 @@ def pg_arr_specs(mesh) -> Dict[str, P]:
     """DIP-ARR: shard the (K, N) bitmap on the ENTITY dim only — the K
     attribute dim (≤ a few hundred) stays resident on every device so any
     attribute-subset query touches exclusively locally-owned entities
-    (docs/ARCHITECTURE.md §2/§7)."""
+    (docs/ARCHITECTURE.md §2/§7).  The bit-packed plane uses the SAME spec
+    on its (K, W = ⌈N/32⌉) word axis: entity ownership stays word-aligned
+    (every device owns whole uint32 words → 32·W/P whole entities), so a
+    word-sharded mask IS an entity-sharded mask (docs/ARCHITECTURE.md §14;
+    padding math in ``pg_word_pad``)."""
     return {"bitmap": P(None, pg_entity_axes(mesh))}
+
+
+def pg_word_pad(mesh, n: int) -> int:
+    """Padded WORD count for a bit-packed plane over ``n`` entities:
+    smallest positive multiple of the shard count ≥ ⌈n/32⌉.  Each shard
+    then owns ``32 · pg_word_pad / P`` entities; pad words (and the tail
+    bits of the last real word) are zero by the bitplane invariant, so no
+    query path masks them."""
+    from repro.core.bitplane import n_words
+
+    p = pg_entity_shards(mesh)
+    return max(-(-n_words(n) // p), 1) * p
 
 
 def pg_list_specs(mesh) -> Dict[str, P]:

@@ -90,6 +90,23 @@ class AttrDelta:
                 out[ents[sel]] = True
         return out
 
+    def mask_words(self, attr_ids: np.ndarray, out_n: int) -> np.ndarray:
+        """Packed form of :meth:`mask`: (ceil(out_n/32),) uint32 word mask,
+        little-endian bit order — scatters single-bit ORs directly into
+        words so the overlay algebra ``base | delta ∧ ~tombstones`` stays
+        in word space.  Tail padding bits stay zero (only in-range
+        entities are scattered)."""
+        from repro.core import bitplane
+
+        out = np.zeros(bitplane.n_words(out_n), np.uint32)
+        if self._size:
+            ents, atts = self.cat()
+            sel = np.isin(atts, attr_ids)
+            if sel.any():
+                e = ents[sel]
+                np.bitwise_or.at(out, e >> 5, np.uint32(1) << (e & 31))
+        return out
+
     def counts(self, k: int, base_keys: Optional[np.ndarray]) -> np.ndarray:
         """(k,) int64 per-attribute counts of pairs the delta ADDS: deduped
         within the delta and against ``base_keys`` (the sealed base's sorted

@@ -47,6 +47,7 @@ shard-local stage avoided streaming.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -54,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bitplane
 from repro.core.di import DIGraph
 from repro.core.queries import extract_subgraph, induce_edge_mask_directed
 from repro.obs.metrics import GLOBAL as _OBS
@@ -257,29 +259,77 @@ def _propagate(
     return vmask, emask, tuple(back), tuple(alive)
 
 
+def _fused_step_sets(plan: Plan):
+    """The (node steps, edge steps) riding the fused batched launches, plus
+    the fused slot-id sets — shared by the bool and packed materializers so
+    the ``pg_exec_fused_masks`` accounting is identical on both paths."""
+    fused_n = set(plan.fused_node_slots)
+    fused_e = set(getattr(plan, "fused_edge_slots", ()))
+    nsteps = [s for s in plan.mask_steps if s.kind == "node" and s.slot in fused_n]
+    esteps = [s for s in plan.mask_steps if s.kind == "edge" and s.slot in fused_e]
+    if _obs_enabled():
+        _M_MASKS.inc(len(plan.mask_steps))
+        _M_FUSED.inc(len(nsteps) + len(esteps))
+    return fused_n, fused_e, nsteps, esteps
+
+
 def _materialize_masks(pg, plan: Plan) -> Tuple[Dict[int, jax.Array], Dict[int, jax.Array]]:
-    """Run every planned attribute mask, fusing batched slots into one call."""
+    """Run every planned attribute mask, fusing batched slots into one call.
+
+    Node AND edge slots marked fused each coalesce into one
+    ``query_any_batched`` launch against their store (node and edge stores
+    are distinct (K, N) planes, so that is the launch floor: two)."""
     node_masks: Dict[int, jax.Array] = {}
     edge_masks: Dict[int, jax.Array] = {}
 
-    fused = set(plan.fused_node_slots)
-    fused_steps = [s for s in plan.mask_steps if s.kind == "node" and s.slot in fused]
-    if _obs_enabled():
-        _M_MASKS.inc(len(plan.mask_steps))
-        _M_FUSED.inc(len(fused_steps))
-    if fused_steps:
+    fused_n, fused_e, fused_nsteps, fused_esteps = _fused_step_sets(plan)
+    if fused_nsteps:
         stacked = pg._vstore.query_any_batched(
-            [s.values for s in fused_steps], impl=fused_steps[0].impl
+            [s.values for s in fused_nsteps], impl=fused_nsteps[0].impl
         )
-        for s, row in zip(fused_steps, stacked):
+        for s, row in zip(fused_nsteps, stacked):
             node_masks[s.slot] = row
+    if fused_esteps:
+        stacked = pg._estore.query_any_batched(
+            [s.values for s in fused_esteps], impl=fused_esteps[0].impl
+        )
+        for s, row in zip(fused_esteps, stacked):
+            edge_masks[s.slot] = row
 
     for s in plan.mask_steps:
-        if s.kind == "node" and s.slot not in fused:
+        if s.kind == "node" and s.slot not in fused_n:
             node_masks[s.slot] = pg._vstore.query_any(s.values, impl=s.impl)
-        elif s.kind == "edge":
+        elif s.kind == "edge" and s.slot not in fused_e:
             edge_masks[s.slot] = pg._estore.query_any(s.values, impl=s.impl)
     return node_masks, edge_masks
+
+
+def _materialize_mask_words(pg, plan: Plan) -> Tuple[Dict[int, jax.Array], Dict[int, jax.Array]]:
+    """Packed analog of ``_materialize_masks``: every mask stays a uint32
+    word vector off the stores' packed planes — no bool materialization."""
+    node_words: Dict[int, jax.Array] = {}
+    edge_words: Dict[int, jax.Array] = {}
+
+    fused_n, fused_e, fused_nsteps, fused_esteps = _fused_step_sets(plan)
+    if fused_nsteps:
+        stacked = pg._vstore.query_any_batched_words(
+            [s.values for s in fused_nsteps], impl=fused_nsteps[0].impl
+        )
+        for s, row in zip(fused_nsteps, stacked):
+            node_words[s.slot] = row
+    if fused_esteps:
+        stacked = pg._estore.query_any_batched_words(
+            [s.values for s in fused_esteps], impl=fused_esteps[0].impl
+        )
+        for s, row in zip(fused_esteps, stacked):
+            edge_words[s.slot] = row
+
+    for s in plan.mask_steps:
+        if s.kind == "node" and s.slot not in fused_n:
+            node_words[s.slot] = pg._vstore.query_any_words(s.values, impl=s.impl)
+        elif s.kind == "edge" and s.slot not in fused_e:
+            edge_words[s.slot] = pg._estore.query_any_words(s.values, impl=s.impl)
+    return node_words, edge_words
 
 
 def _gather_masks(masks, mesh):
@@ -291,9 +341,120 @@ def _gather_masks(masks, mesh):
     return list(jax.device_put(list(masks), [rep] * len(masks)))
 
 
+# predicate ops mirrored from PropGraph._PRED_OPS (plain operator functions;
+# kept local so the fused combine needs no property_graph import)
+_PRED_FNS = {
+    "==": operator.eq, "!=": operator.ne, "<": operator.lt,
+    "<=": operator.le, ">": operator.gt, ">=": operator.ge,
+}
+
+
+def _ones_words(n: int) -> jax.Array:
+    """Packed all-True mask over ``n`` entities — full words 0xFFFFFFFF,
+    tail bits zero (the invariant every word-space AND/OR preserves)."""
+    w = bitplane.n_words(n)
+    words = jnp.full((w,), 0xFFFFFFFF, jnp.uint32)
+    rem = n % bitplane.WORD
+    if w and rem:
+        words = words.at[-1].set(jnp.uint32((1 << rem) - 1))
+    return words
+
+
+@partial(jax.jit, static_argnames=("n", "m", "vops", "eops"))
+def _combine_packed(nwords, ewords, vpreds, epreds, av, ae, *,
+                    n: int, m: int, vops, eops):
+    """The fused mask-combination launch (tentpole stage 3): predicate
+    evaluation, bit-packing, word-space AND with label/relationship words
+    and packed tombstone masks, and the SINGLE unpack at the propagation
+    boundary — one jitted program instead of one mask op per predicate
+    composed through separate dispatches.
+
+    ``nwords[slot]`` / ``ewords[slot]``: packed store words or None
+    (unconstrained).  ``vpreds[slot]`` / ``epreds[slot]``: tuples of
+    ``(col, valid, value)`` with the matching op names in the static
+    ``vops`` / ``eops``.  ``av`` / ``ae``: alive bool masks or None.
+    """
+    av_w = bitplane.pack_mask(av) if av is not None else None
+    ae_w = bitplane.pack_mask(ae) if ae is not None else None
+
+    def combine(words, preds, ops, size, alive_w):
+        out = words if words is not None else _ones_words(size)
+        for (col, valid, value), op in zip(preds, ops):
+            pm = valid & _PRED_FNS[op](col, value)
+            if int(pm.shape[0]) < size:  # short edge column: pad rows invalid
+                pm = jnp.concatenate(
+                    [pm, jnp.zeros((size - int(pm.shape[0]),), jnp.bool_)])
+            out = out & bitplane.pack_mask(pm)
+        if alive_w is not None:
+            out = out & alive_w
+        return bitplane.unpack_mask(out, size)
+
+    cands = tuple(
+        combine(nwords[i], vpreds[i], vops[i], n, av_w)
+        for i in range(len(nwords)))
+    emasks = tuple(
+        combine(ewords[i], epreds[i], eops[i], m, ae_w)
+        for i in range(len(ewords)))
+    return cands, emasks
+
+
+def _packed_combine_applies(pg) -> bool:
+    """The packed end-to-end combine path: single-device arr graphs whose
+    stores hold word planes.  Mesh graphs keep the bool combine (their
+    masks replicate across devices before propagation anyway) but still
+    scan packed planes inside ``dip_shard``."""
+    return (
+        pg.backend == "arr"
+        and getattr(pg, "mesh", None) is None
+        and pg._vstore.packed
+        and pg._estore.packed
+    )
+
+
+def _execute_plan_packed(pg, plan: Plan) -> MatchResult:
+    """Packed execution: store words → fused predicate/alive combine in
+    word space → ONE unpack at the propagation boundary."""
+    g = pg._require_graph()
+    if _obs_enabled():
+        _M_PLANS.inc()
+    node_words, edge_words = _materialize_mask_words(pg, plan)
+
+    n_slots = len(plan.pattern.nodes)
+    e_slots = len(plan.pattern.edges)
+    vpreds = [[] for _ in range(n_slots)]
+    vops = [[] for _ in range(n_slots)]
+    epreds = [[] for _ in range(e_slots)]
+    eops = [[] for _ in range(e_slots)]
+    for step in plan.predicate_steps:
+        # host-side validation (KeyError/ValueError/TypeError fire eagerly,
+        # before any launch) + raw column fetch for the fused combine
+        col, valid = pg._predicate_parts(
+            step.kind, step.predicate.name, step.predicate.op,
+            step.predicate.value)
+        entry = (col, valid, jnp.asarray(step.predicate.value))
+        if step.kind == "node":
+            vpreds[step.slot].append(entry)
+            vops[step.slot].append(step.predicate.op)
+        else:
+            epreds[step.slot].append(entry)
+            eops[step.slot].append(step.predicate.op)
+
+    av = pg._alive_vertex_mask() if hasattr(pg, "_alive_vertex_mask") else None
+    ae = pg._alive_edge_mask() if hasattr(pg, "_alive_edge_mask") else None
+    cands, emasks = _combine_packed(
+        tuple(node_words.get(i) for i in range(n_slots)),
+        tuple(edge_words.get(i) for i in range(e_slots)),
+        tuple(map(tuple, vpreds)), tuple(map(tuple, epreds)), av, ae,
+        n=g.n, m=g.m,
+        vops=tuple(map(tuple, vops)), eops=tuple(map(tuple, eops)))
+    return _finish_propagation(pg, plan, g, list(cands), list(emasks))
+
+
 def execute_plan(pg, plan: Plan) -> MatchResult:
     """Execute ``plan`` against ``pg``; see module docstring for stages."""
     pg._require_graph()  # the documented RuntimeError, before store access
+    if _packed_combine_applies(pg):
+        return _execute_plan_packed(pg, plan)
     label_masks, rel_masks = _materialize_masks(pg, plan)
     return execute_plan_with_masks(pg, plan, label_masks, rel_masks)
 
@@ -349,6 +510,13 @@ def execute_plan_with_masks(
     if ae is not None:
         emasks = [e & ae for e in emasks]
 
+    return _finish_propagation(pg, plan, g, cands, emasks)
+
+
+def _finish_propagation(pg, plan: Plan, g: DIGraph, cands, emasks) -> MatchResult:
+    """Shared stage-3 tail: mesh replication of the combined per-slot masks
+    (no-op single-device), the static-hop chain propagation, and result
+    packaging — identical for the bool and packed combine paths."""
     mesh = getattr(pg, "mesh", None)
     if mesh is not None:
         cands = _gather_masks(cands, mesh)

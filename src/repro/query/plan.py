@@ -69,6 +69,7 @@ class Plan:
     backend: str
     reversed_chain: bool = False
     fused_node_slots: Tuple[int, ...] = ()  # slots batched into one kernel call
+    fused_edge_slots: Tuple[int, ...] = ()  # edge slots riding a batched launch
 
     @property
     def hops(self) -> int:
@@ -96,6 +97,12 @@ class Plan:
             lines.append(
                 f"  fusion: label masks for node slots {list(self.fused_node_slots)} "
                 "batched into one bitmap_query kernel launch"
+            )
+        if self.fused_edge_slots:
+            lines.append(
+                f"  fusion: relationship masks for edge slots "
+                f"{list(self.fused_edge_slots)} batched into one "
+                "bitmap_query kernel launch"
             )
         for slot, edge in enumerate(self.pattern.edges):
             if not edge.is_fixed:

@@ -15,9 +15,10 @@ stats the paper's stores carry for free):
      * ``listd``: ``budget`` (output-sized gather, O(est hits)) when the
                   query is selective — est hits ≤ BUDGET_SEL_CUTOFF·nnz —
                   else ``inverted`` (full O(nnz) scan).
-3. **Kernel fusion** (``arr`` only): when ≥2 node slots carry label masks,
-   they are batched into ONE ``bitmap_query`` launch (the batched multi-mask
-   entry point) instead of one launch per slot.
+3. **Kernel fusion** (``arr`` only): when ≥2 node slots carry label masks
+   (resp. ≥2 edge slots carry relationship masks), they are batched into ONE
+   ``bitmap_query`` launch against their store (the batched multi-mask entry
+   point) instead of one launch per slot.
 """
 from __future__ import annotations
 
@@ -188,19 +189,28 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
         for pred in edge.predicates:
             predicate_steps.append(PredicateStep(kind="edge", slot=slot, predicate=pred))
 
-    # -- 3. fusion: batch arr label masks into one kernel launch ------------
+    # -- 3. fusion: batch arr label/relationship masks, one launch per store
     fused_slots: Tuple[int, ...] = ()
+    fused_eslots: Tuple[int, ...] = ()
     if pg.backend == "arr" and impl is None:
-        node_mask_slots = [s.slot for s in mask_steps if s.kind == "node"]
-        if len(node_mask_slots) >= FUSE_MIN_MASKS:
-            import jax
+        import jax
 
+        fused_impl = "kernel" if jax.default_backend() == "tpu" else "matvec"
+        node_mask_slots = [s.slot for s in mask_steps if s.kind == "node"]
+        edge_mask_slots = [s.slot for s in mask_steps if s.kind == "edge"]
+        if len(node_mask_slots) >= FUSE_MIN_MASKS:
             fused_slots = tuple(node_mask_slots)
-            fused_impl = "kernel" if jax.default_backend() == "tpu" else "matvec"
+        # edge masks batch against THEIR store on the same criterion — they
+        # previously always ran standalone even when the plan carried several
+        if len(edge_mask_slots) >= FUSE_MIN_MASKS:
+            fused_eslots = tuple(edge_mask_slots)
+        fused_kinds = (("node",) if fused_slots else ()) + (
+            ("edge",) if fused_eslots else ())
+        if fused_kinds:
             mask_steps = [
                 (
                     dataclasses.replace(s, impl=fused_impl, fused=True)
-                    if s.kind == "node"
+                    if s.kind in fused_kinds
                     else s
                 )
                 for s in mask_steps
@@ -213,4 +223,5 @@ def plan_pattern(pg, pattern: Pattern, *, impl: Optional[str] = None) -> Plan:
         backend=pg.backend,
         reversed_chain=reversed_chain,
         fused_node_slots=fused_slots,
+        fused_edge_slots=fused_eslots,
     )

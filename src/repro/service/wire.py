@@ -18,9 +18,13 @@ Frame layout (all integers big-endian)::
 The header is small and human-debuggable JSON; bulk data (masks, id
 arrays, property columns) travels as raw buffers described by per-array
 specs ``{"dtype", "shape"}`` appended by the codec.  Bool arrays are
-``np.packbits``-packed on the wire (8× smaller) and restored exactly —
-mask round-trips are bitwise, which the cross-process equivalence gate
-relies on (``pgserve --net --smoke``).
+``np.packbits(bitorder="little")``-packed on the wire (8× smaller) and
+restored exactly — mask round-trips are bitwise, which the cross-process
+equivalence gate relies on (``pgserve --net --smoke``).  Little-endian bit
+order makes the wire bytes IDENTICAL to the ``core.bitplane`` word plane's
+byte view, so a mask the server already holds packed ships verbatim
+(:class:`PackedMask` — no unpack→repack; ``result_to_wire`` packs device
+masks in one launch each and hands the codec the raw words).
 
 ``recv_msg`` raises ``ConnectionError`` on a clean EOF at a frame
 boundary (peer closed) and ``ProtocolError`` on everything else —
@@ -41,6 +45,7 @@ __all__ = [
     "MAX_PAYLOAD",
     "ProtocolError",
     "RemoteError",
+    "PackedMask",
     "encode_msg",
     "send_msg",
     "recv_msg",
@@ -86,11 +91,29 @@ class RemoteError(RuntimeError):
 
 
 # ------------------------------------------------------------------ arrays
-def _pack_array(a: np.ndarray) -> Tuple[dict, bytes]:
+@dataclasses.dataclass(frozen=True)
+class PackedMask:
+    """A (n,) bool mask already bit-packed in ``core.bitplane`` layout.
+
+    The codec ships its little-endian byte view verbatim (tail bits are
+    zero by the bitplane invariant, exactly what ``np.packbits`` would
+    emit) and the receiver sees a plain bool array — senders holding
+    packed words skip the unpack→repack round-trip entirely."""
+
+    words: np.ndarray  # (ceil(n/32),) uint32, little-endian bit order
+    n: int
+
+
+def _pack_array(a) -> Tuple[dict, bytes]:
+    if isinstance(a, PackedMask):
+        spec = {"dtype": "bool", "shape": [int(a.n)]}
+        nbytes = (int(a.n) + 7) // 8
+        words = np.ascontiguousarray(np.asarray(a.words, dtype="<u4"))
+        return spec, words.view(np.uint8)[:nbytes].tobytes()
     a = np.ascontiguousarray(a)
     spec = {"dtype": str(a.dtype), "shape": list(a.shape)}
     if a.dtype == np.bool_:
-        return spec, np.packbits(a.reshape(-1)).tobytes()
+        return spec, np.packbits(a.reshape(-1), bitorder="little").tobytes()
     return spec, a.tobytes()
 
 
@@ -125,7 +148,8 @@ def _blob_nbytes(dtype: np.dtype, count: int) -> int:
 def _unpack_array(dtype: np.dtype, shape: Tuple[int, ...], count: int,
                   buf: memoryview) -> np.ndarray:
     if dtype == np.bool_:
-        bits = np.unpackbits(np.frombuffer(buf, np.uint8), count=count)
+        bits = np.unpackbits(np.frombuffer(buf, np.uint8), count=count,
+                             bitorder="little")
         return bits.astype(np.bool_).reshape(shape)
     return np.frombuffer(buf, dtype=dtype, count=count).reshape(shape)
 
@@ -136,7 +160,8 @@ def encode_msg(header: Dict, arrays: Sequence[np.ndarray] = ()) -> bytes:
     owns the ``"arrays"`` key."""
     specs, blobs = [], []
     for a in arrays:
-        spec, blob = _pack_array(np.asarray(a))
+        spec, blob = _pack_array(a if isinstance(a, PackedMask)
+                                 else np.asarray(a))
         specs.append(spec)
         blobs.append(blob)
     hdr = dict(header)
@@ -234,14 +259,46 @@ class WireMatchResult:
         return int(self.edge_mask.sum())
 
 
+def _mask_payload(mask):
+    """Bool device masks pack ON DEVICE into bitplane words and ship as
+    :class:`PackedMask` — the codec's wire bytes without ever
+    materializing the byte-per-entity host copy.  Anything else (host
+    arrays, non-bool) goes through the generic path."""
+    try:
+        import jax
+
+        from repro.core import bitplane
+    except ImportError:  # jax-free client process
+        return np.asarray(mask)
+    if isinstance(mask, jax.Array) and mask.dtype == bool and mask.ndim == 1:
+        n = int(mask.shape[0])
+        return PackedMask(words=np.asarray(bitplane.pack_mask(mask)), n=n)
+    return np.asarray(mask)
+
+
 def result_to_wire(res) -> Tuple[Dict, List[np.ndarray]]:
     """``MatchResult`` → (meta, arrays): masks first, bindings after in
-    ``meta["vars"]`` order."""
+    ``meta["vars"]`` order.  Masks travel bit-packed end to end."""
     bindings = res.bindings()
     names = sorted(bindings)
-    arrays = [np.asarray(res.vertex_mask), np.asarray(res.edge_mask)]
-    arrays.extend(np.asarray(bindings[k]) for k in names)
+    arrays = [_mask_payload(res.vertex_mask), _mask_payload(res.edge_mask)]
+    arrays.extend(_mask_payload(bindings[k]) for k in names)
     return {"vars": names}, arrays
+
+
+def _as_bool_mask(a) -> np.ndarray:
+    """Normalize a result payload to a (n,) bool array.  The codec already
+    delivers bool (``_unpack_array``); in-process callers that short-circuit
+    the transport may hand back the ``PackedMask`` from ``result_to_wire``
+    (possibly wrapped in a 0-d object array by ``np.asarray``) — unpack it
+    host-side (numpy only, so jax-free clients stay jax-free)."""
+    if isinstance(a, np.ndarray) and a.dtype == object and a.ndim == 0:
+        a = a.item()
+    if isinstance(a, PackedMask):
+        words = np.ascontiguousarray(np.asarray(a.words, dtype="<u4"))
+        bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+        return bits[:a.n].astype(bool)
+    return np.asarray(a)
 
 
 def wire_to_result(meta: Dict, arrays: Sequence[np.ndarray]) -> WireMatchResult:
@@ -249,6 +306,7 @@ def wire_to_result(meta: Dict, arrays: Sequence[np.ndarray]) -> WireMatchResult:
     if len(arrays) != 2 + len(names):
         raise ProtocolError(
             f"result carries {len(arrays)} arrays for {len(names)} vars")
+    arrays = [_as_bool_mask(a) for a in arrays]
     return WireMatchResult(
         vertex_mask=arrays[0], edge_mask=arrays[1],
         _bindings=dict(zip(names, arrays[2:])),

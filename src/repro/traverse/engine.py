@@ -346,13 +346,20 @@ def semiring_relax_sharded(
 
 
 @lru_cache(maxsize=None)
-def _sharded_khop_fn(mesh, direction: int, undirected: bool):
-    """Jitted Boolean k-hop whose step is the sharded relax on an int8
-    frontier bitmask: the per-step ``pmax`` all-reduce ORs the per-device
-    partials, 1 byte/entity per step."""
+def _sharded_khop_fn(mesh, direction: int, undirected: bool,
+                     packed: bool = False):
+    """Jitted Boolean k-hop whose step is the sharded relax on a frontier
+    bitmask.  ``packed=False``: int8 partials, per-step ``pmax`` all-reduce,
+    1 byte/entity per step.  ``packed=True`` (the default wire-up via
+    :func:`khop_mask_sharded`): each device packs its partial into uint32
+    words and the step rides a bitwise-OR all-reduce —
+    ``bitplane.or_allreduce``, a ppermute butterfly for power-of-two device
+    counts — moving 1 BIT/entity per step, the packed plane's 8× cut
+    applied to the only thing the sharded frontier exchanges."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.core import bitplane
     from repro.launch.sharding import pg_entity_axes, pg_entity_shards
 
     ax = pg_entity_axes(mesh)
@@ -363,10 +370,14 @@ def _sharded_khop_fn(mesh, direction: int, undirected: bool):
         part = part.at[head_l].max((f[tail_l] & e_l).astype(jnp.int8))
         if undirected:
             part = part.at[tail_l].max((f[head_l] & e_l).astype(jnp.int8))
+        if packed:
+            words = bitplane.or_allreduce(bitplane.pack_mask(part > 0), ax, p)
+            return bitplane.unpack_mask(words, part.shape[0])
         return jax.lax.pmax(part, ax) > 0
 
     step = shard_map(local, mesh=mesh,
-                     in_specs=(P(ax), P(ax), P(ax), P()), out_specs=P())
+                     in_specs=(P(ax), P(ax), P(ax), P()), out_specs=P(),
+                     check_rep=False)
 
     @partial(jax.jit, static_argnames=("k",))
     def fn(g: DIGraph, seed_mask, e_ok, *, k: int):
@@ -399,8 +410,12 @@ def khop_mask_sharded(
     undirected: bool = False,
 ) -> jax.Array:
     """``khop_mask`` with the per-step shard_map/all-reduce layout; the
-    result is bitwise-identical to the single-device path."""
-    fn = _sharded_khop_fn(mesh, direction, undirected)
+    result is bitwise-identical to the single-device path (packed or byte
+    exchange — OR is OR either way)."""
+    from repro.core import bitplane
+
+    fn = _sharded_khop_fn(mesh, direction, undirected,
+                          bitplane.packed_default())
     return fn(g, seed_mask, _all_edges(g, edge_allowed), k=k)
 
 
