@@ -1,0 +1,300 @@
+"""Fused property-filtered neighborhood sampling: one-launch pipeline vs
+the host-loop baseline, served QPS, and the sample+embed fusion
+(docs/ARCHITECTURE.md §15).
+
+Rows (JSON via ``benchmarks.common.emit_json``; ``benchmarks/run.py``
+points them at ``BENCH_sample.json`` so the cross-PR perf trajectory
+records):
+
+  * ``sample_hostloop_*`` vs ``sample_fused_*`` — the tentpole
+    comparison: the Arkouda-shaped baseline runs ``match`` → ships the
+    seed mask to the host → python-loops over seeds slicing and
+    filtering each adjacency window with numpy; the fused path keeps the
+    packed seed bitmap on device and draws every seed's filtered sample
+    in ONE launch (``neighbor_sample_from_words``).  Explicit-seed rows
+    at S ∈ {256, 1024} use ``neighbor_sample``; ``sample_fused_batch8x256``
+    is the service's coalesced shape — 8 concurrent 256-seed requests as
+    ONE ``neighbor_sample_batched`` launch — against the host loop over
+    the same 2048 seeds.  ``speedup`` on each fused row is hostloop/fused
+    at the same seed set.
+  * ``sample_serve_c{c}_*`` — a pipelined closed loop driving
+    ``Service.submit_sample`` with ``c`` requests outstanding (submitted
+    in waves of ``c``, the shape an async client produces; thread-per-
+    client loops measure the GIL, not the service, at these microsecond
+    scales).  Keyed entropy, so NOTHING is served from the result cache —
+    every request samples.  ``speedup`` is QPS over the
+    ``sample_serve_seq_*`` row: the same request stream issued one at a
+    time (sequential submission), which is what request coalescing is
+    supposed to beat.  ``sample_direct_seq_*`` records the no-service
+    ``PropGraph.sample`` loop for scale.
+  * ``sample_embed_fused_*`` vs ``sample_embed_twoprog_*`` — the
+    ``sample+lookup`` verb as one device program vs sample-then-embed as
+    two programs with the sampled block crossing the host boundary
+    between them (what the composition costs when sampling and embedding
+    are separate requests, which is exactly the case fusion removes).
+
+Every surface is oracle-verified BEFORE timing: kernel outputs against
+``kernels.neighbor_sample.ref.check_sample`` (membership, no
+duplicates, exact counts, filtered-edge exclusion), the host-loop
+baseline against filtered degrees, the service path bitwise against
+direct ``PropGraph.sample``, and the fused bags bitwise against the
+two-program composition.  ``compiles`` on the last row records
+``sample_compile_count()`` — the bucketing's bounded-specialization
+claim, measured.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import emit_json, time_call
+
+
+def _host_loop(seg, dstv, seeds, eok, fanout, rng):
+    """The match→host→per-seed-loop baseline: slice each seed's window,
+    filter with the host bool mask, numpy-choice without replacement."""
+    out = []
+    for s in seeds:
+        lo, hi = seg[s], seg[s + 1]
+        cand = np.arange(lo, hi)[eok[lo:hi]]
+        k = min(fanout, cand.size)
+        out.append(dstv[rng.choice(cand, size=k, replace=False)]
+                   if k else np.empty(0, np.int64))
+    return out
+
+
+def _blocks_equal(got, ref) -> bool:
+    if len(got) != len(ref):
+        return False
+    for bg, br in zip(got, ref):
+        for f in ("src_nodes", "dst_nodes", "edge_src", "edge_dst",
+                  "edge_mask"):
+            a, b = np.asarray(getattr(bg, f)), np.asarray(getattr(br, f))
+            if a.shape != b.shape or not (a == b).all():
+                return False
+    return True
+
+
+def run(m: int = 50_000, requests: int = 64, seed: int = 0, repeats: int = 3,
+        json_path: Optional[str] = None) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import bitplane
+    from repro.kernels.neighbor_sample import (
+        neighbor_sample,
+        neighbor_sample_from_words,
+        sample_compile_count,
+        sample_embed,
+    )
+    from repro.kernels.neighbor_sample.ref import check_sample
+    from repro.launch.pgserve import build_tenant_graph
+    from repro.service import Service
+
+    FAN = 8
+    FILT = "(a)-[:follows]->(b)"
+    SEED_PAT = "(a:l0|l1|l2)"
+
+    pg = build_tenant_graph("arr", m, seed=seed)
+    nodes = np.asarray(pg.graph.node_map)
+    n, me = pg.n_vertices, pg.n_edges
+    seg_d, dst_d = pg.graph.seg, pg.graph.dst
+    seg, dstv = np.asarray(seg_d), np.asarray(dst_d)
+    max_deg = int(pg.graph.max_deg)
+    eok = np.asarray(pg.match(FILT).edge_mask)
+    ew = bitplane.pack_mask(jnp.asarray(eok))
+    rng = np.random.default_rng(seed)
+
+    # ---- oracle verification before ANY timing ----------------------------
+    for S in (256, 1024):
+        sds = rng.choice(n, S, replace=False).astype(np.int32)
+        nb, ei, mk = neighbor_sample(seg_d, dst_d, n, me, sds,
+                                     jax.random.PRNGKey(1), fanout=FAN,
+                                     edge_words=ew, max_deg=max_deg)
+        check_sample(seg, dstv, sds, eok, FAN, np.asarray(nb)[:S],
+                     np.asarray(ei)[:S], np.asarray(mk)[:S])
+        base = _host_loop(seg, dstv, sds, eok, FAN, np.random.default_rng(2))
+        fdeg = np.asarray([eok[seg[s]:seg[s + 1]].sum() for s in sds])
+        assert all(len(b) == min(FAN, d) for b, d in zip(base, fdeg))
+
+    # ---- tentpole: fused one-launch vs match→host→per-seed-loop -----------
+    res = pg.match(SEED_PAT)
+    n_seeds = int(np.asarray(res.vertex_mask).sum())
+    key = jax.random.PRNGKey(3)
+
+    def fused_pattern():
+        r = pg.match(SEED_PAT)
+        words = bitplane.pack_mask(jnp.asarray(r.vertex_mask))
+        cnt = int(jnp.sum(jnp.asarray(r.vertex_mask)))
+        out = neighbor_sample_from_words(
+            seg_d, dst_d, n, me, words, cnt, key, fanout=FAN,
+            edge_words=ew, max_deg=max_deg)
+        return np.asarray(out[2])  # neighbors, back on host like the baseline
+
+    def hostloop_pattern():
+        vm = np.asarray(pg.match(SEED_PAT).vertex_mask)  # device → host
+        return _host_loop(seg, dstv, np.flatnonzero(vm), eok, FAN,
+                          np.random.default_rng(4))
+
+    t_fused = time_call(fused_pattern, warmup=2, iters=max(repeats, 3))
+    t_host = time_call(hostloop_pattern, warmup=1, iters=max(repeats, 3))
+    emit_json(f"sample_hostloop_pattern_m{m}", t_host, path=json_path,
+              seeds=n_seeds, fanout=FAN, m=m, mode="match-host-perseed-loop")
+    emit_json(f"sample_fused_pattern_m{m}", t_fused, path=json_path,
+              seeds=n_seeds, fanout=FAN, m=m, mode="fused-one-launch",
+              speedup=round(t_host / t_fused, 2))
+
+    for S in (256, 1024):
+        sds = rng.choice(n, S, replace=False).astype(np.int32)
+        t_f = time_call(
+            lambda: np.asarray(neighbor_sample(
+                seg_d, dst_d, n, me, sds, key, fanout=FAN, edge_words=ew,
+                max_deg=max_deg)[0]),
+            warmup=2, iters=max(repeats, 3))
+        t_h = time_call(
+            lambda: _host_loop(seg, dstv, sds, eok, FAN,
+                               np.random.default_rng(4)),
+            warmup=1, iters=max(repeats, 3))
+        emit_json(f"sample_hostloop_s{S}_m{m}", t_h, path=json_path,
+                  seeds=S, fanout=FAN, m=m, mode="perseed-loop")
+        emit_json(f"sample_fused_s{S}_m{m}", t_f, path=json_path,
+                  seeds=S, fanout=FAN, m=m, mode="fused-one-launch",
+                  speedup=round(t_h / t_f, 2))
+
+    # the coalesced serving shape: 8 concurrent 256-seed requests, layer 0
+    # of ALL of them in one batched launch (what _serve_sample_group runs)
+    from repro.graph.sampler import layer_keys_batch
+    from repro.kernels.neighbor_sample import (
+        bucketed_requests,
+        neighbor_sample_batched,
+    )
+
+    RQ, SB = 8, 256
+    rcap = bucketed_requests(RQ)
+    seeds_m = np.zeros((rcap, SB), np.int32)
+    for i in range(RQ):
+        seeds_m[i] = rng.choice(n, SB, replace=False)
+    valid_m = np.zeros((rcap, SB), bool)
+    valid_m[:RQ] = True
+    keys_b = layer_keys_batch(jnp.arange(rcap), 0)
+    words_m = jnp.stack([ew] * rcap)
+    nb, ei, mk = neighbor_sample_batched(
+        seg_d, dst_d, n, me, seeds_m, valid_m, keys_b, fanout=FAN,
+        edge_words=words_m, max_deg=max_deg)
+    for i in range(RQ):  # every row oracle-checked before timing
+        check_sample(seg, dstv, seeds_m[i], eok, FAN, np.asarray(nb)[i],
+                     np.asarray(ei)[i], np.asarray(mk)[i])
+    t_fb = time_call(
+        lambda: np.asarray(neighbor_sample_batched(
+            seg_d, dst_d, n, me, seeds_m, valid_m, keys_b, fanout=FAN,
+            edge_words=words_m, max_deg=max_deg)[0]),
+        warmup=2, iters=max(repeats, 3))
+    t_hb = time_call(
+        lambda: _host_loop(seg, dstv, seeds_m[:RQ].ravel(), eok, FAN,
+                           np.random.default_rng(4)),
+        warmup=1, iters=max(repeats, 3))
+    emit_json(f"sample_hostloop_batch8x256_m{m}", t_hb, path=json_path,
+              seeds=RQ * SB, fanout=FAN, m=m, mode="perseed-loop")
+    emit_json(f"sample_fused_batch8x256_m{m}", t_fb, path=json_path,
+              seeds=RQ * SB, fanout=FAN, m=m, mode="batched-one-launch",
+              speedup=round(t_hb / t_fb, 2))
+
+    # ---- served QPS: coalesced concurrency vs sequential submission -------
+    K = 8
+    seed_sets = [nodes[rng.choice(n, 256, replace=False)] for _ in range(K)]
+    fanouts = [4]
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        for i in (0, 3):  # parity before timing: service ≡ direct, bitwise
+            assert _blocks_equal(
+                svc.sample("g", seed_sets[i], fanouts, seed=i),
+                pg.sample(seed_sets[i], fanouts, seed=i)), i
+
+    def direct_loop():
+        for i in range(requests):
+            pg.sample(seed_sets[i % K], fanouts, seed=1000 + i)
+
+    t_direct = time_call(direct_loop, warmup=1, iters=max(repeats, 2))
+    emit_json(f"sample_direct_seq_m{m}", t_direct / requests, path=json_path,
+              qps=round(requests / t_direct, 1), requests=requests, m=m,
+              mode="propgraph-sample-loop")
+
+    def serve_round(svc, c: int) -> float:
+        t0 = time.monotonic()
+        for w in range(0, requests, c):
+            futs = [svc.submit_sample("g", seed_sets[i % K], fanouts,
+                                      seed=i, deterministic=False)
+                    for i in range(w, min(w + c, requests))]
+            for f in futs:
+                f.result(timeout=120)
+        return time.monotonic() - t0
+
+    seq_qps = None
+    for c in (1, 8):
+        with Service() as svc:
+            svc.add_graph("g", pg)
+            svc.sample("g", seed_sets[0], fanouts, seed=0)  # warm the path
+            wall = min(serve_round(svc, c) for _ in range(max(repeats, 2)))
+            stats = svc.stats()
+        qps = requests / wall
+        extra = {}
+        if c == 1:
+            seq_qps = qps
+            name = f"sample_serve_seq_m{m}"
+        else:
+            name = f"sample_serve_c{c}_m{m}"
+            extra["speedup"] = round(qps / seq_qps, 2)
+        emit_json(name, wall / requests, path=json_path,
+                  qps=round(qps, 1), concurrency=c, requests=requests, m=m,
+                  coalesced=stats.get("sample_coalesced_launches", 0),
+                  mode="service-sample", **extra)
+
+    # ---- sample+embed: one fused program vs two programs + host sync ------
+    D = 64
+    table = jax.random.normal(jax.random.PRNGKey(5), (n, D), jnp.float32)
+    sds = rng.choice(n, 1024, replace=False).astype(np.int32)
+    ekey = jax.random.PRNGKey(9)
+
+    @jax.jit
+    def embed_only(nb, mk):
+        rows = table[jnp.clip(nb, 0, n - 1)]
+        w = mk[..., None].astype(jnp.float32)
+        cnt = jnp.maximum(mk.sum(-1, keepdims=True), 1).astype(jnp.float32)
+        return jnp.sum(rows * w, axis=1) / cnt
+
+    def two_prog():
+        nb, _ei, mk = neighbor_sample(seg_d, dst_d, n, me, sds, ekey,
+                                      fanout=FAN, edge_words=ew,
+                                      max_deg=max_deg)
+        # the sampled block leaves the device between the two programs —
+        # exactly what happens when sample and embed are separate requests
+        nb_h, mk_h = np.asarray(nb), np.asarray(mk)
+        return embed_only(jnp.asarray(nb_h), jnp.asarray(mk_h))
+
+    bags_f = sample_embed(seg_d, dst_d, n, me, sds, ekey, table, fanout=FAN,
+                          edge_words=ew, max_deg=max_deg)[0]
+    assert np.array_equal(np.asarray(bags_f), np.asarray(two_prog())), \
+        "fused bags != two-program bags"
+    t_two = time_call(two_prog, warmup=2, iters=max(repeats, 3))
+    t_one = time_call(
+        lambda: sample_embed(seg_d, dst_d, n, me, sds, ekey, table,
+                             fanout=FAN, edge_words=ew, max_deg=max_deg)[0],
+        warmup=2, iters=max(repeats, 3))
+    emit_json(f"sample_embed_twoprog_m{m}", t_two, path=json_path,
+              seeds=1024, fanout=FAN, dim=D, m=m, mode="sample-then-embed")
+    emit_json(f"sample_embed_fused_m{m}", t_one, path=json_path,
+              seeds=1024, fanout=FAN, dim=D, m=m, mode="fused-sample-embed",
+              speedup=round(t_two / t_one, 2),
+              compiles=sample_compile_count())
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=50_000)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--json-path", default=None)
+    a = ap.parse_args()
+    run(m=a.m, requests=a.requests, json_path=a.json_path)

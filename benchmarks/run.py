@@ -31,6 +31,13 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.emit).  Sections:
                  ALWAYS appended to ``BENCH_serve.json`` — override with
                  ``BENCH_JSON_PATH`` — so the perf trajectory records;
                  see bench_serve.py)
+  sample       — fused property-filtered neighborhood sampling: one-launch
+                 pattern→sample vs match→host→per-seed-loop baseline, the
+                 coalesced 8×256 batched launch, served QPS at c∈{1,8}
+                 vs sequential submission, and sample+embed fused vs
+                 two-program — every row oracle-verified before timing
+                 (JSON lines; ALWAYS appended to ``BENCH_sample.json`` —
+                 override with ``BENCH_JSON_PATH``; see bench_sample.py)
   ingest       — overlay subsystem: streamed-batch ingest on the delta
                  write path vs full-rebuild path, read latency under write
                  load, compaction ≡ from-scratch verification (JSON lines;
@@ -97,6 +104,13 @@ def main() -> None:
                     requests=32 if small else 64,
                     json_path=os.environ.get("BENCH_JSON_PATH",
                                              "BENCH_serve.json"))
+
+    print("# sample (fused pattern→sample→embed: one-launch vs host loop, QPS)")
+    from benchmarks import bench_sample
+    bench_sample.run(m=10_000 if small else 50_000,
+                     requests=32 if small else 64,
+                     json_path=os.environ.get("BENCH_JSON_PATH",
+                                              "BENCH_sample.json"))
 
     print("# ingest (overlay delta write path vs rebuild, reads under writes)")
     from benchmarks import bench_ingest

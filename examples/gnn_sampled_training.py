@@ -1,30 +1,52 @@
-"""Sampled GNN training over the DI structure: GraphSAGE-style minibatches.
+"""Sampled GNN training over a PROPERTY graph: pattern-seeded minibatches.
 
     PYTHONPATH=src python examples/gnn_sampled_training.py
 
-Builds a 100k-edge graph, then trains the gcn-cora architecture with fanout
-(10, 5) neighbor sampling — the ``minibatch_lg`` execution mode at laptop
-scale.  The sampler IS the DI structure at work: every frontier expansion is
-a SEG-offset slice.
+Builds a labeled/attributed citation-style graph, selects the training
+population with a Cypher-lite pattern, and draws every GraphSAGE-style
+minibatch neighborhood through ``PropGraph.sample`` — the fused sampling
+path (docs/ARCHITECTURE.md §15): the pattern's seed mask feeds the sampler
+bit-packed, edge eligibility (``cites`` edges only) is rejected in-kernel
+before reservoir selection, and the blocks come back renumbered with
+local ids ready for the GCN forward.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_di
-from repro.graph import random_uniform_graph, sample_layers
+from repro.core import PropGraph
+from repro.graph import random_uniform_graph
 from repro.models import gcn
 from repro.models.gnn_common import GraphBatch
 from repro.optim import AdamWConfig, apply_updates, init_state
 
 rng = np.random.default_rng(0)
-src, dst = random_uniform_graph(100_000, seed=0)
-g = build_di(src, dst)
-print(f"graph: n={g.n:,} m={g.m:,}")
+src, dst = random_uniform_graph(50_000, seed=0)
+pg = PropGraph().add_edges_from(src, dst)
+nodes = np.asarray(pg.graph.node_map)
+n = pg.n_vertices
+pg.add_node_labels(nodes, rng.choice(["paper", "author"], size=n, p=[0.7, 0.3]))
+pg.add_node_properties("year", nodes,
+                       rng.integers(2000, 2026, n).astype(np.int32))
+es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+pg.add_edge_relationships(nodes[es], nodes[ed],
+                          rng.choice(["cites", "writes"], size=len(es)))
+print(f"graph: n={pg.n_vertices:,} m={pg.n_edges:,}")
+
+# the training population is a QUERY, not an id list: recent papers only
+SEED_PATTERN = "(a:paper {year >= 2010})"
+FILTER = "(a)-[:cites]->(b)"  # only citation edges may be sampled
+pool = np.flatnonzero(np.asarray(pg.match(SEED_PATTERN).vertex_mask))
+print(f"seed pool |{SEED_PATTERN}| = {len(pool):,} vertices")
+
+# one fully fused pattern→sample round trip: seeds never visit the host
+blocks = pg.sample(SEED_PATTERN, [10, 5], pattern=FILTER, seed=0)
+print("pattern-seeded blocks:",
+      [(b.n_src, b.n_dst, b.n_edges) for b in blocks])
 
 D_FEAT, N_CLASSES = 64, 7
-feats = rng.standard_normal((g.n, D_FEAT)).astype(np.float32)
-labels = rng.integers(0, N_CLASSES, g.n).astype(np.int32)
+feats = rng.standard_normal((n, D_FEAT)).astype(np.float32)
+labels = rng.integers(0, N_CLASSES, n).astype(np.int32)
 
 cfg = gcn.GCNConfig(d_in=D_FEAT, d_hidden=16, n_classes=N_CLASSES)
 params = gcn.init_params(jax.random.PRNGKey(0), cfg)
@@ -32,39 +54,43 @@ opt_cfg = AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=100)
 opt = init_state(params)
 
 
-def subgraph_batch(blocks, seed_ids):
-    """Union-of-blocks compacted subgraph (the minibatch_lg execution form)."""
-    outer = blocks[0]
-    nodes = np.asarray(outer.src_nodes)
-    idx = {int(v): i for i, v in enumerate(nodes)}
-    es, ed, em = [], [], []
+def subgraph_batch(blocks, seed_int):
+    """Union-of-blocks compacted subgraph (the minibatch_lg execution form).
+
+    ``blocks[0].src_nodes`` is the widest frontier — a sorted superset of
+    every id in the chain — so renumbering is one ``searchsorted`` per
+    block.  Block ids are the graph's internal ids, which index ``feats``
+    and ``labels`` directly."""
+    sub = np.asarray(blocks[0].src_nodes)
+    es_l, ed_l = [], []
     for b in blocks:
         sn, dn = np.asarray(b.src_nodes), np.asarray(b.dst_nodes)
-        s, d, m = np.asarray(b.edge_src), np.asarray(b.edge_dst), np.asarray(b.edge_mask)
-        for i in np.flatnonzero(m):
-            es.append(idx[int(sn[s[i]])]); ed.append(idx[int(dn[d[i]])]); em.append(True)
-    nmask = np.zeros(len(nodes), bool)
-    for v in seed_ids:
-        nmask[idx[int(v)]] = True
-    order = np.argsort(es, kind="stable")
+        s, d = np.asarray(b.edge_src), np.asarray(b.edge_dst)
+        keep = np.asarray(b.edge_mask)
+        es_l.append(np.searchsorted(sub, sn[s[keep]]))
+        ed_l.append(np.searchsorted(sub, dn[d[keep]]))
+    e_src = np.concatenate(es_l).astype(np.int32)
+    e_dst = np.concatenate(ed_l).astype(np.int32)
+    order = np.argsort(e_src, kind="stable")
+    nmask = np.zeros(len(sub), bool)
+    nmask[np.searchsorted(sub, seed_int)] = True
     return GraphBatch(
-        x=jnp.asarray(feats[nodes]), pos=None, species=None,
-        edge_src=jnp.asarray(np.asarray(es, np.int32)[order]),
-        edge_dst=jnp.asarray(np.asarray(ed, np.int32)[order]),
-        edge_attr=None, edge_mask=jnp.asarray(np.asarray(em)[order]),
-        node_mask=jnp.asarray(nmask), labels=jnp.asarray(labels[nodes]),
-        graph_ids=jnp.zeros(len(nodes), jnp.int32),
-        n_nodes=len(nodes), n_edges=len(es), n_graphs=1)
+        x=jnp.asarray(feats[sub]), pos=None, species=None,
+        edge_src=jnp.asarray(e_src[order]), edge_dst=jnp.asarray(e_dst[order]),
+        edge_attr=None, edge_mask=jnp.ones(len(e_src), bool),
+        node_mask=jnp.asarray(nmask), labels=jnp.asarray(labels[sub]),
+        graph_ids=jnp.zeros(len(sub), jnp.int32),
+        n_nodes=len(sub), n_edges=len(e_src), n_graphs=1)
 
 
 grad_fn = jax.value_and_grad(gcn.loss_fn)
 for step in range(30):
-    seeds = rng.choice(g.n, 256, replace=False).astype(np.int32)
-    blocks = sample_layers(g, seeds, [10, 5], seed=step)
-    batch = subgraph_batch(blocks, seeds)
+    seed_int = rng.choice(pool, 256, replace=False)
+    blocks = pg.sample(nodes[seed_int], [10, 5], pattern=FILTER, seed=step)
+    batch = subgraph_batch(blocks, seed_int)
     loss, grads = grad_fn(params, batch, cfg)
     params, opt, metrics = apply_updates(params, grads, opt, opt_cfg)
     if step % 5 == 0:
-        print(f"step {step:3d}  sampled n={batch.n_nodes:5d} e={batch.n_edges:6d}  "
-              f"loss {float(loss):.4f}")
+        print(f"step {step:3d}  sampled n={batch.n_nodes:5d} "
+              f"e={batch.n_edges:6d}  loss {float(loss):.4f}")
 print("OK")

@@ -260,4 +260,30 @@ plane_byte = pg_byte._vstore.finalize().bitmap  # byte fallback: (K, n) int8
 print(f"label plane: {plane_byte.nbytes:,} B (byte layout) → {plane.nbytes:,} B "
       f"(packed, {plane_byte.nbytes / plane.nbytes:.1f}× smaller), "
       f"answers bitwise-identical ✓")
+
+# -- 13. fused neighborhood sampling: pattern → sample → blocks ---------------
+# PropGraph.sample() is the one-launch GNN data path (docs/ARCHITECTURE.md
+# §15): seeds can be a Cypher-lite pattern (the match mask feeds the
+# sampler bit-packed, never unpacked to host), an edge pattern restricts
+# which edges may be sampled IN-KERNEL before reservoir selection, and the
+# result is a renumbered bipartite block per layer — uniform without
+# replacement, bitwise-reproducible for a fixed seed.  The service serves
+# the same verb at QPS, coalescing concurrent requests into one batched
+# launch (see examples/gnn_sampled_training.py for training on these
+# blocks and examples/recsys_serving.py for the fused sample+embed bags).
+blocks = pg.sample("(a:label1 {age > 30})", [8, 4],
+                   pattern="(a)-[:rel7|rel8]->(b)", seed=0)
+again = pg.sample("(a:label1 {age > 30})", [8, 4],
+                  pattern="(a)-[:rel7|rel8]->(b)", seed=0)
+assert all(bool((b.edge_mask == a.edge_mask).all())
+           for b, a in zip(blocks, again))
+print(f"fused sampling: {blocks[-1].n_dst:,} pattern seeds → blocks "
+      f"{[(b.n_src, b.n_dst, b.n_edges) for b in blocks]}, reproducible ✓")
+with Service() as svc:
+    svc.add_graph("g", pg)
+    specs = [(nodes[32 * i:32 * i + 32], i) for i in range(8)]
+    batch = svc.sample_batch("g", specs, [4])
+    s = svc.stats()
+    print(f"served sampling: {len(batch)} requests in "
+          f"{s.get('sample_coalesced_launches', 0)} coalesced launch(es) ✓")
 print("OK")

@@ -1,10 +1,15 @@
-"""DLRM serving: batched CTR scoring + retrieval against 100k candidates.
+"""DLRM serving: batched CTR scoring + graph-side user context at QPS.
 
     PYTHONPATH=src python examples/recsys_serving.py
 
 The embedding-bag lookup here is the DIP-LIST query generalized to weighted
 segment reduction (DESIGN.md §4) — same offsets+values layout, same
-entity-dimension distribution rule.
+entity-dimension distribution rule.  The second half builds the user
+context the DLRM consumes FROM THE PROPERTY GRAPH: a Cypher-lite pattern
+picks the eligible interaction edges, and the fused sample+embed verb
+(docs/ARCHITECTURE.md §15) draws each user's neighborhood and reduces it
+to one embedding bag in a single launch — pattern→sample→embed with no
+host round-trip in between.
 """
 import time
 
@@ -51,4 +56,50 @@ vals, idx = retr(params, q["dense"], q["sparse"], cands)
 jax.block_until_ready(vals)
 print(f"retrieval: top-10 of 100,000 candidates in {(time.perf_counter()-t0)*1e3:.2f} ms")
 print("top scores:", np.asarray(vals)[:3].round(3).tolist())
+
+# --- graph-side user context: fused pattern→sample→embed (§15) ---------------
+from repro.core import PropGraph, bitplane
+from repro.kernels.neighbor_sample import sample_embed
+
+rng = np.random.default_rng(0)
+N_USERS, N_ITEMS, M = 2_000, 8_000, 40_000
+u = rng.integers(0, N_USERS, M)
+i = N_USERS + rng.integers(0, N_ITEMS, M)
+pg = PropGraph().add_edges_from(u, i)
+nodes = np.asarray(pg.graph.node_map)
+pg.add_node_labels(nodes, np.where(nodes < N_USERS, "user", "item"))
+es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+pg.add_edge_relationships(nodes[es], nodes[ed],
+                          rng.choice(["clicked", "bought"], size=len(es)))
+print(f"interaction graph: n={pg.n_vertices:,} m={pg.n_edges:,}")
+
+# one (n, d) embedding table covering users and items; the packed mask of
+# "(u)-[:bought]->(i)" restricts sampling to purchase edges in-kernel
+table = jax.random.normal(jax.random.PRNGKey(2), (pg.n_vertices, cfg.embed_dim))
+bought = bitplane.pack_mask(jnp.asarray(pg.match("(u)-[:bought]->(i)").edge_mask))
+serve_users = np.flatnonzero(
+    np.asarray(pg.match("(a:user)").vertex_mask))[:512].astype(np.int32)
+
+bags, nbrs, _eids, mask = sample_embed(
+    pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges,
+    jnp.asarray(serve_users), jax.random.PRNGKey(3), table,
+    fanout=8, edge_words=bought, max_deg=int(pg.graph.max_deg))
+jax.block_until_ready(bags)
+t0 = time.perf_counter()
+bags, nbrs, _eids, mask = sample_embed(
+    pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges,
+    jnp.asarray(serve_users), jax.random.PRNGKey(3), table,
+    fanout=8, edge_words=bought, max_deg=int(pg.graph.max_deg))
+jax.block_until_ready(bags)
+dt = time.perf_counter() - t0
+sampled = int(np.asarray(mask).sum())
+print(f"fused sample+embed: {len(serve_users)} users → {sampled} purchases → "
+      f"{bags.shape} bags in {dt*1e3:.2f} ms (one launch)")
+
+# the bag IS the user's context vector: nearest items by dot product
+item_rows = table[N_USERS:]
+top = jax.lax.top_k(bags @ item_rows.T, 5)[1]
+jax.block_until_ready(top)
+print("user 0 recommended items:",
+      (N_USERS + np.asarray(top)[0]).tolist())
 print("OK")

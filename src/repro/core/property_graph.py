@@ -1168,6 +1168,179 @@ class PropGraph:
         return traverse.khop_mask(g, seed_mask, e_ok, k=k,
                                   direction=direction, undirected=undirected)
 
+    # -------------------------------------------------- fused sampling (§15)
+    def _sampling_view(self):
+        """(seg, dst, max_deg, perm) windows for the CURRENT effective
+        graph.  A sorted base graph is its own view (perm None); an overlay
+        combined view (``unsorted``) has no valid SEG, so the host lexsorts
+        the combined endpoints ONCE per version into a sampleable CSR —
+        ``perm[j]`` is the global edge id at sorted position j, the gather
+        that routes per-edge filters into window space.  Cached per
+        version: QPS traffic between writes pays the sort once."""
+        g = self._require_graph()
+        if not g.unsorted:
+            return g.seg, g.dst, int(g.max_deg), None
+        cache = getattr(self, "_sample_view_cache", None)
+        if cache is not None and cache[0] == self.version:
+            return cache[1]
+        src_np = np.asarray(g.src)
+        order = np.argsort(src_np, kind="stable").astype(np.int32)
+        seg = np.searchsorted(src_np[order], np.arange(g.n + 1)).astype(np.int32)
+        md = int((seg[1:] - seg[:-1]).max(initial=0))
+        view = (jnp.asarray(seg), jnp.asarray(np.asarray(g.dst)[order]), md,
+                jnp.asarray(order))
+        self._sample_view_cache = (self.version, view)
+        return view
+
+    def _sample_edge_words(self, pattern, perm) -> Optional[jax.Array]:
+        """Packed (uint32-word) edge-allowed bitmap for sampling under the
+        khop-style single-hop filter ``pattern``: an edge is sampleable iff
+        it holds the relationship, satisfies the predicates, its tail
+        matches the ``a`` constraint, its head matches ``b``, AND it is
+        alive in the overlay (tombstoned edges and edges of deleted
+        vertices never appear).  ``perm`` routes the mask into an overlay
+        view's window order.  None = every live edge.  Cached per
+        (version, canonical pattern) so a served pattern packs once."""
+        from repro import traverse
+
+        key = (self.version, None if pattern is None else str(pattern),
+               perm is not None)
+        cache = getattr(self, "_sample_filter_cache", None)
+        if cache is not None and cache[0] == key:
+            return cache[1]
+        g = self._require_graph()
+        v_tail, v_head, e_mask, direction = traverse.single_hop_filters(
+            self, pattern)
+        if direction != 1:
+            raise ValueError(
+                "sampling follows out-edges; reverse-direction filter "
+                "patterns (<-[...]-) are not supported")
+        e_ok = e_mask
+        if v_tail is not None or v_head is not None:
+            e_ok = jnp.ones((g.m,), jnp.bool_) if e_ok is None else e_ok
+            if v_tail is not None:
+                e_ok = e_ok & v_tail[g.src]
+            if v_head is not None:
+                e_ok = e_ok & v_head[g.dst]
+        ae = self._alive_edge_mask()
+        if ae is not None:
+            e_ok = ae if e_ok is None else e_ok & ae
+        if e_ok is None:
+            words = None
+        else:
+            if perm is not None:
+                e_ok = jnp.take(e_ok, perm)
+            words = bitplane.pack_mask(e_ok)
+        self._sample_filter_cache = (key, words)
+        return words
+
+    def _sample_rest(self, frontier, nbrs0, mask0, fanouts, key_or_seed,
+                     seg, dstv, max_deg, ew_words):
+        """Layers 1..L of the layered loop + block assembly, shared by the
+        in-process path and the service's coalesced layer-0 launch (which
+        must finish each request identically to a solo run).  Layer l keys
+        are ``fold_in(base, l)`` — independent per layer; ``key_or_seed``
+        may be the base key array or the plain int seed (then the key is
+        derived in one jitted dispatch, bitwise the eager form)."""
+        from repro.graph.sampler import layer_key, local_block
+        from repro.kernels.neighbor_sample import neighbor_sample
+
+        g = self._require_graph()
+        layer_frontiers = [frontier]
+        layer_samples = [(frontier, nbrs0, mask0)]
+        nxt = np.unique(np.concatenate([frontier, nbrs0[mask0]])).astype(
+            np.int32)
+        layer_frontiers.append(nxt)
+        for li in range(1, len(fanouts)):
+            cur = layer_frontiers[-1]
+            kl = (layer_key(key_or_seed, li)
+                  if isinstance(key_or_seed, (int, np.integer))
+                  else jax.random.fold_in(key_or_seed, li))
+            nb, _ei, mk = neighbor_sample(
+                seg, dstv, g.n, g.m, cur, kl, fanout=fanouts[li],
+                edge_words=ew_words, max_deg=max_deg)
+            nb = np.asarray(nb)[:len(cur)]
+            mk = np.asarray(mk)[:len(cur)]
+            layer_samples.append((cur, nb, mk))
+            layer_frontiers.append(
+                np.unique(np.concatenate([cur, nb[mk]])).astype(np.int32))
+        blocks = []
+        for li in range(len(fanouts) - 1, -1, -1):
+            dst_nodes, nb, mk = layer_samples[li]
+            blocks.append(
+                local_block(dst_nodes, layer_frontiers[li + 1], nb, mk))
+        return blocks
+
+    def sample(self, seeds_or_pattern, fanouts, *, key=None, seed: int = 0,
+               pattern=None, use_pallas: bool = False):
+        """Fused property-filtered neighborhood sampling — the one-launch
+        pattern→sample path (docs/ARCHITECTURE.md §15).
+
+        ``seeds_or_pattern``: original vertex ids, or a Cypher-lite pattern
+        string — then the seeds are the vertices the pattern's FIRST node
+        variable binds, and the packed ``match`` combine's uint32 bitmap
+        feeds the window gather directly (no host unpack; the host reads
+        one popcount scalar to pick the capacity bucket).  ``fanouts``:
+        per-layer caps, innermost first (GraphSAGE order).  ``pattern``:
+        an optional khop-style single-hop filter constraining which edges
+        may be sampled at EVERY layer (relationship, predicates, endpoint
+        labels); overlay tombstones are always excluded.  ``key``/``seed``:
+        the base PRNG key — results are bitwise-reproducible given it
+        (layer l draws from ``fold_in(key, l)`` only).  ``use_pallas``
+        opts the TPU window kernel in for layer 0.
+
+        Returns ``SampledBlock``s innermost-first (``blocks[-1].dst_nodes``
+        = the seed batch); node ids are INTERNAL [0, n) ids — index device
+        property columns/embedding tables directly, or map back through
+        ``graph.node_map``.  Selection is uniform without replacement over
+        each seed's filtered adjacency: degree-0 seeds emit fully-masked
+        slots, filtered degree ≤ fanout keeps every allowed edge once.
+        Unknown and tombstoned seed ids drop out (the ``khop`` rule).
+        """
+        from repro.kernels.neighbor_sample import (
+            neighbor_sample,
+            neighbor_sample_from_words,
+        )
+
+        g = self._require_graph()
+        fanouts = [int(f) for f in fanouts]
+        if not fanouts or min(fanouts) < 1:
+            raise ValueError(f"fanouts must be ≥1 per layer, got {fanouts}")
+        from repro.graph.sampler import layer_key
+
+        seg, dstv, max_deg, perm = self._sampling_view()
+        ew_words = self._sample_edge_words(pattern, perm)
+        key_or_seed = int(seed) if key is None else key
+        k0 = (layer_key(key_or_seed, 0) if key is None
+              else jax.random.fold_in(key, 0))
+        if isinstance(seeds_or_pattern, str) or hasattr(seeds_or_pattern,
+                                                        "nodes"):
+            res = self.match(seeds_or_pattern)
+            seed_mask = (res.node_masks[0] if res.node_masks
+                         else res.vertex_mask)
+            words = bitplane.pack_mask(seed_mask)
+            count = int(jnp.sum(seed_mask))  # the one host scalar read
+            idx, valid, nb, _ei, mk = neighbor_sample_from_words(
+                seg, dstv, g.n, g.m, words, count, k0,
+                fanout=fanouts[0], edge_words=ew_words, max_deg=max_deg)
+            keep = np.asarray(valid)
+            frontier = np.asarray(idx)[keep].astype(np.int32)
+            nbrs0, mask0 = np.asarray(nb)[keep], np.asarray(mk)[keep]
+        else:
+            ids = self._vertex_internal(seeds_or_pattern)
+            ids = ids[ids >= 0]
+            if self._dead_v is not None and ids.size:
+                ids = ids[~self._dead_v[ids]]
+            nb, _ei, mk = neighbor_sample(
+                seg, dstv, g.n, g.m, ids, k0, fanout=fanouts[0],
+                edge_words=ew_words, max_deg=max_deg,
+                use_pallas=use_pallas)
+            frontier = ids.astype(np.int32)
+            nbrs0 = np.asarray(nb)[:len(ids)]
+            mask0 = np.asarray(mk)[:len(ids)]
+        return self._sample_rest(frontier, nbrs0, mask0, fanouts, key_or_seed,
+                                 seg, dstv, max_deg, ew_words)
+
     def components(self, pattern=None, *, max_iters: int = 128) -> jax.Array:
         """Connected components of the subgraph the filter ``pattern``
         allows — (n,) int32 labels (component id = smallest member vertex

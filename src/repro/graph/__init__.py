@@ -7,7 +7,15 @@ from repro.graph.generators import (
     random_uniform_graph,
     rmat_graph,
 )
-from repro.graph.sampler import SampledBlock, block_shapes, sample_block, sample_layers
+from repro.graph.sampler import (
+    SampledBlock,
+    block_shapes,
+    layer_key,
+    layer_keys_batch,
+    local_block,
+    sample_block,
+    sample_layers,
+)
 from repro.graph.segment_ops import (
     degree_norm,
     gather_scatter,
@@ -27,6 +35,9 @@ __all__ = [
     "rmat_graph",
     "SampledBlock",
     "block_shapes",
+    "layer_key",
+    "layer_keys_batch",
+    "local_block",
     "sample_block",
     "sample_layers",
     "degree_norm",

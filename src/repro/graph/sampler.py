@@ -6,24 +6,35 @@ emitting one bipartite block per layer.  The DI structure makes the inner
 gather an offset lookup + contiguous slice (``SEG``/``DST``), exactly the
 paper's neighborhood access path.
 
-Sampling runs on-device (static shapes, jittable) so the data pipeline can be
-pipelined with training; padded slots are masked (edge weight 0 → no message).
-Blocks are emitted with *local* (re-normalized) ids so downstream layers
-operate on compact arrays, as production GNN systems do.
+Sampling runs on-device (static shapes, jittable) so the data pipeline can
+be pipelined with training; padded slots are masked (edge weight 0 → no
+message).  Blocks are emitted with *local* (re-normalized) ids so
+downstream layers operate on compact arrays, as production GNN systems do.
+
+Selection is uniform WITHOUT replacement over the (optionally packed-mask
+filtered) adjacency — the ``kernels/neighbor_sample`` window-priority core
+(docs/ARCHITECTURE.md §15): degree-0 seeds come out fully masked, and
+degree ≤ fanout keeps every allowed edge exactly once.  Per-layer PRNG
+keys are derived with ``jax.random.fold_in(key, layer)`` — NOT by
+splitting and reusing the caller's key — so layers are independent no
+matter what key callers pass, and layer l's draw doesn't shift when other
+layers are added or removed.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.di import DIGraph
+from repro.kernels.neighbor_sample.ops import _window_select, bucketed_window
 
-__all__ = ["SampledBlock", "sample_block", "sample_layers", "block_shapes"]
+__all__ = ["SampledBlock", "sample_block", "sample_layers", "block_shapes",
+           "layer_key", "layer_keys_batch"]
 
 
 @partial(
@@ -39,52 +50,104 @@ class SampledBlock:
     dst_nodes: (n_dst,) global ids updated by this layer
     edge_src/edge_dst: (n_edges,) *local* indices into src_nodes/dst_nodes
     edge_mask: (n_edges,) bool — False for padded sample slots
+
+    Fields are HOST (numpy) arrays: block assembly is host-side compaction
+    and every serving consumer (wire framing, renumbering, caching) reads
+    them on the host, so eager device puts here would be pure dispatch
+    overhead on the QPS path.  The dataclass is still a registered pytree —
+    pass a block into jit and the leaves convert on entry.
     """
 
-    src_nodes: jax.Array
-    dst_nodes: jax.Array
-    edge_src: jax.Array
-    edge_dst: jax.Array
-    edge_mask: jax.Array
+    src_nodes: np.ndarray
+    dst_nodes: np.ndarray
+    edge_src: np.ndarray
+    edge_dst: np.ndarray
+    edge_mask: np.ndarray
     n_src: int
     n_dst: int
     n_edges: int
 
 
+@jax.jit
+def layer_key(seed, layer) -> jax.Array:
+    """``fold_in(PRNGKey(seed), layer)`` as ONE compiled dispatch.
+
+    The eager two-dispatch form costs ~300µs of host overhead per request
+    on the serving path; this is the same computation jitted, so the
+    resulting key is bitwise the eager one (pinned by tests)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), layer)
+
+
+# (R,) seed scalars → (R, 2) layer-l keys in one dispatch — the service
+# builds a coalesced group's per-row keys with this.  vmap of the same
+# scalar computation: row r equals layer_key(seed[r], layer) bitwise.
+layer_keys_batch = jax.jit(jax.vmap(layer_key, in_axes=(0, None)))
+
+
 @partial(jax.jit, static_argnames=("fanout",))
 def sample_block(
-    g: DIGraph, seeds: jax.Array, key: jax.Array, *, fanout: int
+    g: DIGraph, seeds: jax.Array, key: jax.Array, *, fanout: int,
+    edge_words: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Sample ≤ fanout out-neighbors per seed.  Returns (neighbors, mask),
-    both (len(seeds), fanout).  With replacement when degree > fanout is
-    sampled (uniform over the adjacency slice), without duplicates otherwise
-    is NOT guaranteed — matching GraphSAGE's uniform-with-replacement."""
-    start = g.seg[seeds]
-    deg = g.seg[seeds + 1] - start
-    u = jax.random.uniform(key, (seeds.shape[0], fanout))
-    offs = jnp.floor(u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
-    idx = jnp.clip(start[:, None] + offs, 0, max(g.m - 1, 0))
-    mask = (deg > 0)[:, None] & jnp.ones((1, fanout), jnp.bool_)
-    nbrs = jnp.where(mask, g.dst[idx], 0)
+    """Sample ≤ fanout out-neighbors per seed, uniform WITHOUT replacement
+    over the adjacency slice (filtered by the packed ``edge_words`` bitmap
+    when given).  Returns (neighbors, mask), both (len(seeds), fanout);
+    masked slots hold -1.  Degree-0 seeds are fully masked; degree ≤
+    fanout yields every (allowed) neighbor exactly once."""
+    window = bucketed_window(max(g.max_deg, fanout))
+    u = jax.random.uniform(key, (seeds.shape[0], window))
+    valid = jnp.ones((seeds.shape[0],), bool)
+    nbrs, _eids, mask = _window_select(
+        g.seg, g.dst, g.m, g.n, seeds, valid, edge_words, u, fanout)
     return nbrs, mask
 
 
+def local_block(dst_nodes: np.ndarray, src_nodes: np.ndarray,
+                nbrs: np.ndarray, mask: np.ndarray) -> SampledBlock:
+    """Renumber one layer's (dst_nodes, sampled nbrs) into a local-id
+    bipartite block.  ``src_nodes`` must be sorted unique and contain every
+    unmasked neighbor; renumbering is by binary search, so local ids are a
+    pure function of the global id sets — stable across runs and identical
+    however the sample was produced (host loop or fused service path)."""
+    pos = np.searchsorted(src_nodes, nbrs.ravel())
+    pos = np.clip(pos, 0, max(len(src_nodes) - 1, 0))
+    ok = (src_nodes[pos] == nbrs.ravel()) & mask.ravel()
+    edge_src = np.where(ok, pos, 0).astype(np.int32)
+    edge_dst = np.repeat(
+        np.arange(len(dst_nodes), dtype=np.int32), nbrs.shape[1])
+    return SampledBlock(
+        src_nodes=np.asarray(src_nodes),
+        dst_nodes=np.asarray(dst_nodes),
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_mask=ok,
+        n_src=int(len(src_nodes)),
+        n_dst=int(len(dst_nodes)),
+        n_edges=int(edge_src.shape[0]),
+    )
+
+
 def sample_layers(
-    g: DIGraph, seeds: np.ndarray, fanouts: Sequence[int], *, seed: int = 0
+    g: DIGraph, seeds: np.ndarray, fanouts: Sequence[int], *, seed: int = 0,
+    key: Optional[jax.Array] = None,
+    edge_words: Optional[jax.Array] = None,
 ) -> List[SampledBlock]:
     """Multi-layer fanout sampling (innermost layer first, GraphSAGE order).
 
     Host-driven compaction between layers (unique) keeps block sizes tight;
-    per-layer device sampling stays jitted.  Returns blocks ordered for a
+    per-layer device sampling stays jitted.  Layer l's key is
+    ``fold_in(base, l)`` (module docstring).  Returns blocks ordered for a
     forward pass: blocks[0] aggregates the widest frontier.
     """
-    key = jax.random.PRNGKey(seed)
+    base = jax.random.PRNGKey(seed) if key is None else key
     frontier = np.asarray(seeds, np.int32)
     layer_frontiers = [frontier]
     layer_samples = []
     for li, f in enumerate(fanouts):
-        key, sub = jax.random.split(key)
-        nbrs, mask = sample_block(g, jnp.asarray(frontier), sub, fanout=int(f))
+        sub = jax.random.fold_in(base, li)
+        nbrs, mask = sample_block(
+            g, jnp.asarray(frontier), sub, fanout=int(f),
+            edge_words=edge_words)
         nbrs_np, mask_np = np.asarray(nbrs), np.asarray(mask)
         layer_samples.append((frontier, nbrs_np, mask_np))
         nxt = np.unique(np.concatenate([frontier, nbrs_np[mask_np]]))
@@ -95,24 +158,7 @@ def sample_layers(
     for li in range(len(fanouts) - 1, -1, -1):
         dst_nodes, nbrs_np, mask_np = layer_samples[li]
         src_nodes = layer_frontiers[li + 1]
-        # local ids
-        pos = np.searchsorted(src_nodes, nbrs_np.ravel())
-        pos = np.clip(pos, 0, len(src_nodes) - 1)
-        ok = (src_nodes[pos] == nbrs_np.ravel()) & mask_np.ravel()
-        edge_src = np.where(ok, pos, 0).astype(np.int32)
-        edge_dst = np.repeat(np.arange(len(dst_nodes), dtype=np.int32), nbrs_np.shape[1])
-        blocks.append(
-            SampledBlock(
-                src_nodes=jnp.asarray(src_nodes),
-                dst_nodes=jnp.asarray(dst_nodes),
-                edge_src=jnp.asarray(edge_src),
-                edge_dst=jnp.asarray(edge_dst),
-                edge_mask=jnp.asarray(ok),
-                n_src=int(len(src_nodes)),
-                n_dst=int(len(dst_nodes)),
-                n_edges=int(edge_src.shape[0]),
-            )
-        )
+        blocks.append(local_block(dst_nodes, src_nodes, nbrs_np, mask_np))
     return blocks
 
 

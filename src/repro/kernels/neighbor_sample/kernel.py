@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: per-seed adjacency-window gather + filtered select.
+
+The TPU lowering of ``ops._window_select``: per seed, one contiguous
+HBM→VMEM DMA of its ``DST`` window (``pl.dslice(start, W)`` — the DIP
+contiguity the paper builds SEG/DST for), the packed edge-mask words
+covering that window loaded the same way and bit-expanded in-register
+(no bool plane ever materializes), then ``fanout`` rounds of
+argmin-extract over the priority row.  ``jnp.argmin`` takes the first
+occurrence on ties, matching ``lax.top_k``'s lower-index-first rule on
+the negated matrix, so this lowering is bitwise the XLA one given the
+same priorities — tests pin that in interpret mode.
+
+Priorities are drawn by the CALLER with ``jax.random`` (ops.py): the
+kernel is deterministic given its inputs, which is what keeps TPU and
+CPU serving bitwise-identical for a fixed PRNG key.
+
+Sizing: seeds are tiled ``st ≤ 128`` per grid step; the priority tile
+(st, W) f32 and one (1, W) window row live in VMEM (W = bucketed window,
+f32 tile ≤ 128·1024·4 B at the largest realistic bucket); ``start``/
+``deg`` are scalar-prefetched in SMEM; DST and the edge words stay in
+ANY/HBM and are sliced per seed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bitplane
+
+DEFAULT_ST = 128
+
+
+def _select_kernel(start_ref, deg_ref, pri_ref, dst_ref, ew_ref,
+                   nbr_ref, eid_ref, msk_ref, *,
+                   st: int, W: int, wt: int, fanout: int):
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+    neg1 = jnp.full((1, 1), -1, jnp.int32)
+
+    def seed_body(i, carry):
+        s0 = start_ref[0, i]
+        dg = deg_ref[0, i]
+        win = pl.load(dst_ref, (pl.dslice(s0, W),))[None, :]  # (1, W) DMA
+        # packed-word window covering bits [s0, s0+W): wt words starting at
+        # word s0>>5; lane l is bit b = (s0 & 31) + l of that window
+        wwin = pl.load(ew_ref, (pl.dslice(s0 >> 5, wt),))
+        b = (s0 & 31) + lane
+        bit = jnp.zeros((1, W), jnp.int32)
+        for wi in range(wt):  # static unroll — wt = W//32 + 1
+            word = wwin[wi]
+            bit = bit | jnp.where(
+                (b >> 5) == wi,
+                ((word >> (b & 31).astype(jnp.uint32)) &
+                 jnp.uint32(1)).astype(jnp.int32),
+                0)
+        allowed = (lane < dg) & (bit == 1)
+        pri = pl.load(pri_ref, (pl.dslice(i, 1), slice(None)))  # (1, W)
+        pri = jnp.where(allowed, pri, jnp.float32(jnp.inf))
+        for k in range(fanout):  # static unroll: argmin-extract rounds
+            v = jnp.min(pri)
+            idx = jnp.argmin(pri).astype(jnp.int32)  # first-occurrence ties
+            hit = lane == idx
+            ok = v < jnp.float32(jnp.inf)
+            nbr = jnp.sum(jnp.where(hit, win, 0))  # win[idx], gather-free
+            pl.store(nbr_ref, (pl.dslice(i, 1), pl.dslice(k, 1)),
+                     jnp.where(ok, nbr, -1).reshape(1, 1))
+            pl.store(eid_ref, (pl.dslice(i, 1), pl.dslice(k, 1)),
+                     jnp.where(ok, s0 + idx, neg1[0, 0]).reshape(1, 1))
+            pl.store(msk_ref, (pl.dslice(i, 1), pl.dslice(k, 1)),
+                     ok.astype(jnp.int32).reshape(1, 1))
+            pri = jnp.where(hit, jnp.float32(jnp.inf), pri)
+        return carry
+
+    jax.lax.fori_loop(0, st, seed_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fanout", "interpret"))
+def window_select_pallas(start: jax.Array, deg: jax.Array, dst: jax.Array,
+                         ew_words, pri: jax.Array, *, m: int, fanout: int,
+                         interpret=None):
+    """start/deg: (S,) int32 window offsets + effective degrees (0 for pad
+    seeds); dst: (m,) int32; ew_words: packed uint32 edge bitmap or None
+    (= all allowed); pri: (S, W) f32.  Returns (nbrs, eids, mask) shaped
+    (S, fanout), -1 sentinels in masked slots — the ``_window_select``
+    contract."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S, W = pri.shape
+    wt = W // 32 + 1
+    st = min(DEFAULT_ST, S)
+    assert S % st == 0, (S, st)
+    # pad DST and the word plane so the fixed-size window DMAs of the last
+    # edges stay in bounds (padding is never selected: lane < deg excludes it)
+    dst_pad = jnp.concatenate([dst.astype(jnp.int32),
+                               jnp.zeros((W,), jnp.int32)])
+    nw = bitplane.n_words(max(m, 1))
+    if ew_words is None:
+        ew = jnp.full((nw,), 0xFFFFFFFF, jnp.uint32)
+    else:
+        ew = ew_words.astype(jnp.uint32)
+    ew_pad = jnp.concatenate([ew, jnp.zeros((wt,), jnp.uint32)])
+
+    nbrs, eids, msk = pl.pallas_call(
+        functools.partial(_select_kernel, st=st, W=W, wt=wt, fanout=fanout),
+        grid=(S // st,),
+        in_specs=[
+            pl.BlockSpec((1, st), lambda b: (0, b), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, st), lambda b: (0, b), memory_space=pltpu.SMEM),
+            pl.BlockSpec((st, W), lambda b: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # DST stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # packed words in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((st, fanout), lambda b: (b, 0)),
+            pl.BlockSpec((st, fanout), lambda b: (b, 0)),
+            pl.BlockSpec((st, fanout), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, fanout), jnp.int32),
+            jax.ShapeDtypeStruct((S, fanout), jnp.int32),
+            jax.ShapeDtypeStruct((S, fanout), jnp.int32),
+        ],
+        interpret=interpret,
+    )(start.reshape(1, S).astype(jnp.int32),
+      deg.reshape(1, S).astype(jnp.int32),
+      pri.astype(jnp.float32), dst_pad, ew_pad)
+    return nbrs, eids, msk.astype(bool)

@@ -1,0 +1,105 @@
+"""Numpy oracle for the neighbor_sample kernels.
+
+Two layers of reference, matching how the device path splits randomness
+from selection:
+
+* :func:`select_by_priority_ref` — EXACT selection given a priority
+  matrix: per seed, the ``fanout`` allowed window lanes with the smallest
+  priorities, ascending, ties to the lower lane.  The device path draws
+  its priorities with ``jax.random`` and selects with ``lax.top_k`` over
+  the negated matrix; feeding the same priorities here must reproduce the
+  device output bit for bit (tests/test_sample.py pins it), so the oracle
+  checks the *algorithm*, not the RNG.
+* :func:`check_sample` — structural validation of any sampled output
+  against the CSR + edge filter, independent of randomness: every
+  unmasked slot is a real, filter-allowed edge of its seed; no slot is
+  sampled twice (without replacement); the number of unmasked slots is
+  exactly ``min(fanout, filtered degree)``; masked slots hold the -1
+  sentinel.  This is what the benches verify before timing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["filtered_degrees", "select_by_priority_ref", "check_sample"]
+
+
+def filtered_degrees(seg: np.ndarray, edge_ok, seeds: np.ndarray) -> np.ndarray:
+    """Per-seed count of adjacency-window edges the filter allows."""
+    seg = np.asarray(seg)
+    seeds = np.asarray(seeds)
+    out = np.zeros(seeds.shape[0], np.int64)
+    for i, s in enumerate(seeds):
+        lo, hi = int(seg[s]), int(seg[s + 1])
+        if edge_ok is None:
+            out[i] = hi - lo
+        else:
+            out[i] = int(np.asarray(edge_ok[lo:hi]).sum())
+    return out
+
+
+def select_by_priority_ref(seg, dst, seeds, edge_ok, priorities, fanout: int):
+    """Reference selection: smallest-priority allowed lanes per seed.
+
+    ``priorities`` is (S, W) float; lane w of seed i corresponds to global
+    edge ``seg[seeds[i]] + w`` while in window.  Returns ``(nbrs, eids,
+    mask)`` shaped (S, fanout): global neighbor ids / edge ids (-1 where
+    masked), and the validity mask.
+    """
+    seg = np.asarray(seg)
+    dst = np.asarray(dst)
+    seeds = np.asarray(seeds)
+    pri = np.asarray(priorities, np.float64)
+    S, W = pri.shape
+    nbrs = np.full((S, fanout), -1, np.int64)
+    eids = np.full((S, fanout), -1, np.int64)
+    mask = np.zeros((S, fanout), bool)
+    for i in range(S):
+        s = int(seeds[i])
+        lo, hi = int(seg[s]), int(seg[s + 1])
+        deg = min(hi - lo, W)
+        lanes = [
+            w for w in range(deg)
+            if edge_ok is None or bool(np.asarray(edge_ok[lo + w]))
+        ]
+        # stable sort on priority → ties break to the lower lane, matching
+        # lax.top_k's documented lower-index-first tie rule on -priority
+        lanes.sort(key=lambda w: (pri[i, w], w))
+        for k, w in enumerate(lanes[:fanout]):
+            eids[i, k] = lo + w
+            nbrs[i, k] = dst[lo + w]
+            mask[i, k] = True
+    return nbrs, eids, mask
+
+
+def check_sample(seg, dst, seeds, edge_ok, fanout: int,
+                 nbrs, eids, mask) -> None:
+    """Raise AssertionError unless (nbrs, eids, mask) is a valid
+    without-replacement uniform-candidate sample of the filtered
+    adjacency (module docstring).  RNG-independent."""
+    seg = np.asarray(seg)
+    dst = np.asarray(dst)
+    seeds = np.asarray(seeds)
+    nbrs = np.asarray(nbrs)
+    eids = np.asarray(eids)
+    mask = np.asarray(mask)
+    want = np.minimum(filtered_degrees(seg, edge_ok, seeds), fanout)
+    got = mask.sum(axis=1)
+    assert (got == want).all(), (
+        f"sampled-slot counts {got.tolist()} != min(fanout, filtered deg) "
+        f"{want.tolist()}")
+    for i, s in enumerate(seeds):
+        lo, hi = int(seg[s]), int(seg[s + 1])
+        live = eids[i][mask[i]]
+        assert len(set(live.tolist())) == len(live), (
+            f"seed {s}: duplicate edges sampled: {live.tolist()}")
+        for e in live.tolist():
+            assert lo <= e < hi, f"seed {s}: edge {e} outside window [{lo},{hi})"
+            if edge_ok is not None:
+                assert bool(np.asarray(edge_ok[e])), (
+                    f"seed {s}: filtered-out edge {e} sampled")
+        assert (nbrs[i][mask[i]] == dst[live]).all(), (
+            f"seed {s}: neighbor ids disagree with DST at sampled edges")
+        assert (nbrs[i][~mask[i]] == -1).all(), (
+            f"seed {s}: masked slots must hold -1, got {nbrs[i][~mask[i]]}")
+        assert (eids[i][~mask[i]] == -1).all()

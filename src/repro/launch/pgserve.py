@@ -352,6 +352,17 @@ def _assert_wire_result_matches(got, ref, context) -> None:
         assert (np.asarray(gb[k]) == np.asarray(rb[k])).all(), (context, k)
 
 
+def _assert_blocks_equal(got, ref, context) -> None:
+    """Sampled block lists match bitwise — field by field, layer by layer
+    (works across ``SampledBlock`` and ``WireSampledBlock``)."""
+    assert len(got) == len(ref), (context, len(got), len(ref))
+    for li, (bg, br) in enumerate(zip(got, ref)):
+        for f in ("src_nodes", "dst_nodes", "edge_src", "edge_dst",
+                  "edge_mask"):
+            a, b = np.asarray(getattr(bg, f)), np.asarray(getattr(br, f))
+            assert a.shape == b.shape and (a == b).all(), (context, li, f)
+
+
 def _packed_parity_block(m: int, seed: int) -> None:
     """Packed ≡ byte mask-plane gate (docs/ARCHITECTURE.md §14): the same
     tenant graph built with the bit-packed plane and with the
@@ -461,6 +472,33 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
                     np.asarray(refs[b].communities())), ("communities", b)
             print("pgserve net smoke: weighted analytics ≡ in-process OK",
                   flush=True)
+            # fused sampling over the wire (§15): deterministic-mode blocks
+            # are bitwise the in-process ``PropGraph.sample`` ones on every
+            # backend — explicit seeds, pattern seeds with an edge filter,
+            # and a pipelined burst the server coalesces into one launch
+            # per (graph, fanouts, bucket) group
+            for b in backends:
+                nb = np.asarray(refs[b].graph.node_map)
+                _assert_blocks_equal(
+                    c.sample(b, nb[:48], [4, 3], seed=7),
+                    refs[b].sample(nb[:48], [4, 3], seed=7),
+                    ("net sample", b))
+            nb = np.asarray(refs["arr"].graph.node_map)
+            _assert_blocks_equal(
+                c.sample("arr", "(a:l0)", [4],
+                         pattern="(a)-[:follows]->(b)", seed=3),
+                refs["arr"].sample("(a:l0)", [4],
+                                   pattern="(a)-[:follows]->(b)", seed=3),
+                "net pattern sample")
+            shs = [c.submit_sample("arr", nb[8 * i:8 * i + 24], [3], seed=i)
+                   for i in range(6)]
+            for i, h in enumerate(shs):
+                _assert_blocks_equal(
+                    h.result(),
+                    refs["arr"].sample(nb[8 * i:8 * i + 24], [3], seed=i),
+                    ("net pipelined sample", i))
+            print("pgserve net smoke: fused sampling ≡ in-process OK",
+                  flush=True)
             # explain crosses the wire as text
             assert "plan" in c.explain("arr", pool[0]).lower()
             # variable-length traversal over the wire: frontier-engine
@@ -555,6 +593,14 @@ def net_smoke(m: int = 600, seed: int = 0, tmp_dir: Optional[str] = None) -> Non
                         c.pagerank("sharded"),
                         np.asarray(refs["arr"].pagerank()),
                         atol=1e-5), "sharded pagerank"
+                    # fused sampling against the mesh-placed reopen, driven
+                    # cross-process: sampling stays owner-device local and
+                    # the blocks come back bitwise the unsharded ones
+                    _assert_blocks_equal(
+                        c.sample("sharded", seeds.astype(np.int64), [4],
+                                 seed=5),
+                        refs["arr"].sample(seeds, [4], seed=5),
+                        "sharded sample")
                     print(f"pgserve net smoke: sharded P={devices} ≡ "
                           "single-device OK", flush=True)
                 else:
@@ -719,6 +765,39 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
         svc.drop_graph(snap)
     print("pgserve smoke: overlay snapshot/fork/compact OK")
 
+    # fused neighborhood sampling through the service (§15): deterministic
+    # requests are bitwise the direct ``PropGraph.sample`` blocks —
+    # explicit and pattern seeds, filtered and unfiltered, multi-layer;
+    # a coalesced burst launches once per (graph, fanouts, bucket) group
+    # with every row still bitwise its solo run; deterministic repeats hit
+    # the result cache
+    pg = build_tenant_graph("arr", m, seed=seed)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        nodes = np.asarray(pg.graph.node_map)
+        for fanouts, filt in (([4, 3], None),
+                              ([5], "(a)-[:follows]->(b)")):
+            _assert_blocks_equal(
+                svc.sample("g", nodes[:48], fanouts, pattern=filt, seed=7),
+                pg.sample(nodes[:48], fanouts, pattern=filt, seed=7),
+                ("sample", fanouts, filt))
+        _assert_blocks_equal(
+            svc.sample("g", "(a:l0)", [4], pattern="(a)-[:likes]->(b)",
+                       seed=3),
+            pg.sample("(a:l0)", [4], pattern="(a)-[:likes]->(b)", seed=3),
+            "pattern-seed sample")
+        specs = [(nodes[8 * i:8 * i + 32], i) for i in range(8)]
+        launches0 = svc.stats().get("sample_coalesced_launches", 0)
+        batch = svc.sample_batch("g", specs, [3])
+        assert svc.stats().get("sample_coalesced_launches", 0) == launches0 + 1
+        for (s, sv), bl in zip(specs, batch):
+            _assert_blocks_equal(bl, pg.sample(s, [3], seed=sv),
+                                 ("coalesced sample", sv))
+        hits0 = svc.stats().get("result_hits", 0)
+        svc.sample("g", nodes[:48], [4, 3], seed=7)
+        assert svc.stats().get("result_hits", 0) > hits0, "sample cache miss"
+    print("pgserve smoke: fused sampling ≡ in-process OK")
+
     # observability (§13): EXPLAIN ANALYZE splits compile from steady-state,
     # the metrics exposition parses and agrees with stats(), counters are
     # monotonic across a second burst, the trace ring holds full span trees,
@@ -784,6 +863,15 @@ def smoke(m: int = 600, requests: int = 24, concurrency: int = 4,
                 np.asarray(pg1.shortest_paths(seeds, weight="w")))
             assert np.allclose(svc.pagerank("sharded", weight="w"),
                                np.asarray(pg1.pagerank(weight="w")), atol=1e-5)
+            # fused sampling on the mesh: the seed bitmap and packed edge
+            # filter live word-sharded, the draw is replicated — blocks
+            # are bitwise the unsharded graph's (§15 locality rule)
+            _assert_blocks_equal(
+                svc.sample("sharded", np.asarray(pg1.graph.node_map)[:32],
+                           [4], pattern="(a)-[:follows]->(b)", seed=5),
+                pg1.sample(np.asarray(pg1.graph.node_map)[:32], [4],
+                           pattern="(a)-[:follows]->(b)", seed=5),
+                "mesh sample")
         print(f"pgserve smoke: mesh P={len(mesh.devices)} ≡ single-device OK")
     else:
         print("pgserve smoke: mesh check skipped (1 device)")

@@ -34,7 +34,7 @@ from repro.obs.trace import new_trace_id
 from repro.service import wire
 from repro.service.wire import WireMatchResult
 
-__all__ = ["PGClient", "PGFuture"]
+__all__ = ["PGClient", "PGFuture", "PGSampleFuture"]
 
 
 class PGFuture:
@@ -60,6 +60,26 @@ class PGFuture:
         if "result" in header:
             return wire.wire_to_result(header["result"], arrays)
         return header
+
+
+class PGSampleFuture:
+    """Handle for one pipelined ``sample`` request; ``result()`` → block
+    list.  ``trace`` fills in after resolution like :class:`PGFuture`."""
+
+    def __init__(self, client: "PGClient", rid: int,
+                 trace_id: Optional[str] = None):
+        self._client = client
+        self._rid = rid
+        self.trace_id = trace_id
+        self.trace: Optional[Dict] = None
+
+    def result(self, timeout: Optional[float] = None
+               ) -> List[wire.WireSampledBlock]:
+        header, arrays = self._client._wait_frame(self._rid, timeout=timeout)
+        self.trace = header.get("trace")
+        if self.trace is not None:
+            self._client.last_trace = self.trace
+        return wire.wire_to_blocks(header["sample"], arrays)
 
 
 class PGClient:
@@ -195,6 +215,45 @@ class PGClient:
                 impl: Optional[str] = None) -> str:
         return self._call("explain", graph=graph, pattern=pattern,
                           impl=impl)["explain"]
+
+    # ------------------------------------------------------------- sampling
+    def submit_sample(self, graph: str, seeds_or_pattern, fanouts, *,
+                      pattern: Optional[str] = None, seed: int = 0,
+                      deterministic: bool = True) -> "PGSampleFuture":
+        """Pipelined fused neighborhood sample (ARCHITECTURE §15).
+
+        ``seeds_or_pattern`` is either a Cypher-lite pattern string (seeds
+        = its matched anchor vertices, selected server-side without the
+        mask ever visiting this client) or an array of external vertex
+        ids.  ``pattern`` filters which EDGES may be sampled; ``seed``
+        keys the PRNG — with ``deterministic=True`` the result is bitwise
+        reproducible (and server-cacheable), with ``deterministic=False``
+        the server mixes in fresh entropy per request.  Handles returned
+        before any ``result()`` call land in the server's batching window
+        together and coalesce into one launch per (graph, fanouts,
+        bucket) group."""
+        fanouts = [int(f) for f in fanouts]
+        tid = new_trace_id() if self.trace else None
+        fields = dict(graph=graph, fanouts=fanouts, pattern=pattern,
+                      seed=int(seed), deterministic=bool(deterministic),
+                      trace=tid)
+        if isinstance(seeds_or_pattern, str):
+            rid = self._send("sample", seed_pattern=seeds_or_pattern,
+                             **fields)
+        else:
+            rid = self._send(
+                "sample", [np.asarray(seeds_or_pattern, np.int64)], **fields)
+        return PGSampleFuture(self, rid, trace_id=tid)
+
+    def sample(self, graph: str, seeds_or_pattern, fanouts, *,
+               pattern: Optional[str] = None, seed: int = 0,
+               deterministic: bool = True) -> List[wire.WireSampledBlock]:
+        """Blocking fused sample → ``WireSampledBlock`` list (innermost
+        layer first, ids in the server graph's internal space — bitwise
+        the in-process ``PropGraph.sample`` blocks for the same key)."""
+        return self.submit_sample(
+            graph, seeds_or_pattern, fanouts, pattern=pattern, seed=seed,
+            deterministic=deterministic).result()
 
     # ------------------------------------------------------------ analytics
     def shortest_paths(self, graph: str, seeds, *,

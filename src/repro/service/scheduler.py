@@ -35,7 +35,11 @@ Two pieces, both policy-free about caches (the ``Service`` owns those):
   batch.  The window is ADAPTIVE by default: when the queue is empty at
   dequeue time (an idle service, c=1) the request executes immediately —
   no latency tax for batching that cannot happen — and the window opens
-  only under queue pressure, where waiting actually buys coalescing.
+  only under queue pressure, where waiting actually buys coalescing; it
+  also CLOSES early once the queue has stayed empty for a short grace
+  period (``grace_ms``): coalescible arrivals land µs apart, so a queue
+  that stays dry for the grace means every in-flight client is blocked
+  on this very batch and the rest of the window would be pure stall.
   Single worker by design: device work serializes anyway, and one consumer
   makes version reads and cache updates race-free.
 """
@@ -139,13 +143,15 @@ class MicroBatcher:
 
     def __init__(self, execute_batch: Callable[[List], None], *,
                  max_batch: int = 32, window_ms: float = 2.0,
-                 adaptive: bool = True, metrics=None):
+                 adaptive: bool = True, grace_ms: float = 0.25,
+                 metrics=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be ≥ 1, got {max_batch}")
         self._execute_batch = execute_batch
         self.max_batch = max_batch
         self.window_s = window_ms / 1e3
         self.adaptive = adaptive
+        self.grace_s = grace_ms / 1e3
         # optional obs.MetricsRegistry: batch occupancy + window wait
         # histograms (docs/ARCHITECTURE.md §13); instruments are created
         # here once so the worker loop never enters the registry lock
@@ -209,8 +215,18 @@ class MicroBatcher:
                 try:
                     # remaining == 0 (window_ms=0 or expired) still drains
                     # whatever is already queued, without blocking
-                    req = (self._queue.get_nowait() if remaining == 0.0
-                           else self._queue.get(timeout=remaining))
+                    if remaining == 0.0:
+                        req = self._queue.get_nowait()
+                    elif self.adaptive:
+                        # arrivals that will coalesce land µs apart; a
+                        # queue that stays empty for a full grace period
+                        # means nothing else is coming this window (a
+                        # closed-loop client set is blocked on THIS batch)
+                        # — execute instead of burning the rest of it
+                        req = self._queue.get(
+                            timeout=min(remaining, self.grace_s))
+                    else:
+                        req = self._queue.get(timeout=remaining)
                 except queue.Empty:
                     break
                 if req is self._SENTINEL:

@@ -33,6 +33,13 @@ Request ops (header ``{"op": ..., "id": ...}`` + optional array blobs):
                                        frontier engine (§12); the (n,)
                                        result vector rides back as an
                                        array blob
+    sample {graph, fanouts, ...}     fused neighborhood sampling (§15):
+                                       seeds as an id array or a
+                                       ``seed_pattern``; async like query
+                                       so the scheduler coalesces sample
+                                       requests across sessions into one
+                                       batched launch; blocks return as
+                                       packed masks + index arrays
     snapshot {graph, name?}          pin a frozen snapshot, register it
     fork_view {graph, name?}         writable copy-on-write view
     drop_view {name}                 unregister a snapshot/fork
@@ -318,6 +325,9 @@ class PGServer:
             if op == "query":
                 self._op_query(sess, rid, header)
                 return  # response rides the future callback
+            if op == "sample":
+                self._op_sample(sess, rid, header, arrays)
+                return  # response rides the future callback
             handler = getattr(self, f"_op_{op}", None)
             if handler is None:
                 raise ValueError(f"unknown op {op!r}")
@@ -369,6 +379,52 @@ class PGServer:
                 tr.root.t1 = t1  # extend the root over serialization; the
                 # service pushed this trace into its ring at resolve time,
                 # and rings hold live objects, so the span is visible there
+                hdr["trace"] = tr.to_dict()
+            sess.send(hdr, out)
+
+        fut.add_done_callback(_respond)
+
+    def _op_sample(self, sess: _Session, rid, header: Dict, arrays) -> None:
+        """Fused neighborhood sampling over the wire (§15).  Seeds arrive
+        either as ``header["seed_pattern"]`` (Cypher-lite, matched
+        server-side and fed to the sampler as a packed bitmap) or as the
+        one request array of explicit vertex ids.  Async like ``query``:
+        the future resolves when the scheduler's coalesced launch lands,
+        so pipelined sample requests across sessions share ONE kernel
+        launch per (graph, fanouts, bucket) group."""
+        tr = None
+        tid = header.get("trace")
+        if tid is not None and self.service.config.trace_buffer > 0:
+            tr = Trace("sample", trace_id=str(tid))
+        seeds = header.get("seed_pattern")
+        if seeds is None:
+            if not arrays:
+                raise ValueError("sample needs seed ids or a seed_pattern")
+            seeds = arrays[0]
+        fut = self.service.submit_sample(
+            header["graph"], seeds, tuple(header["fanouts"]),
+            pattern=header.get("pattern"), seed=int(header.get("seed", 0)),
+            deterministic=bool(header.get("deterministic", True)), trace=tr)
+        with sess.plock:
+            sess.pending[rid] = fut
+
+        def _respond(f) -> None:
+            with sess.plock:
+                sess.pending.pop(rid, None)
+            err = f.exception()
+            if err is not None:
+                hdr = {"id": rid, "ok": False, "error": wire.exc_to_wire(err)}
+                if tr is not None:
+                    hdr["trace"] = tr.finish().to_dict()
+                sess.send(hdr)
+                return
+            t0 = time.perf_counter()
+            meta, out = wire.blocks_to_wire(f.result())
+            t1 = time.perf_counter()
+            hdr = {"id": rid, "ok": True, "sample": meta}
+            if tr is not None:
+                tr.add_span("serialize", t0, t1)
+                tr.root.t1 = t1
                 hdr["trace"] = tr.to_dict()
             sess.send(hdr, out)
 

@@ -22,6 +22,7 @@ writer for the async path.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Union
@@ -50,6 +51,8 @@ class ServiceConfig:
     window_ms: float = 2.0  # batching window opened by the first request
     adaptive_window: bool = True  # skip the window when the queue is empty
     # (c=1 pays no batching latency); open it only under queue pressure
+    grace_ms: float = 0.25  # adaptive early close: end the window once the
+    # queue has stayed empty this long (nothing more is coming to coalesce)
     plan_cache_size: int = 256
     result_cache_size: int = 256
     coalesce: bool = True  # fuse compatible mask steps into batched launches
@@ -72,6 +75,30 @@ class _Request:
     future: Future
     trace: Optional[Trace] = None
     t_enqueue: float = 0.0  # perf_counter at submit → the batch.wait span
+
+
+@dataclasses.dataclass
+class _SampleRequest:
+    """One neighborhood-sampling request (docs/ARCHITECTURE.md §15).
+
+    ``seeds_or_pattern`` is either explicit original vertex ids or a
+    Cypher-lite seed pattern; ``filter_canonical``/``filter_ast`` carry the
+    optional khop-style edge filter; ``seed_val`` is the PRNG seed (layer
+    keys are folded from it — the request samples bitwise-identically solo
+    or coalesced).  ``cache_key`` is None for keyed-entropy
+    (``deterministic=False``) requests, which are NEVER cached."""
+
+    graph: str
+    seeds_or_pattern: object
+    fanouts: tuple
+    filter_canonical: str
+    filter_ast: Optional[Pattern]
+    seed_val: int
+    cache_key: Optional[tuple]
+    refs: tuple
+    future: Future
+    trace: Optional[Trace] = None
+    t_enqueue: float = 0.0
 
 
 class Service:
@@ -105,12 +132,14 @@ class Service:
             "requests fused per coalesced launch", buckets=SIZE_BUCKETS)
         self.traces = TraceBuffer(maxlen=self.config.trace_buffer,
                                   slow_ms=self.config.slow_query_ms)
+        self._sample_nonce = itertools.count()  # keyed-entropy requests
         self.registry.subscribe(self._on_mutation)
         self._batcher = MicroBatcher(
             self._execute_batch,
             max_batch=self.config.max_batch,
             window_ms=self.config.window_ms,
             adaptive=self.config.adaptive_window,
+            grace_ms=self.config.grace_ms,
             metrics=self.metrics,
         )
         self._compactor = None
@@ -279,6 +308,122 @@ class Service:
         self._bump("batched_requests", len(patterns))
         self._bump("completed", len(patterns))
         return out
+
+    # -------------------------------------------------------------- sampling
+    def submit_sample(self, graph: str, seeds_or_pattern, fanouts, *,
+                      pattern: Union[str, Pattern, None] = None,
+                      seed: int = 0, deterministic: bool = True,
+                      trace: Optional[Trace] = None) -> Future:
+        """Enqueue one ``PropGraph.sample`` request; Future → SampledBlock
+        list (innermost first, internal ids — the §15 contract).
+
+        The MicroBatcher coalesces sample requests across clients: same
+        (graph, fanouts, seed-count bucket) → ONE batched layer-0 launch,
+        results keyed back out per request.  Each request draws only from
+        its own ``fold_in``-derived keys, so the result is bitwise the solo
+        run — coalescing changes schedules, never samples.
+
+        ``deterministic=True`` (seeded) requests are cacheable — repeats
+        of the same (graph, seeds, fanouts, filter, seed) serve from the
+        result cache until a mutation invalidates them.
+        ``deterministic=False`` ignores ``seed``, draws a fresh nonce per
+        request, and is NEVER cached."""
+        if self._batcher.closed:
+            raise RuntimeError("scheduler is closed")
+        fanouts = tuple(int(f) for f in fanouts)
+        if not fanouts or min(fanouts) < 1:
+            raise ValueError(f"fanouts must be ≥1 per layer, got {fanouts}")
+        if pattern is not None:
+            fcanon, fast = self._canon(pattern)
+            refs = pattern_refs(fast)
+        else:
+            fcanon, fast = "", None
+            refs = (frozenset(), frozenset(), frozenset())
+        if isinstance(seeds_or_pattern, (str, Pattern)):
+            scanon, sast = self._canon(seeds_or_pattern)
+            seeds_or_pattern = sast
+            sref = pattern_refs(sast)
+            refs = tuple(a | b for a, b in zip(refs, sref))
+            spec = f"p:{scanon}"
+        else:
+            seeds_or_pattern = np.asarray(seeds_or_pattern).ravel()
+            spec = f"v:{','.join(str(int(s)) for s in seeds_or_pattern)}"
+        if deterministic:
+            seed_val = int(seed)
+            cache_key = (graph,
+                         f"sample:{spec}:f={fanouts}:q={fcanon}:s={seed_val}",
+                         None)
+        else:
+            seed_val = (time.time_ns() ^ (next(self._sample_nonce) << 17)
+                        ) & 0x7FFFFFFF
+            cache_key = None
+        tr = trace
+        if tr is None and self.config.trace_buffer > 0:
+            tr = Trace("sample")
+        if tr is not None:
+            tr.annotate(graph=graph, fanouts=str(fanouts), filter=fcanon)
+        fut: Future = Future()
+        self._bump("sample_requests")
+        if (cache_key is not None and self.config.submit_fastpath
+                and graph in self.registry):
+            hit = self.result_cache.get(cache_key)
+            if hit is not None:
+                self._bump("result_hits")
+                self._bump("fastpath_hits")
+                self._bump("completed")
+                fut.set_result(hit[2])
+                if tr is not None:
+                    self.traces.push(tr)
+                return fut
+        self._batcher.submit(_SampleRequest(
+            graph=graph, seeds_or_pattern=seeds_or_pattern, fanouts=fanouts,
+            filter_canonical=fcanon, filter_ast=fast, seed_val=seed_val,
+            cache_key=cache_key, refs=refs, future=fut, trace=tr,
+            t_enqueue=time.perf_counter()))
+        return fut
+
+    def sample(self, graph: str, seeds_or_pattern, fanouts, *,
+               pattern: Union[str, Pattern, None] = None, seed: int = 0,
+               deterministic: bool = True,
+               timeout: Optional[float] = 60.0):
+        """Blocking single sample → SampledBlock list."""
+        return self.submit_sample(
+            graph, seeds_or_pattern, fanouts, pattern=pattern, seed=seed,
+            deterministic=deterministic).result(timeout=timeout)
+
+    def sample_batch(self, graph: str, specs: Sequence, fanouts, *,
+                     pattern: Union[str, Pattern, None] = None,
+                     deterministic: bool = True) -> List:
+        """Synchronous coalesced sampling: ``specs`` is a sequence of
+        ``(seeds_or_pattern, prng_seed)`` pairs served as deterministic
+        groups in the caller's thread (the ``query_batch`` analogue the
+        parity tests and benchmarks drive).  Returns one block list per
+        spec; the first failure raises."""
+        futs = []
+        reqs = []
+        fanouts = tuple(int(f) for f in fanouts)
+        for seeds, sv in specs:
+            fut: Future = Future()
+            fut.set_running_or_notify_cancel()
+            if pattern is not None:
+                fcanon, fast = self._canon(pattern)
+            else:
+                fcanon, fast = "", None
+            if isinstance(seeds, (str, Pattern)):
+                _, seeds = self._canon(seeds)
+            else:
+                seeds = np.asarray(seeds).ravel()
+            # cache_key stays None: this entry exists for deterministic
+            # grouping (tests/benches), not caching
+            reqs.append(_SampleRequest(
+                graph=graph, seeds_or_pattern=seeds, fanouts=fanouts,
+                filter_canonical=fcanon, filter_ast=fast,
+                seed_val=int(sv), cache_key=None,
+                refs=(frozenset(), frozenset(), frozenset()),
+                future=fut))
+            futs.append(fut)
+        self._serve_samples(reqs, started=True)
+        return [f.result(timeout=0) for f in futs]
 
     # ------------------------------------------------------------- analytics
     def shortest_paths(self, graph: str, seeds, *,
@@ -555,6 +700,162 @@ class Service:
                 self.result_cache.purge(lambda kk, vv, _k=k: kk == _k)
         return outcomes
 
+    def _resolve_sample_seeds(self, pg, seeds_or_pattern) -> np.ndarray:
+        """Request seeds → internal ids, exactly ``PropGraph.sample``'s
+        rule: pattern seeds are the first node variable's matches in
+        ascending internal order (what the device ``nonzero`` extraction
+        yields); explicit ids keep caller order, unknown and tombstoned
+        ids drop out."""
+        if isinstance(seeds_or_pattern, (str, Pattern)):
+            res = pg.match(seeds_or_pattern)
+            mask = res.node_masks[0] if res.node_masks else res.vertex_mask
+            return np.flatnonzero(np.asarray(mask)).astype(np.int32)
+        ids = pg._vertex_internal(seeds_or_pattern)
+        ids = ids[ids >= 0]
+        if pg._dead_v is not None and ids.size:
+            ids = ids[~pg._dead_v[ids]]
+        return ids.astype(np.int32)
+
+    def _serve_samples(self, reqs: List[_SampleRequest],
+                       started: bool = False) -> None:
+        """Serve a window's sample requests: cache probe → seed resolution
+        → group by (graph, fanouts, seed-count bucket) → ONE batched
+        layer-0 launch per group + per-request deeper layers.  The group
+        key carries the CAPACITY BUCKET because the per-request uniform
+        draw is shaped (bucket, window): equal buckets are what make a
+        coalesced row bitwise its solo run.  Never raises — failures land
+        on the affected futures."""
+        from repro.kernels.neighbor_sample import bucketed_seeds
+
+        groups: Dict[tuple, List] = {}
+        for r in reqs:
+            if not started and not r.future.set_running_or_notify_cancel():
+                continue
+            try:
+                pg = self.registry.get(r.graph)
+            except KeyError as e:
+                r.future.set_exception(e)
+                self._bump("errors")
+                continue
+            if r.cache_key is not None:
+                hit = self.result_cache.get(r.cache_key)
+                if hit is not None:
+                    self._bump("result_hits")
+                    self._bump("completed")
+                    r.future.set_result(hit[2])
+                    if r.trace is not None:
+                        self.traces.push(r.trace)
+                    continue
+                self._bump("result_misses")
+            try:
+                ids = self._resolve_sample_seeds(pg, r.seeds_or_pattern)
+            except Exception as e:  # noqa: BLE001 — isolated to this request
+                r.future.set_exception(e)
+                self._bump("errors")
+                continue
+            key = (r.graph, r.fanouts, bucketed_seeds(max(ids.size, 1)))
+            groups.setdefault(key, []).append((r, pg, ids))
+        for (gname, fanouts, cap), entries in groups.items():
+            self._serve_sample_group(gname, fanouts, cap, entries)
+
+    def _serve_sample_group(self, gname: str, fanouts: tuple, cap: int,
+                            entries: List) -> None:
+        """One coalesced group: R request rows (padded to the request
+        bucket) through ``neighbor_sample_batched`` — layer 0 of every
+        request in ONE launch — then each request finishes its deeper
+        layers via ``PropGraph._sample_rest`` (identical keys to a solo
+        run).  Version consistency mirrors ``_serve_group``: read before,
+        re-check after, up to 3 attempts; torn views are returned
+        best-effort but never cached."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import bitplane
+        from repro.graph import sampler
+        from repro.kernels.neighbor_sample import (
+            bucketed_requests,
+            neighbor_sample_batched,
+        )
+
+        pg = entries[0][1]
+        R = len(entries)
+        results: List[object] = [None] * R
+        version = None
+        stable = False
+        for attempt in range(3):
+            version = pg.version
+            try:
+                seg, dstv, max_deg, perm = pg._sampling_view()
+                g = pg._require_graph()
+                ew_rows, any_words = [], False
+                for r, _pg, _ids in entries:
+                    ew = pg._sample_edge_words(
+                        r.filter_canonical if r.filter_canonical else None,
+                        perm)
+                    ew_rows.append(ew)
+                    any_words = any_words or ew is not None
+                nw = bitplane.n_words(max(g.m, 1))
+                rcap = bucketed_requests(R)
+                seeds_m = np.zeros((rcap, cap), np.int32)
+                valid_m = np.zeros((rcap, cap), bool)
+                seedvals = np.zeros((rcap,), np.int32)
+                for i, (r, _pg, ids) in enumerate(entries):
+                    s = min(ids.size, cap)
+                    seeds_m[i, :s] = ids[:s]
+                    valid_m[i, :s] = True
+                    seedvals[i] = r.seed_val
+                seedvals[R:] = seedvals[R - 1]  # pad rows: all-invalid
+                # all R layer-0 keys in ONE dispatch; row i is bitwise
+                # fold_in(PRNGKey(seed_i), 0), the solo-run key
+                keys = sampler.layer_keys_batch(jnp.asarray(seedvals), 0)
+                words_m = None
+                if any_words:
+                    ones = np.full((nw,), 0xFFFFFFFF, np.uint32)
+                    words_m = jnp.stack([
+                        (jnp.asarray(ones) if ew is None else ew)
+                        for ew in ew_rows
+                    ] + [jnp.asarray(ones)] * (rcap - R))
+                nb, _ei, mk = neighbor_sample_batched(
+                    seg, dstv, g.n, g.m, seeds_m, valid_m, keys,
+                    fanout=fanouts[0], edge_words=words_m, max_deg=max_deg)
+                nb_h, mk_h = np.asarray(nb), np.asarray(mk)
+                self._bump("sample_coalesced_launches")
+                for i, (r, _pg, ids) in enumerate(entries):
+                    s = min(ids.size, cap)
+                    try:
+                        results[i] = pg._sample_rest(
+                            ids[:s], nb_h[i, :s], mk_h[i, :s], list(fanouts),
+                            int(r.seed_val), seg, dstv, max_deg, ew_rows[i])
+                    except Exception as e:  # noqa: BLE001
+                        results[i] = e
+            except Exception as e:  # noqa: BLE001
+                if pg.version != version and attempt < 2:
+                    continue  # a concurrent mutation tore the view — retry
+                results = [e] * R
+                break
+            if pg.version == version:
+                stable = True
+                break
+        put_keys = []
+        for (r, _pg, _ids), res in zip(entries, results):
+            if isinstance(res, BaseException):
+                r.future.set_exception(res)
+                self._bump("errors")
+            else:
+                if stable and r.cache_key is not None:
+                    self.result_cache.put(r.cache_key,
+                                          (version, r.refs, res))
+                    put_keys.append(r.cache_key)
+                r.future.set_result(res)
+                self._bump("completed")
+            if r.trace is not None:
+                self.traces.push(r.trace)
+        if put_keys and pg.version != version:
+            # the _serve_group put-then-purge guard: a write racing the put
+            # may have purged before our entry became visible — drop ours
+            for k in put_keys:
+                self.result_cache.purge(lambda kk, vv, _k=k: kk == _k)
+
     def _on_mutation(self, name: str, pg) -> None:
         """Registry subscriber: drop result-cache entries the mutation can
         have changed.  Attribute-scoped events (``pg.last_mutation``) purge
@@ -579,8 +880,13 @@ class Service:
         affected futures."""
         self._bump("batches")
         self._bump("batched_requests", len(batch))
+        samples = [r for r in batch if isinstance(r, _SampleRequest)]
+        if samples:
+            self._serve_samples(samples)
         groups: Dict[tuple, List[_Request]] = {}
         for req in batch:
+            if isinstance(req, _SampleRequest):
+                continue
             groups.setdefault((req.graph, req.impl), []).append(req)
         for (gname, impl), reqs in groups.items():
             try:

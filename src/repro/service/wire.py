@@ -52,6 +52,9 @@ __all__ = [
     "result_to_wire",
     "wire_to_result",
     "WireMatchResult",
+    "WireSampledBlock",
+    "blocks_to_wire",
+    "wire_to_blocks",
     "exc_to_wire",
     "wire_to_exc",
 ]
@@ -311,6 +314,72 @@ def wire_to_result(meta: Dict, arrays: Sequence[np.ndarray]) -> WireMatchResult:
         vertex_mask=arrays[0], edge_mask=arrays[1],
         _bindings=dict(zip(names, arrays[2:])),
     )
+
+
+# ------------------------------------------------------------ SampledBlock
+@dataclasses.dataclass(frozen=True)
+class WireSampledBlock:
+    """Client-side view of one ``graph.sampler.SampledBlock`` layer.
+
+    Same field contract (ids are the server graph's INTERNAL ids, edge_*
+    are local indices into src_nodes/dst_nodes, edge_mask False = padded
+    slot) but plain numpy — the client stays jax-free.  Payloads are
+    bitwise the in-process blocks': the deterministic-mode wire-parity
+    gate in ``pgserve --net --smoke`` depends on that.
+    """
+
+    src_nodes: np.ndarray  # (n_src,) int32
+    dst_nodes: np.ndarray  # (n_dst,) int32
+    edge_src: np.ndarray  # (n_edges,) int32 local
+    edge_dst: np.ndarray  # (n_edges,) int32 local
+    edge_mask: np.ndarray  # (n_edges,) bool
+
+    @property
+    def n_src(self) -> int:
+        return int(self.src_nodes.shape[0])
+
+    @property
+    def n_dst(self) -> int:
+        return int(self.dst_nodes.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_src.shape[0])
+
+
+def blocks_to_wire(blocks) -> Tuple[Dict, List[np.ndarray]]:
+    """SampledBlock list → (meta, arrays): five arrays per layer in block
+    order (src_nodes, dst_nodes, edge_src, edge_dst, edge_mask) — the id/
+    index arrays as int32 blobs, the mask bit-packed by the codec (device
+    masks pack on device, §15's "blocks ship as packed masks + index
+    arrays")."""
+    arrays: List[np.ndarray] = []
+    for b in blocks:
+        arrays.append(np.asarray(b.src_nodes, np.int32))
+        arrays.append(np.asarray(b.dst_nodes, np.int32))
+        arrays.append(np.asarray(b.edge_src, np.int32))
+        arrays.append(np.asarray(b.edge_dst, np.int32))
+        arrays.append(_mask_payload(b.edge_mask))
+    return {"layers": len(blocks)}, arrays
+
+
+def wire_to_blocks(meta: Dict, arrays: Sequence[np.ndarray]
+                   ) -> List[WireSampledBlock]:
+    layers = int(meta["layers"])
+    if len(arrays) != 5 * layers:
+        raise ProtocolError(
+            f"sample result carries {len(arrays)} arrays for {layers} layers")
+    blocks = []
+    for li in range(layers):
+        s, d, es, ed, em = arrays[5 * li:5 * li + 5]
+        blocks.append(WireSampledBlock(
+            src_nodes=np.asarray(s, np.int32),
+            dst_nodes=np.asarray(d, np.int32),
+            edge_src=np.asarray(es, np.int32),
+            edge_dst=np.asarray(ed, np.int32),
+            edge_mask=_as_bool_mask(em),
+        ))
+    return blocks
 
 
 # -------------------------------------------------------------- exceptions

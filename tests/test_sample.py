@@ -1,0 +1,443 @@
+"""Fused property-filtered neighborhood sampling (docs/ARCHITECTURE.md §15).
+
+What must hold, layer by layer:
+
+* kernel vs numpy oracle — every output of ``neighbor_sample`` is a valid
+  without-replacement sample of the FILTERED adjacency (membership, no
+  duplicates, exact ``min(fanout, filtered degree)`` counts, -1 sentinels),
+  including the edge cases the padding machinery can silently break:
+  degree-0 seeds and degree ≤ fanout.
+* statistics — selection is uniform over the allowed window lanes
+  (chi-square on a hub vertex, one batched launch = thousands of
+  independent draws) and NEVER emits a filtered-out edge.
+* determinism — bitwise reproducible given (key, layer): repeated calls,
+  jitted vs eager key derivation, layer independence under fold_in (the
+  ``sampler.py`` re-keying fix: adding layers must not shift layer 0).
+* serving — a coalesced batch is bitwise its sequential runs on every
+  backend; deterministic results cache, keyed entropy never does; a
+  64-request mixed-size burst stays within the bucketed compile budget
+  (asserted via the PR 8 metrics registry).
+* overlay — snapshots sample stably while a writer mutates the parent;
+  delta edges are sampleable; tombstoned edges never appear.
+* mesh — P=8 sharded sampling ≡ single-device, bitwise, in a subprocess
+  with 8 guaranteed virtual devices.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import PropGraph, bitplane  # noqa: E402
+from repro.graph.sampler import layer_key, layer_keys_batch  # noqa: E402
+from repro.kernels.neighbor_sample import (  # noqa: E402
+    bucketed_requests,
+    bucketed_seeds,
+    neighbor_sample,
+    neighbor_sample_batched,
+    neighbor_sample_from_words,
+    sample_compile_count,
+    sample_embed,
+)
+from repro.kernels.neighbor_sample.ref import (  # noqa: E402
+    check_sample,
+    filtered_degrees,
+)
+from repro.launch.pgserve import build_tenant_graph  # noqa: E402
+from repro.service import Service  # noqa: E402
+
+BACKENDS = ("arr", "list", "listd")
+
+
+def _graph(m=3_000, backend="arr", seed=0):
+    return build_tenant_graph(backend, m, seed=seed)
+
+
+def _blocks_equal(got, ref):
+    assert len(got) == len(ref)
+    for li, (bg, br) in enumerate(zip(got, ref)):
+        for f in ("src_nodes", "dst_nodes", "edge_src", "edge_dst",
+                  "edge_mask"):
+            a, b = np.asarray(getattr(bg, f)), np.asarray(getattr(br, f))
+            assert a.shape == b.shape and (a == b).all(), (li, f)
+
+
+# ----------------------------------------------------- kernel vs numpy oracle
+def test_kernel_outputs_valid_vs_oracle_with_filter():
+    pg = _graph()
+    seg, dstv = np.asarray(pg.graph.seg), np.asarray(pg.graph.dst)
+    eok = np.asarray(pg.match("(a)-[:follows]->(b)").edge_mask)
+    ew = bitplane.pack_mask(jnp.asarray(eok))
+    rng = np.random.default_rng(1)
+    for fanout in (1, 3, 8):
+        seeds = rng.choice(pg.n_vertices, 100, replace=False).astype(np.int32)
+        nb, ei, mk = neighbor_sample(
+            pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges, seeds,
+            jax.random.PRNGKey(fanout), fanout=fanout, edge_words=ew,
+            max_deg=int(pg.graph.max_deg))
+        check_sample(seg, dstv, seeds, eok, fanout, np.asarray(nb)[:100],
+                     np.asarray(ei)[:100], np.asarray(mk)[:100])
+
+
+def test_degree_zero_seeds_fully_masked():
+    # 0 → {1, 2}, 3 → 4; vertices 1, 2, 4 have NO out-edges
+    pg = PropGraph().add_edges_from(np.array([0, 0, 3]),
+                                    np.array([1, 2, 4]))
+    iso = pg._vertex_internal(np.array([1, 2, 4])).astype(np.int32)
+    nb, _ei, mk = neighbor_sample(
+        pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges, iso,
+        jax.random.PRNGKey(0), fanout=4, max_deg=int(pg.graph.max_deg))
+    assert not np.asarray(mk)[:3].any()
+    assert (np.asarray(nb)[:3] == -1).all()
+
+
+def test_degree_leq_fanout_keeps_every_edge_exactly_once():
+    # hub with degree 5 < fanout 8: all 5 neighbors, no duplicates
+    src = np.zeros(5, np.int64)
+    dst = np.arange(1, 6)
+    pg = PropGraph().add_edges_from(src, dst)
+    hub = pg._vertex_internal(np.array([0])).astype(np.int32)
+    for s in range(4):
+        nb, _ei, mk = neighbor_sample(
+            pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges, hub,
+            jax.random.PRNGKey(s), fanout=8, max_deg=int(pg.graph.max_deg))
+        row, ok = np.asarray(nb)[0], np.asarray(mk)[0]
+        assert ok.sum() == 5
+        assert len(set(row[ok].tolist())) == 5  # without replacement
+
+
+def test_pattern_seed_path_equals_explicit_ascending_ids():
+    """Device nonzero extraction ≡ host flatnonzero: the packed-bitmap seed
+    path must sample exactly what explicit ascending ids would."""
+    pg = _graph()
+    mask = np.asarray(pg.match("(a:l0)").vertex_mask)
+    ids = np.flatnonzero(mask).astype(np.int32)
+    nodes = np.asarray(pg.graph.node_map)
+    got = pg.sample("(a:l0)", [4, 3], seed=11)
+    ref = pg.sample(nodes[ids], [4, 3], seed=11)
+    _blocks_equal(got, ref)
+
+
+def test_from_words_matches_pattern_mask():
+    pg = _graph()
+    mask = pg.match("(a:l1|l2)").vertex_mask
+    words = bitplane.pack_mask(jnp.asarray(mask))
+    count = int(np.asarray(mask).sum())
+    idx, valid, nb, _ei, mk = neighbor_sample_from_words(
+        pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges, words, count,
+        jax.random.PRNGKey(2), fanout=4, max_deg=int(pg.graph.max_deg))
+    keep = np.asarray(valid)
+    assert keep.sum() == count
+    assert np.array_equal(np.sort(np.asarray(idx)[keep]),
+                          np.flatnonzero(np.asarray(mask)))
+    check_sample(np.asarray(pg.graph.seg), np.asarray(pg.graph.dst),
+                 np.asarray(idx)[keep], None, 4, np.asarray(nb)[keep],
+                 np.asarray(_ei)[keep], np.asarray(mk)[keep])
+
+
+# ------------------------------------------------------------------ statistics
+def test_uniformity_chi_square_and_filtered_exclusion():
+    """One hub, 64 out-edges, half filtered out.  2048 independent draws of
+    fanout=1 in ONE batched launch: the 32 allowed lanes must be uniform
+    (chi-square, 31 dof: 99.9th percentile ≈ 61.1) and the 32 forbidden
+    lanes must never appear."""
+    deg = 64
+    src = np.zeros(deg, np.int64)
+    dst = np.arange(1, deg + 1)
+    pg = PropGraph().add_edges_from(src, dst)
+    nodes = np.asarray(pg.graph.node_map)
+    es, ed = np.asarray(pg.graph.src), np.asarray(pg.graph.dst)
+    rels = np.where(np.asarray(pg.graph.dst) % 2 == 0, "ok", "no")
+    pg.add_edge_relationships(nodes[es], nodes[ed], rels)
+    eok = np.asarray(pg.match("(x)-[:ok]->(y)").edge_mask)
+    ew = bitplane.pack_mask(jnp.asarray(eok))
+    hub = int(pg._vertex_internal(np.array([0]))[0])
+
+    R = 2048
+    cap = bucketed_seeds(1)
+    seeds_m = np.zeros((bucketed_requests(R), cap), np.int32)
+    seeds_m[:, 0] = hub
+    valid_m = np.zeros_like(seeds_m, bool)
+    valid_m[:R, 0] = True
+    keys = layer_keys_batch(jnp.arange(bucketed_requests(R)), 0)
+    words_m = jnp.stack([ew] * bucketed_requests(R))
+    nb, _ei, mk = neighbor_sample_batched(
+        pg.graph.seg, pg.graph.dst, pg.n_vertices, pg.n_edges, seeds_m,
+        valid_m, keys, fanout=1, edge_words=words_m,
+        max_deg=int(pg.graph.max_deg))
+    picks = np.asarray(nb)[:R, 0, 0]
+    okrow = np.asarray(mk)[:R, 0, 0]
+    assert okrow.all()  # hub has 32 allowed edges ≥ fanout 1
+    allowed = set(np.asarray(pg.graph.dst)[eok].tolist())
+    assert set(picks.tolist()) <= allowed  # filtered edges NEVER appear
+    counts = np.bincount(picks, minlength=pg.n_vertices)[sorted(allowed)]
+    expected = R / len(allowed)
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 61.1, chi2
+
+
+# ---------------------------------------------------------------- determinism
+def test_bitwise_reproducible_and_jitted_key_parity():
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    seeds = nodes[:64]
+    a = pg.sample(seeds, [5, 3], pattern="(a)-[:likes]->(b)", seed=9)
+    b = pg.sample(seeds, [5, 3], pattern="(a)-[:likes]->(b)", seed=9)
+    _blocks_equal(a, b)
+    # explicit key ≡ int seed (the jitted layer_key derivation is bitwise
+    # the eager fold_in(PRNGKey(seed), layer) chain)
+    c = pg.sample(seeds, [5, 3], pattern="(a)-[:likes]->(b)",
+                  key=jax.random.PRNGKey(9))
+    _blocks_equal(a, c)
+    for s in (0, 7, 2**31 - 1):
+        for layer in (0, 1, 5):
+            assert np.array_equal(
+                np.asarray(layer_key(s, layer)),
+                np.asarray(jax.random.fold_in(jax.random.PRNGKey(s), layer)))
+    kb = np.asarray(layer_keys_batch(jnp.arange(9), 1))
+    for i in range(9):
+        assert np.array_equal(kb[i], np.asarray(layer_key(i, 1)))
+
+
+def test_layer_independence_under_fold_in():
+    """The sampler re-keys per layer with fold_in(base, l): layer 0's draw
+    must be IDENTICAL whether or not deeper layers exist (regression for
+    the split-and-reuse bug), and two layers with the same fanout must not
+    reuse each other's randomness."""
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    seeds = nodes[:48]
+    one = pg.sample(seeds, [4], seed=3)
+    two = pg.sample(seeds, [4, 4], seed=3)
+    _blocks_equal([one[-1]], [two[-1]])  # layer 0 unshifted by extra layer
+    # same fanout, same frontier size ⇒ equal draws would mean key reuse
+    l0, l1 = two[-1], two[-2]
+    assert not (len(l0.edge_mask) == len(l1.edge_mask)
+                and np.array_equal(np.asarray(l0.edge_src),
+                                   np.asarray(l1.edge_src))
+                and np.array_equal(np.asarray(l0.edge_mask),
+                                   np.asarray(l1.edge_mask)))
+
+
+def test_block_renumbering_is_stable_and_local():
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    blocks = pg.sample(nodes[:32], [6, 4], seed=1)
+    for b in blocks:
+        sn = np.asarray(b.src_nodes)
+        assert (np.diff(sn) > 0).all()  # sorted unique global ids
+        es, ed = np.asarray(b.edge_src), np.asarray(b.edge_dst)
+        ok = np.asarray(b.edge_mask)
+        assert es[ok].max(initial=0) < b.n_src
+        assert ed[ok].max(initial=0) < b.n_dst
+        # every unmasked edge's endpoint resolves through the local ids
+        dn = np.asarray(b.dst_nodes)
+        assert set(dn.tolist()) <= set(sn.tolist())  # dst ⊆ src frontier
+    # the widest frontier (blocks[0]) contains every id in the chain
+    sub = set(np.asarray(blocks[0].src_nodes).tolist())
+    for b in blocks:
+        assert set(np.asarray(b.src_nodes).tolist()) <= sub
+
+
+# -------------------------------------------------------------------- serving
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_coalesced_batch_equals_sequential_sample(backend):
+    pg = _graph(backend=backend)
+    nodes = np.asarray(pg.graph.node_map)
+    specs = [(nodes[13 * i:13 * i + 40], i) for i in range(6)]
+    specs.append(("(a:l0)", 77))
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        got = svc.sample_batch("g", specs, [4, 2])
+    for (seeds, sv), blocks in zip(specs, got):
+        _blocks_equal(blocks, pg.sample(seeds, [4, 2], seed=sv))
+
+
+def test_service_filtered_sample_parity_and_stats():
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        before = svc.stats().get("sample_requests", 0)
+        got = svc.sample("g", nodes[:50], [5],
+                         pattern="(a)-[:follows]->(b)", seed=4)
+        _blocks_equal(got, pg.sample(nodes[:50], [5],
+                                     pattern="(a)-[:follows]->(b)", seed=4))
+        assert svc.stats()["sample_requests"] == before + 1
+
+
+def test_result_cache_deterministic_hits_keyed_never_cached():
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        a = svc.sample("g", nodes[:40], [4], seed=5)
+        h0 = svc.stats().get("result_hits", 0)
+        b = svc.sample("g", nodes[:40], [4], seed=5)  # deterministic: hits
+        assert svc.stats()["result_hits"] == h0 + 1
+        _blocks_equal(a, b)
+        h1 = svc.stats()["result_hits"]
+        c = svc.sample("g", nodes[:40], [4], deterministic=False)
+        d = svc.sample("g", nodes[:40], [4], deterministic=False)
+        assert svc.stats()["result_hits"] == h1  # keyed entropy: no cache
+        # fresh entropy per request: the picks differ (not just the unions)
+        same = all(
+            np.array_equal(np.asarray(x.edge_src), np.asarray(y.edge_src))
+            and np.array_equal(np.asarray(x.edge_mask),
+                               np.asarray(y.edge_mask))
+            for x, y in zip(c, d))
+        assert not same
+
+
+def test_compile_count_bounded_across_mixed_size_burst():
+    """64 requests with 64 different seed-set sizes must stay inside the
+    bucketed specialization budget — the pg_sample_compiles counter (PR 8
+    metrics registry) and sample_compile_count() agree."""
+    from repro.obs.metrics import GLOBAL
+
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 500, 64)
+    with Service() as svc:
+        svc.add_graph("g", pg)
+        svc.sample("g", nodes[:16], [3], seed=0)  # settle shared shapes
+        c0 = sample_compile_count()
+        m0 = GLOBAL.counter("pg_sample_compiles").value()
+        assert c0 == m0  # the counter IS the seen-key set size
+        futs = [svc.submit_sample("g", nodes[:int(s)], (3,), seed=i,
+                                  deterministic=False)
+                for i, s in enumerate(sizes)]
+        for f in futs:
+            f.result(timeout=120)
+        grown = sample_compile_count() - c0
+        # seed buckets for sizes < 512: {16,32,64,128,256,512} = 6, times
+        # a handful of request buckets — far below one-per-request
+        assert grown <= 16, grown
+        assert GLOBAL.counter("pg_sample_compiles").value() == c0 + grown
+
+
+# ------------------------------------------------------------------- overlays
+def test_snapshot_sample_stable_under_concurrent_writer():
+    pg = _graph(m=1_500)
+    nodes = np.asarray(pg.graph.node_map)
+    snap = pg.snapshot()
+    ref = snap.sample(nodes[:40], [4, 3], seed=2)
+    stop = threading.Event()
+
+    def writer():
+        r = np.random.default_rng(3)
+        while not stop.is_set():
+            u, v = nodes[r.integers(0, len(nodes), 2)]
+            pg.insert_edges(np.array([u]), np.array([v]))
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        for _ in range(10):
+            _blocks_equal(snap.sample(nodes[:40], [4, 3], seed=2), ref)
+    finally:
+        stop.set()
+        t.join()
+
+
+def test_delta_edges_sampleable_tombstones_never_appear():
+    src = np.array([0, 0, 0, 1])
+    dst = np.array([1, 2, 3, 2])
+    pg = PropGraph().add_edges_from(src, dst)
+    pg.delete_edges(np.array([0]), np.array([2]))
+    pg.insert_edges(np.array([1]), np.array([3]))
+    node_of = np.asarray(pg.graph.node_map)
+    for s in range(6):  # fanout ≥ degree ⇒ EVERY live edge must appear
+        blocks = pg.sample(np.array([0, 1]), [8], seed=s)
+        b = blocks[0]
+        sn, dn = np.asarray(b.src_nodes), np.asarray(b.dst_nodes)
+        es, ed = np.asarray(b.edge_src), np.asarray(b.edge_dst)
+        ok = np.asarray(b.edge_mask)
+        pairs = {(int(node_of[dn[d]]), int(node_of[sn[s_]]))
+                 for s_, d in zip(es[ok], ed[ok])}
+        assert (0, 2) not in pairs  # tombstoned
+        assert (1, 3) in pairs  # delta edge is live and must be drawn
+        assert pairs == {(0, 1), (0, 3), (1, 2), (1, 3)}
+
+
+def test_sample_embed_fused_equals_composition():
+    pg = _graph()
+    n = pg.n_vertices
+    table = jax.random.normal(jax.random.PRNGKey(4), (n, 16), jnp.float32)
+    seeds = np.arange(0, 96, dtype=np.int32)
+    key = jax.random.PRNGKey(6)
+    bags, nb, _ei, mk = sample_embed(
+        pg.graph.seg, pg.graph.dst, n, pg.n_edges, seeds, key, table,
+        fanout=5, max_deg=int(pg.graph.max_deg))
+    nb2, _e2, mk2 = neighbor_sample(
+        pg.graph.seg, pg.graph.dst, n, pg.n_edges, seeds, key, fanout=5,
+        max_deg=int(pg.graph.max_deg))
+    assert np.array_equal(np.asarray(nb), np.asarray(nb2))
+    rows = np.asarray(table)[np.clip(np.asarray(nb2), 0, n - 1)]
+    w = np.asarray(mk2)[..., None].astype(np.float32)
+    cnt = np.maximum(np.asarray(mk2).sum(-1, keepdims=True), 1)
+    ref = (rows * w).sum(1) / cnt.astype(np.float32)
+    np.testing.assert_allclose(np.asarray(bags), ref, rtol=1e-5, atol=1e-5)
+    dead = ~np.asarray(mk2).any(1)  # all-masked seeds → exactly zero bags
+    assert (np.asarray(bags)[dead] == 0).all()
+
+
+# ----------------------------------------------------------------------- wire
+def test_wire_block_codec_roundtrip():
+    from repro.service import wire
+
+    pg = _graph()
+    nodes = np.asarray(pg.graph.node_map)
+    blocks = pg.sample(nodes[:32], [4, 2], seed=8)
+    meta, arrays = wire.blocks_to_wire(blocks)
+    back = wire.wire_to_blocks(meta, [np.asarray(a) for a in arrays])
+    _blocks_equal(back, blocks)
+
+
+# ------------------------------------------------------------------------ mesh
+_SHARD_SCRIPT = """
+import sys
+sys.path.insert(0, {src!r})
+import numpy as np
+from repro.launch.mesh import make_entity_mesh
+from repro.launch.pgserve import build_tenant_graph
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+pg1 = build_tenant_graph("arr", 2_000, seed=0)
+pg2 = build_tenant_graph("arr", 2_000, mesh=make_entity_mesh(), seed=0)
+nodes = np.asarray(pg1.graph.node_map)
+for seeds, pat in ((nodes[:48], None), ("(a:l0)", "(a)-[:follows]->(b)")):
+    a = pg1.sample(seeds, [4, 3], pattern=pat, seed=5)
+    b = pg2.sample(seeds, [4, 3], pattern=pat, seed=5)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        for f in ("src_nodes", "dst_nodes", "edge_src", "edge_dst",
+                  "edge_mask"):
+            assert np.array_equal(np.asarray(getattr(x, f)),
+                                  np.asarray(getattr(y, f))), f
+print("SAMPLE8 OK")
+"""
+
+
+def test_sharded_sample_p8_subprocess():
+    """P=8 sharded sampling ≡ single-device, bitwise, with 8 guaranteed
+    virtual devices in a fresh interpreter (the mesh-locality rule: the
+    seed bitmap rides the allreduce, sampling stays owner-local)."""
+    src_dir = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT.format(src=src_dir)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SAMPLE8 OK" in proc.stdout
